@@ -1,0 +1,37 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    python -m benchmarks.run              # all
+    python -m benchmarks.run speedup      # one
+
+Output is CSV-ish lines (comment rows start with '#') so downstream
+tooling can parse it; see EXPERIMENTS.md for the interpreted tables.
+"""
+
+import argparse
+import time
+
+from benchmarks import (bench_energy, bench_ffn_fusion, bench_speedup,
+                        bench_traffic)
+
+BENCHES = {
+    "speedup": bench_speedup,        # Fig. 14 / Table III(A)
+    "traffic": bench_traffic,        # Table VI + 87% claim
+    "energy": bench_energy,          # Table V analogue
+    "ffn_fusion": bench_ffn_fusion,  # Table VII / LM generalization
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("only", nargs="?", choices=list(BENCHES))
+    args = ap.parse_args()
+    todo = [args.only] if args.only else list(BENCHES)
+    for name in todo:
+        print(f"\n===== bench: {name} =====")
+        t0 = time.time()
+        BENCHES[name].run(print)
+        print(f"===== {name} done in {time.time() - t0:.1f}s =====")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Fault-tolerance demo: a training job that gets preempted twice and
+finishes anyway — bit-identically to an uninterrupted run.
+
+Run:  PYTHONPATH=src python examples/fault_tolerant_train.py
+"""
+
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import registry
+from repro.configs.base import InputShape
+from repro.data import SyntheticLMData
+from repro.launch.mesh import make_host_mesh
+from repro.runtime import steps as steps_mod
+from repro.runtime.fault import FailureInjector, TrainDriver, Watchdog
+
+
+def main():
+    cfg = registry.get_smoke("gemma2-9b")
+    shape = InputShape("train_ft", 64, 8, "train")
+    mesh = make_host_mesh()
+    train = steps_mod.TrainSpec(peak_lr=1e-3, warmup_steps=5,
+                                total_steps=100)
+    step = steps_mod.build_train_step(cfg, mesh, train, shape, donate=False)
+    data = SyntheticLMData(cfg, shape, seed=7)
+    init = lambda: steps_mod.init_train_state(cfg, jax.random.PRNGKey(7),
+                                              train)
+
+    n_steps = 24
+    with tempfile.TemporaryDirectory() as ckdir:
+        driver = TrainDriver(
+            step_fn=step, init_state_fn=init, batch_at=data.batch_at,
+            ckpt=CheckpointManager(ckdir, period=5, keep=3),
+            watchdog=Watchdog(),
+            failure_injector=FailureInjector([8, 17]))   # two preemptions
+        rep = driver.run(n_steps, log_every=5)
+
+    print(f"\n[ft] restarts: {rep.restarts} (expected 2), "
+          f"completed step {rep.final_step}")
+
+    # uninterrupted reference
+    state = init()
+    for i in range(n_steps):
+        state, m = step(state, data.batch_at(i))
+    ref_loss = float(np.asarray(m["loss"]))
+    got_loss = rep.metrics_history[-1]["loss"]
+    print(f"[ft] final loss with failures: {got_loss:.6f}; "
+          f"uninterrupted: {ref_loss:.6f}; "
+          f"identical: {abs(got_loss - ref_loss) < 1e-6}")
+    assert abs(got_loss - ref_loss) < 1e-6
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""End-to-end driver: train a ~100M-param qwen3-family model for a few
+hundred steps on synthetic data, with checkpoints and the fault-tolerant
+driver. (Deliverable (b): the end-to-end training example.)
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+
+import argparse
+import dataclasses
+import tempfile
+
+import jax
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import registry
+from repro.configs.base import InputShape
+from repro.data import SyntheticLMData, make_prefetcher
+from repro.launch.mesh import make_host_mesh
+from repro.runtime import steps as steps_mod
+from repro.runtime.fault import TrainDriver, Watchdog
+
+
+def build_100m_config():
+    """~100M params: qwen3 family, 12 layers, d=512."""
+    base = registry.get("qwen3-14b")
+    return dataclasses.replace(
+        base, name="qwen3-100m", n_layers=12, d_model=512, n_heads=8,
+        n_kv_heads=4, head_dim=64, d_ff=1536, vocab=32768,
+        microbatches=(), remat="full", dtype="float32")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    args = ap.parse_args()
+
+    cfg = build_100m_config()
+    print(f"[train_lm] {cfg.name}: {cfg.param_count() / 1e6:.1f}M params")
+    shape = InputShape("train_demo", args.seq, args.batch, "train")
+    mesh = make_host_mesh()
+    train = steps_mod.TrainSpec(peak_lr=3e-4, warmup_steps=30,
+                                total_steps=args.steps)
+    step = steps_mod.build_train_step(cfg, mesh, train, shape, donate=False)
+    data = SyntheticLMData(cfg, shape, seed=0)
+
+    with tempfile.TemporaryDirectory() as ckdir:
+        driver = TrainDriver(
+            step_fn=step,
+            init_state_fn=lambda: steps_mod.init_train_state(
+                cfg, jax.random.PRNGKey(0), train),
+            batch_at=data.batch_at,
+            ckpt=CheckpointManager(ckdir, period=100, keep=2),
+            watchdog=Watchdog())
+        rep = driver.run(args.steps, log_every=20)
+    losses = [m["loss"] for m in rep.metrics_history]
+    print(f"[train_lm] loss: {losses[0]:.3f} -> {losses[-1]:.3f} over "
+          f"{len(losses)} steps (expect a clear decrease: the synthetic "
+          f"stream has learnable bigram structure)")
+    assert losses[-1] < losses[0]
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.checkpoint.manager import (  # noqa: F401
+    CheckpointManager, save_checkpoint, restore_checkpoint, latest_step)

@@ -1,0 +1,160 @@
+"""Atomic, async, *elastic* checkpointing.
+
+Guarantees:
+
+* **Atomic** — a checkpoint directory becomes visible only via os.rename of
+  a fully-written temp dir; a crash mid-save never corrupts the latest
+  restorable state.
+* **Async** — the save gathers device arrays to host then hands the write
+  to a background thread; the train loop continues (the classic
+  compute/IO overlap). ``wait()`` drains pending writes.
+* **Elastic** — restore takes *target* shardings: the saved state can be
+  restored onto a different mesh shape than it was saved from (lose a pod
+  -> continue on one pod). Arrays are saved unsharded (gathered), so any
+  resharding is a plain device_put on load. On a real multi-host fleet the
+  gather would be a distributed ocdbt write instead; the save/restore
+  contract (step-indexed, atomic, mesh-agnostic) is the same.
+
+Layout:  <dir>/step_<n>/arrays.npz + tree.json ; <dir>/LATEST (text file).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+Pytree = Any
+
+_SEP = "/"
+
+
+def _flatten(tree: Pytree) -> Dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save_checkpoint(directory: str, step: int, tree: Pytree) -> str:
+    """Synchronous atomic save. Returns the checkpoint path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    arrays = _flatten(tree)
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump({"step": step, "n_arrays": len(arrays)}, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    # LATEST is advisory; restore scans directories as the source of truth.
+    with open(os.path.join(directory, "LATEST"), "w") as f:
+        f.write(str(step))
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for d in os.listdir(directory):
+        if d.startswith("step_") and not d.endswith(".tmp"):
+            if os.path.exists(os.path.join(directory, d, "meta.json")):
+                steps.append(int(d[5:]))
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, abstract_tree: Pytree,
+                       step: Optional[int] = None,
+                       shardings: Optional[Pytree] = None) -> Pytree:
+    """Restore into the structure of ``abstract_tree``.
+
+    ``shardings``: optional same-structure tree of jax.sharding.Sharding —
+    the *target* layout (may differ from the layout at save time: this is
+    the elastic-rescale path).
+    """
+    step = latest_step(directory) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint in {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    data = np.load(os.path.join(path, "arrays.npz"))
+    flat, treedef = jax.tree_util.tree_flatten_with_path(abstract_tree)
+    shard_flat: List[Any]
+    if shardings is not None:
+        shard_flat = jax.tree.leaves(shardings)
+    else:
+        shard_flat = [None] * len(flat)
+    leaves = []
+    for (pth, leaf), shd in zip(flat, shard_flat):
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in pth)
+        arr = data[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        arr = arr.astype(leaf.dtype)
+        leaves.append(jax.device_put(arr, shd) if shd is not None
+                      else jax.device_put(arr))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    """Periodic async checkpoints with retention."""
+
+    def __init__(self, directory: str, *, period: int = 100, keep: int = 3):
+        self.directory = directory
+        self.period = period
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def maybe_save(self, step: int, tree: Pytree, *, force: bool = False):
+        if not force and (step == 0 or step % self.period):
+            return False
+        self.wait()
+        # Gather to host on the caller thread (device -> host is the sync
+        # part); the file write happens in the background.
+        host_tree = jax.tree.map(np.asarray, tree)
+
+        def _write():
+            try:
+                save_checkpoint(self.directory, step, host_tree)
+                self._prune()
+            except BaseException as e:   # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+        return True
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _prune(self):
+        steps = sorted(
+            int(d[5:]) for d in os.listdir(self.directory)
+            if d.startswith("step_") and not d.endswith(".tmp"))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    def restore_latest(self, abstract_tree: Pytree, shardings=None):
+        return restore_checkpoint(self.directory, abstract_tree,
+                                  shardings=shardings)

@@ -1,0 +1,2 @@
+"""Per-architecture configs. ``registry.get(name)`` returns the full
+ArchConfig; ``registry.get_smoke(name)`` the reduced CPU-testable one."""

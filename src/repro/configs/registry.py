@@ -1,0 +1,80 @@
+"""Registry of the ten assigned architectures (+ the paper's MobileNetV2).
+
+``cells()`` enumerates the (arch x input-shape) grid with per-cell
+applicability per the brief:
+
+* encoder-only archs (hubert) have no decode step -> decode shapes N/A;
+* long_500k needs sub-quadratic attention -> runs only for the SSM/hybrid
+  archs (rwkv6, recurrentgemma); N/A for full-attention archs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, List, Optional, Tuple
+
+from repro.configs.base import ArchConfig, InputShape, LM_SHAPES
+
+_MODULES = {
+    "recurrentgemma-9b": "repro.configs.recurrentgemma_9b",
+    "internvl2-1b": "repro.configs.internvl2_1b",
+    "qwen2-72b": "repro.configs.qwen2_72b",
+    "qwen3-14b": "repro.configs.qwen3_14b",
+    "gemma2-9b": "repro.configs.gemma2_9b",
+    "glm4-9b": "repro.configs.glm4_9b",
+    "llama4-scout-17b-a16e": "repro.configs.llama4_scout_17b_a16e",
+    "qwen2-moe-a2.7b": "repro.configs.qwen2_moe_a27b",
+    "hubert-xlarge": "repro.configs.hubert_xlarge",
+    "rwkv6-3b": "repro.configs.rwkv6_3b",
+}
+
+ARCH_NAMES: Tuple[str, ...] = tuple(_MODULES)
+
+# archs whose every layer is O(T) or windowed => long_500k runnable
+SUBQUADRATIC = ("recurrentgemma-9b", "rwkv6-3b")
+# encoder-only => no decode step
+ENCODER_ONLY = ("hubert-xlarge",)
+
+
+def get(name: str) -> ArchConfig:
+    return importlib.import_module(_MODULES[name]).CONFIG
+
+
+def get_smoke(name: str) -> ArchConfig:
+    return importlib.import_module(_MODULES[name]).SMOKE
+
+
+def all_configs() -> Dict[str, ArchConfig]:
+    return {n: get(n) for n in ARCH_NAMES}
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    arch: str
+    shape: InputShape
+    runnable: bool
+    skip_reason: Optional[str] = None
+
+    @property
+    def key(self) -> str:
+        return f"{self.arch}/{self.shape.name}"
+
+
+def cell_for(arch: str, shape: InputShape) -> Cell:
+    if shape.kind == "decode" and arch in ENCODER_ONLY:
+        return Cell(arch, shape, False,
+                    "encoder-only: no decode step exists")
+    if shape.name == "long_500k" and arch not in SUBQUADRATIC:
+        return Cell(arch, shape, False,
+                    "full quadratic attention at 512k seq: skipped per brief"
+                    " (needs sub-quadratic attention)")
+    return Cell(arch, shape, True)
+
+
+def cells() -> List[Cell]:
+    return [cell_for(a, s) for a in ARCH_NAMES for s in LM_SHAPES]
+
+
+def runnable_cells() -> List[Cell]:
+    return [c for c in cells() if c.runnable]

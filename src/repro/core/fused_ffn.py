@@ -1,0 +1,210 @@
+"""FusedBlock: the paper's zero-buffer dataflow generalized to LM blocks.
+
+A transformer FFN is the same expand -> mix -> project sandwich as the
+MobileNetV2 inverted residual (DESIGN.md §3):
+
+    x --[W_gate/W_up: d -> d_ff]--> h --[elementwise act·gate]--> h'
+      --[W_down: d_ff -> d]--> y
+
+Layer-by-layer XLA execution materializes the (tokens, d_ff) intermediates
+in HBM — the LM equivalent of the paper's F1/F2 memory wall (d_ff is 3-4x
+d_model for every assigned arch). ``ffn_fused`` streams d_ff in chunks with
+an output-stationary accumulator, so no (tokens, d_ff) tensor ever exists:
+
+    Expansion  stage ≈ x @ W[:, chunk]          (input-stationary: x held)
+    Mix        stage ≈ act(gate_chunk) * up_chunk  (the 'depthwise' role)
+    Projection stage ≈ acc += h_chunk @ W_down[chunk]   (output-stationary)
+
+This is the exact stage/dataflow mapping of the paper's three engines.
+For training, ``zero_buffer_remat_policy`` extends the idea to the backward
+pass: activations named 'ffn_hidden' are *refused* as saveable residuals,
+so autodiff recomputes them instead of storing (tokens, d_ff) for the
+backward pass — recompute-over-store, the same trade the paper makes.
+
+The Pallas realisation (fully fused in one kernel, intermediate in VMEM
+only) is kernels/fused_ffn.py; this module is the pure-JAX version used by
+all models and the multi-pod dry-run.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+Act = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def relu_sq(x):  # RWKV channel-mix
+    return jnp.square(jax.nn.relu(x))
+
+
+ACTS = {"silu": silu, "gelu": gelu, "relu_sq": relu_sq, "relu": jax.nn.relu}
+
+
+# ---------------------------------------------------------------------------
+# Reference (layer-by-layer): intermediates materialized.
+# ---------------------------------------------------------------------------
+
+
+def ffn_reference(x, w_gate, w_up, w_down, *, act: Act = silu):
+    """Gated FFN with the (tokens, d_ff) intermediates materialized.
+
+    The paper's v0. checkpoint_name tags let the remat policy identify the
+    d_ff-wide tensors (the 'F1/F2' of the LM world).
+    """
+    h_gate = checkpoint_name(x @ w_gate, "ffn_hidden")
+    h_up = checkpoint_name(x @ w_up, "ffn_hidden")
+    h = checkpoint_name(act(h_gate) * h_up, "ffn_hidden")
+    return h @ w_down
+
+
+def ffn_reference_ungated(x, w_up, w_down, *, act: Act = gelu):
+    h = checkpoint_name(act(x @ w_up), "ffn_hidden")
+    return h @ w_down
+
+
+# ---------------------------------------------------------------------------
+# Fused: d_ff streamed in chunks, output-stationary accumulator.
+# ---------------------------------------------------------------------------
+
+
+def ffn_fused(x, w_gate, w_up, w_down, *, act: Act = silu,
+              chunk: int = 1024):
+    """Zero-buffer gated FFN.
+
+    Numerically identical to ffn_reference up to fp accumulation order
+    (sum over d_ff is split into chunks; the accumulator is f32).
+    Peak intermediate live size: (tokens, chunk) instead of (tokens, d_ff).
+    """
+    d_ff = w_gate.shape[1]
+    if d_ff % chunk:
+        chunk = _pick_chunk(d_ff, chunk)
+    n_chunks = d_ff // chunk
+    x32 = x  # keep input dtype for the matmuls (MXU bf16), accumulate f32
+
+    def body(acc, c):
+        wg = jax.lax.dynamic_slice_in_dim(w_gate, c * chunk, chunk, axis=1)
+        wu = jax.lax.dynamic_slice_in_dim(w_up, c * chunk, chunk, axis=1)
+        wd = jax.lax.dynamic_slice_in_dim(w_down, c * chunk, chunk, axis=0)
+        h = act(x32 @ wg) * (x32 @ wu)           # expansion + mix (chunk-wide)
+        return acc + (h @ wd).astype(acc.dtype), None  # OS projection
+
+    acc0 = jnp.zeros(x.shape[:-1] + (w_down.shape[1],), jnp.float32)
+    acc, _ = jax.lax.scan(body, acc0, jnp.arange(n_chunks))
+    return acc.astype(x.dtype)
+
+
+def ffn_fused_ungated(x, w_up, w_down, *, act: Act = gelu, chunk: int = 1024):
+    d_ff = w_up.shape[1]
+    if d_ff % chunk:
+        chunk = _pick_chunk(d_ff, chunk)
+    n_chunks = d_ff // chunk
+
+    def body(acc, c):
+        wu = jax.lax.dynamic_slice_in_dim(w_up, c * chunk, chunk, axis=1)
+        wd = jax.lax.dynamic_slice_in_dim(w_down, c * chunk, chunk, axis=0)
+        h = act(x @ wu)
+        return acc + (h @ wd).astype(acc.dtype), None
+
+    acc0 = jnp.zeros(x.shape[:-1] + (w_down.shape[1],), jnp.float32)
+    acc, _ = jax.lax.scan(body, acc0, jnp.arange(n_chunks))
+    return acc.astype(x.dtype)
+
+
+def _pick_chunk(d_ff: int, want: int) -> int:
+    """Largest divisor of d_ff that is <= want (fall back to d_ff)."""
+    for c in range(min(want, d_ff), 0, -1):
+        if d_ff % c == 0:
+            return c
+    return d_ff
+
+
+# ---------------------------------------------------------------------------
+# Remat policies: the zero-buffer idea applied to the backward pass.
+# ---------------------------------------------------------------------------
+
+
+def zero_buffer_remat_policy():
+    """Refuse to save any tensor tagged 'ffn_hidden' (the d_ff
+    intermediates); everything else follows XLA's default saveability.
+
+    Activation memory per layer drops from O(T*d_ff) to O(T*d_model) at the
+    cost of recomputing the expansion matmul in the backward pass —
+    recompute-over-store, exactly the paper's NLR trade.
+    """
+    return jax.checkpoint_policies.save_anything_except_these_names(
+        "ffn_hidden", "attn_scores")
+
+
+def full_remat_policy():
+    """Save nothing; recompute the whole block (strongest memory saving)."""
+    return jax.checkpoint_policies.nothing_saveable
+
+
+REMAT_POLICIES = {
+    "none": None,
+    "zero_buffer": zero_buffer_remat_policy,
+    "full": full_remat_policy,
+    "dots": lambda: jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+}
+
+
+def apply_remat(fn, mode: str):
+    if mode == "none" or mode is None:
+        return fn
+    policy = REMAT_POLICIES[mode]()
+    if mode == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+    return jax.checkpoint(fn, policy=policy)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch used by the model zoo
+# ---------------------------------------------------------------------------
+
+
+def ffn_apply(x, params, *, gated: bool, act_name: str, impl: str = "fused",
+              chunk: int = 1024):
+    """impl: 'reference' (materialize) | 'fused' (chunked zero-buffer).
+
+    ``params``: dict with w_gate/w_up/w_down (gated) or w_up/w_down.
+    Weights are cast to the activation dtype here (bf16 compute against
+    f32 masters) — without this the matmuls silently promote to f32,
+    doubling every byte moved and every collective.
+
+    Distribution note (DESIGN.md §6): under a TP-sharded d_ff, the
+    'fused' chunk loop's dynamic_slice over the sharded dim forces GSPMD
+    into per-chunk all-gathers — sequential chunking conflicts with
+    spatial partitioning. At the distributed level 'reference' lowers to
+    the canonical Megatron schedule, and the zero-buffer fusion lives
+    WITHIN each device as the Pallas kernel (kernels/fused_ffn.py): the
+    paper's hierarchy — fuse inside the memory domain, stream between
+    domains.
+    """
+    from repro.runtime.actctx import constrain
+    act = ACTS[act_name]
+    dt = x.dtype
+    # Pin the bf16 copies to the param sharding so the FSDP all-gather
+    # moves bf16 (convert-then-gather), not the f32 master (2x wire bytes).
+    w_up = constrain(params["w_up"].astype(dt), "D", "M")
+    w_down = constrain(params["w_down"].astype(dt), "M", "D")
+    if gated:
+        w_gate = constrain(params["w_gate"].astype(dt), "D", "M")
+        if impl == "reference":
+            return ffn_reference(x, w_gate, w_up, w_down, act=act)
+        return ffn_fused(x, w_gate, w_up, w_down, act=act, chunk=chunk)
+    if impl == "reference":
+        return ffn_reference_ungated(x, w_up, w_down, act=act)
+    return ffn_fused_ungated(x, w_up, w_down, act=act, chunk=chunk)

@@ -1,0 +1,159 @@
+"""INT8 quantization arithmetic (TFLite-style), as used by the paper.
+
+The paper's post-processing pipeline (Fig. 6b / Fig. 7) applies, per stage:
+    32-bit accumulate -> bias add -> requantize -> ReLU -> 8-bit output.
+
+Weights are symmetric per-channel int8 (zero_point = 0), activations are
+asymmetric per-tensor int8 — the TFLite int8 scheme the paper targets.
+
+Hardware adaptation note (see DESIGN.md §2): the paper implements the
+requantization multiplier as a fixed-point int32 multiplier + right shift
+because floating-point units are expensive in silicon. On TPU the VPU does
+float32 multiplies natively at full rate, so the *runtime* requantization uses
+a float32 effective scale; the fixed-point path is kept as an exact numpy
+oracle (`requantize_fixedpoint_np`) and the two are property-tested to agree
+within <= 1 LSB (tests/test_quant.py). The integer dataflow (int8 operands,
+int32 accumulation, int8 results) is unchanged from the paper.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+INT8_MIN = -128
+INT8_MAX = 127
+
+
+@dataclasses.dataclass(frozen=True)
+class QParams:
+    """Quantization parameters for one tensor.
+
+    ``scale`` is a python float for per-tensor quantization or a 1-D float
+    array (per output channel) for weights. ``zero_point`` is always
+    per-tensor (TFLite: weight zero points are 0, activation zps are scalar).
+    """
+
+    scale: object  # float | np.ndarray
+    zero_point: int = 0
+
+    def scale_arr(self) -> np.ndarray:
+        return np.asarray(self.scale, dtype=np.float32)
+
+
+def choose_qparams(x: np.ndarray, *, symmetric: bool = False,
+                   channel_axis: Optional[int] = None) -> QParams:
+    """Pick scale/zero-point covering the value range of ``x``."""
+    if channel_axis is not None:
+        # Per-channel symmetric (weights).
+        axes = tuple(i for i in range(x.ndim) if i != channel_axis)
+        amax = np.maximum(np.abs(x).max(axis=axes), 1e-8)
+        return QParams(scale=(amax / 127.0).astype(np.float32), zero_point=0)
+    lo, hi = float(x.min()), float(x.max())
+    if symmetric:
+        amax = max(abs(lo), abs(hi), 1e-8)
+        return QParams(scale=amax / 127.0, zero_point=0)
+    lo, hi = min(lo, 0.0), max(hi, 0.0)
+    scale = max((hi - lo) / 255.0, 1e-8)
+    zp = int(round(INT8_MIN - lo / scale))
+    return QParams(scale=scale, zero_point=int(np.clip(zp, INT8_MIN, INT8_MAX)))
+
+
+def quantize(x, qp: QParams, *, channel_axis: Optional[int] = None):
+    """float -> int8."""
+    scale = qp.scale_arr()
+    if channel_axis is not None and scale.ndim == 1:
+        shape = [1] * np.ndim(x)
+        shape[channel_axis] = -1
+        scale = scale.reshape(shape)
+    q = jnp.round(jnp.asarray(x) / scale) + qp.zero_point
+    return jnp.clip(q, INT8_MIN, INT8_MAX).astype(jnp.int8)
+
+
+def dequantize(q, qp: QParams, *, channel_axis: Optional[int] = None):
+    scale = qp.scale_arr()
+    if channel_axis is not None and scale.ndim == 1:
+        shape = [1] * np.ndim(q)
+        shape[channel_axis] = -1
+        scale = scale.reshape(shape)
+    return (jnp.asarray(q, jnp.float32) - qp.zero_point) * scale
+
+
+def effective_scale(s_in, s_w, s_out) -> np.ndarray:
+    """The requantization multiplier  M = s_in * s_w / s_out  (per-channel)."""
+    return (np.asarray(s_in, np.float64) * np.asarray(s_w, np.float64)
+            / np.asarray(s_out, np.float64)).astype(np.float32)
+
+
+def requantize(acc_i32, eff_scale, zp_out: int, *, relu: bool = False,
+               relu6_max_q: Optional[int] = None):
+    """int32 accumulator -> int8 output (bias must already be added).
+
+    ``eff_scale`` broadcasts over the trailing (channel) dimension. ``relu``
+    clamps at the output zero point (quantized ReLU); ``relu6_max_q``
+    optionally caps at the quantized value of 6.0 (MobileNetV2 uses ReLU6).
+    """
+    y = jnp.round(acc_i32.astype(jnp.float32) * jnp.asarray(eff_scale))
+    y = y.astype(jnp.int32) + zp_out
+    lo = zp_out if relu else INT8_MIN
+    hi = INT8_MAX if relu6_max_q is None else jnp.minimum(relu6_max_q, INT8_MAX)
+    return jnp.clip(y, lo, hi).astype(jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# Fixed-point oracle (the paper's silicon implementation), exact in numpy.
+# ---------------------------------------------------------------------------
+
+def quantize_multiplier(real: float) -> Tuple[int, int]:
+    """real ~ qm * 2**(shift - 31)  with qm an int32 in [2^30, 2^31)."""
+    if real == 0.0:
+        return 0, 0
+    mant, exp = math.frexp(real)  # real = mant * 2**exp, mant in [0.5, 1)
+    qm = int(round(mant * (1 << 31)))
+    if qm == (1 << 31):
+        qm //= 2
+        exp += 1
+    return qm, exp
+
+
+def requantize_fixedpoint_np(acc: np.ndarray, qm, shift, zp_out: int,
+                             *, relu: bool = False) -> np.ndarray:
+    """Exact gemmlowp-style rounding-doubling-high-mul + rounding right shift.
+
+    Matches TFLite's MultiplyByQuantizedMultiplier. ``qm``/``shift`` may be
+    scalars or per-channel arrays broadcast over the trailing dim.
+    """
+    acc = acc.astype(np.int64)
+    qm = np.asarray(qm, np.int64)
+    shift = np.asarray(shift, np.int64)
+    # Saturating rounding doubling high mul: (2*acc*qm + 2^31) >> 32, i.e.
+    # round(acc * qm / 2^31), then multiply by 2**shift with rounding.
+    prod = acc * qm
+    nudge = np.where(prod >= 0, 1 << 30, 1 - (1 << 30)).astype(np.int64)
+    srdhm = (prod + nudge) >> 31
+    total_shift = -shift  # right shift amount when shift <= 0
+    mask = total_shift > 0
+    rounded = np.where(
+        mask,
+        (srdhm + np.where(mask, (1 << np.maximum(total_shift, 1)) >> 1, 0))
+        >> np.maximum(total_shift, 0),
+        srdhm << np.maximum(-total_shift, 0),
+    )
+    y = rounded + zp_out
+    lo = zp_out if relu else INT8_MIN
+    return np.clip(y, lo, INT8_MAX).astype(np.int8)
+
+
+def fold_zero_point_correction(w_q: np.ndarray, zp_in: int,
+                               reduce_axes: Tuple[int, ...]) -> np.ndarray:
+    """Precomputed   - zp_in * sum_k(w_q)   term folded into the bias.
+
+    acc = sum_k (x_q - zp_in) * w_q = sum_k x_q * w_q - zp_in * sum_k w_q,
+    so hardware streams raw int8 x_q through the MACs (the paper's engines do
+    exactly this) and adds this correction once.
+    """
+    return (-int(zp_in) * w_q.astype(np.int64).sum(axis=reduce_axes)).astype(np.int32)

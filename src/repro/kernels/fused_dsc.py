@@ -1,0 +1,167 @@
+"""Pallas TPU kernel: fused int8 Expansion -> Depthwise -> Projection.
+
+This is the paper's accelerator re-targeted at the TPU memory hierarchy
+(DESIGN.md §2). One ``pl.pallas_call`` computes an entire inverted-residual
+block; the grid iterates over *output row tiles* and, per tile:
+
+    1. streams the haloed input strip from VMEM (on-the-fly padding:
+       out-of-bounds rows/cols are replaced by the zero-point — the paper's
+       Fig. 13b address-check logic, realised as masked selects),
+    2. Expansion: int8 x int8 -> int32 matmul on the MXU, requantize, ReLU6
+       (the paper's nine 8-way-MAC engines -> one MXU matmul),
+    3. Depthwise: nine shifted multiply-adds on the VPU over the VMEM-
+       resident F1 strip (the paper's 9-way MAC array, No-Local-Reuse),
+    4. Projection: int8 matmul + requantize, output-stationary in VMEM
+       (the paper's 56 OS accumulator engines -> one MXU matmul tile).
+
+The intermediate feature maps F1/F2 exist ONLY inside this kernel's VMEM
+registers for the lifetime of one grid step — they are never written to HBM.
+That is the zero-buffer property; XLA's layer-by-layer lowering of the
+reference implementation materializes both (benchmarks/bench_traffic.py
+shows the byte difference).
+
+Granularity note (hardware adaptation): the paper computes one output PIXEL
+per pipeline beat because its F1 storage is a 3x3xM register file. VMEM is
+~16 MiB, so we fuse at row-tile granularity instead — same zero-buffer
+property, but the expansion halo is computed once per tile rather than once
+per pixel (recompute factor (s*t+2)/(s*t) instead of 9x). Grid steps are
+pipelined by Pallas (DMA double-buffering), which plays the role of the
+paper's v2/v3 inter/intra-stage pipelining.
+
+Weight layout: w_dw is passed as (9, M) — tap-major, exactly the paper's
+nine-bank depthwise filter buffer (Fig. 12: bank i holds tap i of every
+filter, so one "row" feeds all MACs of tap i in one go).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INT8_MIN, INT8_MAX = -128, 127
+
+
+def _requant(acc_i32, m_ref, zp_out: int, lo: int, hi: int):
+    """int32 accumulator -> int8, float-multiplier requantization.
+
+    Identical arithmetic to core.quant.requantize so kernel output is
+    bit-identical to the pure-JAX disciplines.
+    """
+    y = jnp.round(acc_i32.astype(jnp.float32) * m_ref)
+    y = y.astype(jnp.int32) + zp_out
+    return jnp.clip(y, lo, hi).astype(jnp.int8)
+
+
+def _fused_dsc_kernel(
+    x_ref, w_exp_ref, w_dw_ref, w_proj_ref,
+    b_exp_ref, b_dw_ref, b_proj_ref,
+    m_exp_ref, m_dw_ref, m_proj_ref,
+    out_ref,
+    *, h: int, w: int, cin: int, cmid: int, cout: int,
+    stride: int, tile_rows: int,
+    zp_in: int, zp_f1: int, zp_f2: int, zp_out: int,
+    q6_f1: int, q6_f2: int,
+):
+    t = pl.program_id(0)
+    s, k = stride, 3
+    w2 = -(-w // s)
+    in_rows = (tile_rows - 1) * s + k
+    r0 = t * tile_rows * s - 1  # first input row incl. top halo (may be -1)
+
+    x = x_ref[...]  # (H, W, C) int8, VMEM-resident (TinyML-sized maps)
+
+    # ---- on-the-fly padded input strip (Fig. 13b) --------------------------
+    rows = []
+    for i in range(in_rows):           # unrolled: in_rows is small & static
+        r = r0 + i
+        row = jax.lax.dynamic_index_in_dim(x, jnp.clip(r, 0, h - 1), axis=0,
+                                           keepdims=False)       # (W, C)
+        valid = jnp.logical_and(r >= 0, r < h)
+        rows.append(jnp.where(valid, row, jnp.int8(zp_in)))
+    strip = jnp.stack(rows, axis=0)    # (in_rows, W, C)
+
+    # ---- Expansion stage: MXU int8 matmul + requant + ReLU6 ----------------
+    acc = jax.lax.dot_general(
+        strip.reshape(in_rows * w, cin), w_exp_ref[...],
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+    acc = acc + b_exp_ref[...]
+    f1 = _requant(acc, m_exp_ref[...], zp_f1, zp_f1, q6_f1)
+    f1 = f1.reshape(in_rows, w, cmid)
+
+    # ---- column halo: VMEM-local pad with the F1 zero-point ----------------
+    # (the TPU analogue of the address-check mux; never touches HBM)
+    zcol = jnp.full((in_rows, 1, cmid), zp_f1, jnp.int8)
+    f1p = jnp.concatenate([zcol, f1, zcol], axis=1)  # (in_rows, W+2, M)
+
+    # ---- Depthwise stage: nine shifted VPU multiply-adds (NLR) -------------
+    acc2 = jnp.zeros((tile_rows, w2, cmid), jnp.int32)
+    for dy in range(k):
+        for dx in range(k):
+            tap = jax.lax.slice(
+                f1p, (dy, dx, 0),
+                (dy + (tile_rows - 1) * s + 1, dx + (w2 - 1) * s + 1, cmid),
+                (s, s, 1)).astype(jnp.int32)
+            acc2 = acc2 + tap * w_dw_ref[dy * k + dx, :].astype(jnp.int32)
+    acc2 = acc2 + b_dw_ref[...]
+    f2 = _requant(acc2, m_dw_ref[...], zp_f2, zp_f2, q6_f2)
+
+    # ---- Projection stage: MXU int8 matmul, output-stationary --------------
+    acc3 = jax.lax.dot_general(
+        f2.reshape(tile_rows * w2, cmid), w_proj_ref[...],
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+    acc3 = acc3 + b_proj_ref[...]
+    y = _requant(acc3, m_proj_ref[...], zp_out, INT8_MIN, INT8_MAX)
+    out_ref[...] = y.reshape(tile_rows, w2, cout)
+
+
+def fused_dsc_pallas(
+    x_q, w_exp, w_dw9, w_proj, b_exp, b_dw, b_proj, m_exp, m_dw, m_proj,
+    *, stride: int, zps: Tuple[int, int, int, int],
+    q6: Tuple[int, int], tile_rows: int = 4, interpret: bool = False,
+):
+    """Launch the fused DSC kernel.
+
+    Args:
+      x_q: (H, W, C) int8 input feature map.
+      w_exp: (C, M) int8. w_dw9: (9, M) int8, tap-major. w_proj: (M, N) int8.
+      b_*: int32 biases (zero-point folded). m_*: float32 requant multipliers.
+      zps: (zp_in, zp_f1, zp_f2, zp_out). q6: quantized ReLU6 caps (f1, f2).
+      tile_rows: output rows computed per grid step (VMEM working-set knob).
+    Returns: (H2, W2, N) int8.
+    """
+    h, w, cin = x_q.shape
+    cmid = w_exp.shape[1]
+    cout = w_proj.shape[1]
+    h2, w2 = -(-h // stride), -(-w // stride)
+    if h2 % tile_rows:
+        # pick the largest divisor of h2 not exceeding the request
+        tile_rows = next(t for t in range(min(tile_rows, h2), 0, -1)
+                         if h2 % t == 0)
+    grid = (h2 // tile_rows,)
+
+    kernel = functools.partial(
+        _fused_dsc_kernel, h=h, w=w, cin=cin, cmid=cmid, cout=cout,
+        stride=stride, tile_rows=tile_rows,
+        zp_in=zps[0], zp_f1=zps[1], zp_f2=zps[2], zp_out=zps[3],
+        q6_f1=q6[0], q6_f2=q6[1])
+
+    whole = lambda shape: pl.BlockSpec(shape, lambda t: (0,) * len(shape))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            whole((h, w, cin)),          # x: whole map stays in VMEM
+            whole((cin, cmid)),          # w_exp (broadcast, like Fig. 11)
+            whole((9, cmid)),            # w_dw nine-bank layout (Fig. 12)
+            whole((cmid, cout)),         # w_proj (per-engine LUTRAM, Fig. 8)
+            whole((cmid,)), whole((cmid,)), whole((cout,)),
+            whole((cmid,)), whole((cmid,)), whole((cout,)),
+        ],
+        out_specs=pl.BlockSpec((tile_rows, w2, cout), lambda t: (t, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h2, w2, cout), jnp.int8),
+        interpret=interpret,
+    )(x_q, w_exp, w_dw9, w_proj, b_exp, b_dw, b_proj, m_exp, m_dw, m_proj)

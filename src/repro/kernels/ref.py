@@ -1,0 +1,111 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth its kernel is swept against in
+tests/test_kernels.py (shape/dtype sweeps, assert_allclose; the int8 DSC
+kernel is compared EXACTLY). No pallas imports here — these run on any
+backend and define what the kernels mean.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# fused_dsc oracle — same arithmetic as core.dsc.dsc_block_reference but
+# callable from raw tensors (kernel-shaped inputs, tap-major w_dw).
+# ---------------------------------------------------------------------------
+
+
+def fused_dsc_ref(x_q, w_exp, w_dw9, w_proj, b_exp, b_dw, b_proj,
+                  m_exp, m_dw, m_proj, *, stride, zps, q6):
+    """int8 (H, W, C) -> int8 (H2, W2, N), layer-by-layer, explicit padding."""
+    zp_in, zp_f1, zp_f2, zp_out = zps
+    q6_f1, q6_f2 = q6
+    h, w, cin = x_q.shape
+    cmid = w_exp.shape[1]
+    cout = w_proj.shape[1]
+    s, k = stride, 3
+    h2, w2 = -(-h // s), -(-w // s)
+
+    def requant(acc, m, zp, lo, hi):
+        y = jnp.round(acc.astype(jnp.float32) * m).astype(jnp.int32) + zp
+        return jnp.clip(y, lo, hi).astype(jnp.int8)
+
+    acc = jnp.einsum("hwc,cm->hwm", x_q.astype(jnp.int32),
+                     w_exp.astype(jnp.int32)) + b_exp
+    f1 = requant(acc, m_exp, zp_f1, zp_f1, q6_f1)
+    f1p = jnp.pad(f1, ((1, 1), (1, 1), (0, 0)), constant_values=zp_f1)
+    acc2 = jnp.zeros((h2, w2, cmid), jnp.int32)
+    for dy in range(k):
+        for dx in range(k):
+            win = jax.lax.slice(
+                f1p, (dy, dx, 0),
+                (dy + (h2 - 1) * s + 1, dx + (w2 - 1) * s + 1, cmid),
+                (s, s, 1))
+            acc2 = acc2 + win.astype(jnp.int32) * w_dw9[dy * k + dx].astype(jnp.int32)
+    f2 = requant(acc2 + b_dw, m_dw, zp_f2, zp_f2, q6_f2)
+    acc3 = jnp.einsum("hwm,mn->hwn", f2.astype(jnp.int32),
+                      w_proj.astype(jnp.int32)) + b_proj
+    return requant(acc3, m_proj, zp_out, -128, 127)
+
+
+# ---------------------------------------------------------------------------
+# fused_ffn oracle
+# ---------------------------------------------------------------------------
+
+_ACTS = {
+    "silu": lambda x: x * jax.nn.sigmoid(x),
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu_sq": lambda x: jnp.square(jnp.maximum(x, 0.0)),
+    "relu": lambda x: jnp.maximum(x, 0.0),
+}
+
+
+def fused_ffn_ref(x, w_gate, w_up, w_down, *, act: str = "silu"):
+    """y = act(x @ w_gate) * (x @ w_up) @ w_down, f32 accumulation."""
+    f = _ACTS[act]
+    x32 = x.astype(jnp.float32)
+    if w_gate is None:
+        h = f(x32 @ w_up.astype(jnp.float32))
+    else:
+        h = (f(x32 @ w_gate.astype(jnp.float32))
+             * (x32 @ w_up.astype(jnp.float32)))
+    return (h.astype(x.dtype).astype(jnp.float32)
+            @ w_down.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention oracle — materializes the full (Tq, Tk) score matrix
+# (exactly what the kernel refuses to do).
+# ---------------------------------------------------------------------------
+
+
+def attention_ref(q, k, v, *, causal: bool = True,
+                  window: Optional[int] = None,
+                  softcap: Optional[float] = None,
+                  sm_scale: Optional[float] = None):
+    """(BH, Tq, d) x (BH, Tk, d) -> (BH, Tq, d)."""
+    bh, tq, d = q.shape
+    tk = k.shape[1]
+    scale = float(sm_scale if sm_scale is not None else d ** -0.5)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = jnp.arange(tq)[:, None]
+    k_pos = jnp.arange(tk)[None, :]
+    mask = jnp.ones((tq, tk), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    # Rows with no valid key (possible with extreme windows) -> zeros.
+    any_valid = mask.any(axis=-1, keepdims=True)
+    p = jnp.where(any_valid, p, 0.0)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,192 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_EXTRA_XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# ^ MUST precede every other import: jax locks the device count on first
+#   init. 512 placeholder host devices back the production meshes.
+
+"""Multi-pod dry-run (deliverable (e)).
+
+For every (architecture x input shape) cell, build the production mesh,
+lower the appropriate step function with ShapeDtypeStruct inputs (no
+allocation), ``.compile()`` it, and record:
+
+  * memory_analysis()  — proves the cell fits per-device HBM,
+  * cost_analysis()    — FLOPs / bytes for §Roofline,
+  * the collective schedule parsed from the optimized HLO.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k \
+      --mesh single                       # one cell
+  python -m repro.launch.dryrun --all --mesh both                 # grid
+  python -m repro.launch.dryrun --list    # enumerate cells
+
+Results are written as JSON to results/dryrun/<arch>__<shape>__<mesh>.json
+(one file per cell: safe to run cells in parallel processes).
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+
+from repro.configs import registry
+from repro.configs.base import SHAPES_BY_NAME
+from repro.launch.mesh import make_production_mesh
+from repro.roofline import roofline_from_compiled, summarize
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def lower_cell(cfg, shape, mesh):
+    """Returns the jax.stages.Lowered for one cell."""
+    from repro.runtime import steps as steps_mod
+
+    if shape.kind == "train":
+        train = steps_mod.TrainSpec(grad_compression="pod" in mesh.axis_names)
+        step = steps_mod.build_train_step(cfg, mesh, train, shape)
+        state = steps_mod.abstract_train_state(cfg, train)
+        batch = steps_mod.abstract_batch(cfg, shape)
+        return step.lower(state, batch)
+    if shape.kind == "prefill":
+        if not cfg.causal:      # encoder-only: no cache; plain encode
+            step = steps_mod.build_encode_step(cfg, mesh, shape)
+            return step.lower(jax.tree.map(
+                lambda x: x, _abstract_params(cfg)),
+                steps_mod.abstract_batch(cfg, shape))
+        step = steps_mod.build_prefill_step(cfg, mesh, shape)
+        return step.lower(_abstract_params(cfg),
+                          steps_mod.abstract_batch(cfg, shape))
+    if shape.kind == "decode":
+        step = steps_mod.build_decode_step(cfg, mesh, shape)
+        cache, token, pos = steps_mod.decode_inputs(cfg, shape)
+        return step.lower(_abstract_params(cfg), cache, token, pos)
+    raise ValueError(shape.kind)
+
+
+def _abstract_params(cfg):
+    import jax.numpy as jnp
+    from repro.models import lm
+    return lm.abstract_params(cfg, dtype=jnp.bfloat16)
+
+
+def tokens_for(cfg, shape) -> float:
+    """Tokens processed by one step of this cell (for MODEL_FLOPS)."""
+    if shape.kind == "train":
+        return 3.0 * shape.tokens       # fwd + bwd = 3x fwd FLOPs / (2x...)
+    if shape.kind == "prefill":
+        return float(shape.tokens)
+    return float(shape.global_batch)    # decode: one token per sequence
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str,
+             out_dir: str = RESULTS_DIR, verbose: bool = True,
+             cfg_override=None) -> Optional[dict]:
+    cell = registry.cell_for(arch, SHAPES_BY_NAME[shape_name])
+    os.makedirs(out_dir, exist_ok=True)
+    out_path = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_name}.json")
+    if not cell.runnable:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "status": "n/a", "reason": cell.skip_reason}
+        with open(out_path, "w") as f:
+            json.dump(rec, f, indent=2)
+        if verbose:
+            print(f"[dryrun] {cell.key} N/A: {cell.skip_reason}")
+        return rec
+
+    cfg = cfg_override or registry.get(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    chips = mesh.size
+    t0 = time.time()
+    try:
+        with jax.default_device(jax.devices("cpu")[0]):
+            lowered = lower_cell(cfg, shape, mesh)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            hlo = compiled.as_text()
+            ma = compiled.memory_analysis()
+            # MODEL_FLOPS: 2 N_active per token fwd; 6 N_active incl. bwd.
+            if shape.kind == "train":
+                model_flops = 6.0 * cfg.active_param_count() * shape.tokens
+            elif shape.kind == "prefill":
+                model_flops = 2.0 * cfg.active_param_count() * shape.tokens
+            else:
+                model_flops = 2.0 * cfg.active_param_count() * shape.global_batch
+            rep = roofline_from_compiled(
+                compiled, arch=arch, shape=shape_name, mesh_name=mesh_name,
+                chips=chips, model_flops=model_flops, hlo_text=hlo)
+            rec = rep.as_dict()
+            rec.update({
+                "status": "ok",
+                "lower_s": t_lower, "compile_s": t_compile,
+                "memory": {
+                    "argument_bytes": getattr(ma, "argument_size_in_bytes", None),
+                    "output_bytes": getattr(ma, "output_size_in_bytes", None),
+                    "temp_bytes": getattr(ma, "temp_size_in_bytes", None),
+                    "alias_bytes": getattr(ma, "alias_size_in_bytes", None),
+                    "generated_code_bytes": getattr(
+                        ma, "generated_code_size_in_bytes", None),
+                },
+            })
+            if verbose:
+                print(f"[dryrun] {cell.key} mesh={mesh_name} OK "
+                      f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+                print("         " + summarize(rep))
+                print(f"         mem/device: args="
+                      f"{(rec['memory']['argument_bytes'] or 0) / 2**30:.2f} GiB "
+                      f"temp={(rec['memory']['temp_bytes'] or 0) / 2**30:.2f} GiB")
+    except Exception as e:                            # noqa: BLE001
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "status": "error", "error": repr(e),
+               "traceback": traceback.format_exc()}
+        if verbose:
+            print(f"[dryrun] {cell.key} mesh={mesh_name} FAILED: {e!r}")
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=2, default=str)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=registry.ARCH_NAMES)
+    ap.add_argument("--shape", choices=list(SHAPES_BY_NAME))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--out", default=RESULTS_DIR)
+    ap.add_argument("--skip-done", action="store_true",
+                    help="skip cells whose result JSON already exists and is ok")
+    args = ap.parse_args()
+
+    if args.list:
+        for c in registry.cells():
+            print(f"{c.key:45s} {'RUN' if c.runnable else 'N/A: ' + str(c.skip_reason)}")
+        return
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        todo = [(c.arch, c.shape.name, m)
+                for c in registry.cells() for m in meshes]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        todo = [(args.arch, args.shape, m) for m in meshes]
+
+    for arch, shp, m in todo:
+        out_path = os.path.join(args.out, f"{arch}__{shp}__{m}.json")
+        if args.skip_done and os.path.exists(out_path):
+            with open(out_path) as f:
+                if json.load(f).get("status") in ("ok", "n/a"):
+                    print(f"[dryrun] {arch}/{shp}/{m} cached, skipping")
+                    continue
+        run_cell(arch, shp, m, out_dir=args.out)
+
+
+if __name__ == "__main__":
+    main()

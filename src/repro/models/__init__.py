@@ -1,0 +1,2 @@
+"""Model zoo: composable LM (all ten assigned archs) + MobileNetV2 (paper
+target). See lm.py for the assembly and DESIGN.md §5 for the arch map."""

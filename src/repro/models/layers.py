@@ -1,0 +1,417 @@
+"""Shared transformer layer machinery: norms, RoPE, attention.
+
+Attention ships in three disciplines, mirroring the DSC block (the paper's
+execution-model triple):
+
+* ``reference`` — materializes the (Tq, Tk) score matrix (the layer-by-layer
+  baseline; the attention analogue of storing F1/F2).
+* ``fused``     — chunked online-softmax over K/V blocks via lax.scan: the
+  score matrix exists only one (Tq, block) tile at a time. Pure JAX, runs
+  and shards on any backend; this is what the multi-pod dry-run lowers.
+* ``pallas``    — kernels/flash_attention.py (TPU target; interpret on CPU).
+
+All weights are plain nested dicts; every function is pure.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.configs.base import ArchConfig
+from repro.kernels import ops as kops
+from repro.runtime.actctx import constrain, grad_dtype_guard
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, scale, *, eps: float = 1e-6, zero_centered: bool = False):
+    """RMSNorm in f32 (gemma-style optional (1+scale) parameterization)."""
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    s = (1.0 + scale.astype(jnp.float32)) if zero_centered else scale.astype(jnp.float32)
+    return (y * s).astype(x.dtype)
+
+
+def init_rms(d: int) -> jnp.ndarray:
+    return jnp.ones((d,), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (with partial-rotary fraction, glm4-style)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, fraction: float, theta: float):
+    rot = int(head_dim * fraction) // 2 * 2
+    inv = 1.0 / (theta ** (np.arange(0, rot, 2, dtype=np.float32) / rot))
+    return rot, jnp.asarray(inv)  # (rot/2,)
+
+
+def apply_rope(x, positions, *, head_dim: int, fraction: float, theta: float):
+    """x: (..., T, H, hd); positions: (..., T) int32."""
+    rot, inv = rope_freqs(head_dim, fraction, theta)
+    if rot == 0:
+        return x
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., T, rot/2)
+    cos = jnp.cos(ang)[..., None, :]                      # (..., T, 1, rot/2)
+    sin = jnp.sin(ang)[..., None, :]
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., : rot // 2], xr[..., rot // 2:]      # half-split layout
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), xp], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Attention math (three disciplines)
+# ---------------------------------------------------------------------------
+
+
+def _mask(q_pos, k_pos, *, causal, window, kv_len=None):
+    m = jnp.ones(jnp.broadcast_shapes(q_pos.shape, k_pos.shape), bool)
+    if causal:
+        m &= q_pos >= k_pos
+    if window is not None:
+        m &= (q_pos - k_pos) < window
+    if kv_len is not None:
+        m &= k_pos < kv_len
+    return m
+
+
+def repeat_kv(k, n_heads: int):
+    """(B, T, Hkv, d) -> (B, T, H, d) by repeating each kv head.
+
+    Done EXPLICITLY (not via a (Hkv, G) einsum reshape) so the flat head
+    dim stays TP-shardable: GSPMD cannot shard a 16-way axis across the
+    two dims of an (8, 8) reshape, but it shards the flat 64 fine. The
+    constrain() pins the repeated tensor to the model axis.
+    """
+    hkv = k.shape[2]
+    if hkv == n_heads:
+        return k
+    k = jnp.repeat(k, n_heads // hkv, axis=2)
+    return constrain(k, "B", None, "M", None)
+
+
+def attention_reference(q, k, v, q_pos, k_pos, *, causal, window,
+                        softcap, sm_scale, kv_len=None):
+    """(B, Tq, H, d) x (B, Tk, Hkv, d); materializes (Tq, Tk) scores."""
+    b, tq, h, d = q.shape
+    k = repeat_kv(k, h)
+    v = repeat_kv(v, h)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * sm_scale
+    s = checkpoint_name(s, "attn_scores")
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    m = _mask(q_pos[:, None], k_pos[None, :], causal=causal, window=window,
+              kv_len=kv_len)
+    s = jnp.where(m[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(m.any(-1)[None, None, :, None], p, 0.0)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def attention_fused(q, k, v, q_pos, k_pos, *, causal, window, softcap,
+                    sm_scale, block_k: int = 1024, kv_len=None):
+    """Chunked online-softmax attention (zero-buffer scores), pure JAX.
+
+    Scans over K/V blocks; the running (max, denom, acc) triple is the
+    output-stationary accumulator — the (Tq, Tk) score matrix never
+    exists at full size. Heads stay FLAT (kv repeated to H) so TP-sharding
+    over the model axis survives GQA; scores run in f32, the P tile is
+    cast back to the compute dtype for the PV matmul (MXU-style).
+    """
+    b, tq, h, d = q.shape
+    tk = k.shape[1]
+    k = repeat_kv(k, h)
+    v = repeat_kv(v, h)
+    # keep the f32 online-softmax cotangents from leaking into the bf16
+    # projection/residual backward (2x bytes on everything downstream)
+    q, k, v = (grad_dtype_guard(t) for t in (q, k, v))
+    block_k = min(block_k, tk)
+    pad = (-tk) % block_k
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pad),
+                        constant_values=jnp.iinfo(jnp.int32).max)
+    nblk = k.shape[1] // block_k
+    qs = (q.astype(jnp.float32) * sm_scale).astype(q.dtype)
+    kb = k.reshape(b, nblk, block_k, h, d).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nblk, block_k, h, d).transpose(1, 0, 2, 3, 4)
+    pb = k_pos.reshape(nblk, block_k)
+    return _fused_scan(qs, kb, vb, pb, q_pos, b, tq, h, d, causal, window,
+                       softcap, kv_len, q.dtype)
+
+
+def _fused_scan(qs, kb, vb, pb, q_pos, b, tq, h, d, causal, window, softcap,
+                kv_len, out_dtype):
+    def body(carry, blk):
+        m_run, l_run, acc = carry                 # (B,H,T,1) x2, (B,H,T,d)
+        kc, vc, kp = blk
+        s = jnp.einsum("bqhd,bkhd->bhqk", qs, kc,
+                       preferred_element_type=jnp.float32)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        msk = _mask(q_pos[:, None], kp[None, :], causal=causal,
+                    window=window, kv_len=kv_len)            # (tq, block_k)
+        s = jnp.where(msk[None, None], s, -1e30)
+        m_new = jnp.maximum(m_run, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_run - m_new)
+        l_new = alpha * l_run + p.sum(axis=-1, keepdims=True)
+        pv = jnp.einsum("bhqk,bkhd->bhqd", p.astype(vc.dtype), vc,
+                        preferred_element_type=jnp.float32)
+        acc = alpha * acc + pv
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, h, tq, 1), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, h, tq, 1), jnp.float32)
+    a0 = jnp.zeros((b, h, tq, d), jnp.float32)
+    (m_f, l_f, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kb, vb, pb))
+    denom = jnp.where(l_f == 0.0, 1.0, l_f)
+    out = (acc / denom).transpose(0, 2, 1, 3)     # (B, T, H, d)
+    return out.astype(out_dtype)
+
+
+def attention_pallas(q, k, v, q_pos, k_pos, *, causal, window, softcap,
+                     sm_scale, kv_len=None):
+    """TPU flash kernel (contiguous positions only — train/prefill path)."""
+    del q_pos, k_pos, kv_len
+    return kops.mha(q, k, v, n_kv_heads=k.shape[2], causal=causal,
+                    window=window, softcap=softcap, sm_scale=sm_scale)
+
+
+ATTN_IMPLS = {
+    "reference": attention_reference,
+    "fused": attention_fused,
+    "pallas": attention_pallas,
+}
+
+
+# ---------------------------------------------------------------------------
+# Attention layer (projections + rope + cache)
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ArchConfig) -> Params:
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    hp = cfg.n_heads_padded
+    ks = jax.random.split(key, 4)
+    scale = d ** -0.5
+
+    def padh(w, axis):
+        """Zero-init padded heads, inserted PER KV GROUP so every real
+        q-head keeps its original kv assignment: head = kv*g_pad + i with
+        i < g real, i >= g zero. Exactness: zero wo columns annihilate the
+        pad heads' (uniform-softmax) outputs."""
+        if hp == h:
+            return w
+        assert (hp - h) % hkv == 0, "head_pad must be a multiple of kv heads"
+        g, gp = h // hkv, hp // hkv
+        shape = list(w.shape)
+        shape[axis:axis + 1] = [hkv, g]
+        wg = w.reshape(shape)
+        pad = [(0, 0)] * wg.ndim
+        pad[axis + 1] = (0, gp - g)
+        wg = jnp.pad(wg, pad)
+        shape[axis:axis + 2] = [hp]
+        return wg.reshape(shape)
+
+    p = {
+        "wq": padh(jax.random.normal(ks[0], (d, h, hd), jnp.float32)
+                   * scale, 1),
+        "wk": jax.random.normal(ks[1], (d, hkv, hd), jnp.float32) * scale,
+        "wv": jax.random.normal(ks[2], (d, hkv, hd), jnp.float32) * scale,
+        "wo": padh(jax.random.normal(ks[3], (h, hd, d), jnp.float32)
+                   * (h * hd) ** -0.5, 0),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hp, hd), jnp.float32)
+        p["bk"] = jnp.zeros((hkv, hd), jnp.float32)
+        p["bv"] = jnp.zeros((hkv, hd), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = init_rms(hd)
+        p["k_norm"] = init_rms(hd)
+    return p
+
+
+def _project_qkv(x, p, cfg: ArchConfig, positions):
+    dt = x.dtype
+    wq = constrain(p["wq"].astype(dt), "D", "M", None)
+    wk = constrain(p["wk"].astype(dt), "D", "M", None)
+    wv = constrain(p["wv"].astype(dt), "D", "M", None)
+    q = jnp.einsum("btd,dhk->bthk", x, wq)
+    k = jnp.einsum("btd,dhk->bthk", x, wk)
+    v = jnp.einsum("btd,dhk->bthk", x, wv)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], eps=cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], eps=cfg.norm_eps)
+    hd = cfg.head_dim_
+    q = apply_rope(q, positions, head_dim=hd, fraction=cfg.rope_fraction,
+                   theta=cfg.rope_theta)
+    k = apply_rope(k, positions, head_dim=hd, fraction=cfg.rope_fraction,
+                   theta=cfg.rope_theta)
+    return q, k, v
+
+
+def attention_layer(x, p, cfg: ArchConfig, *, local: bool,
+                    positions=None) -> jnp.ndarray:
+    """Full-sequence attention (train / prefill-without-cache)."""
+    b, t, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(t, dtype=jnp.int32)[None].repeat(b, 0)
+    q, k, v = _project_qkv(x, p, cfg, positions)
+    window = cfg.window if local else None
+    impl = ATTN_IMPLS[cfg.attn_impl]
+    pos1d = positions[0]
+    kw = dict(causal=cfg.causal, window=window, softcap=cfg.attn_softcap,
+              sm_scale=cfg.head_dim_ ** -0.5)
+    if cfg.attn_impl == "fused":
+        kw["block_k"] = cfg.attn_chunk
+    o = impl(q, k, v, pos1d, pos1d, **kw)
+    wo = constrain(p["wo"].astype(x.dtype), "M", None, "D")
+    return jnp.einsum("bthk,hkd->btd", o, wo)
+
+
+# --- KV cache ---------------------------------------------------------------
+
+
+def init_kv_cache(cfg: ArchConfig, batch: int, max_len: int, *, local: bool,
+                  dtype=jnp.bfloat16) -> Params:
+    size = min(max_len, cfg.window) if (local and cfg.window) else max_len
+    shape = (batch, size, cfg.n_kv_heads, cfg.head_dim_)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def attention_prefill(x, p, cfg: ArchConfig, cache, *, local: bool):
+    """Prefill: full-sequence attention + populate the KV cache.
+
+    Local layers keep only the trailing ``window`` keys (ring buffer); the
+    write offset is chosen so subsequent decode steps continue the ring.
+    """
+    b, t, _ = x.shape
+    positions = jnp.arange(t, dtype=jnp.int32)[None].repeat(b, 0)
+    q, k, v = _project_qkv(x, p, cfg, positions)
+    window = cfg.window if local else None
+    impl = ATTN_IMPLS[cfg.attn_impl]
+    kw = dict(causal=cfg.causal, window=window, softcap=cfg.attn_softcap,
+              sm_scale=cfg.head_dim_ ** -0.5)
+    if cfg.attn_impl == "fused":
+        kw["block_k"] = cfg.attn_chunk
+    o = impl(q, k, v, positions[0], positions[0], **kw)
+    size = cache["k"].shape[1]
+    if t >= size:   # keep last `size` keys, aligned to the ring phase
+        start = t - size
+        kk, vv = k[:, start:], v[:, start:]
+        # ring slot of absolute position p is p % size; roll so slot matches
+        shift = (t - size) % size
+        kk = jnp.roll(kk, shift, axis=1)
+        vv = jnp.roll(vv, shift, axis=1)
+        cache = {"k": kk.astype(cache["k"].dtype),
+                 "v": vv.astype(cache["v"].dtype)}
+    else:
+        cache = {
+            "k": jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), 0, axis=1),
+            "v": jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), 0, axis=1),
+        }
+    out = jnp.einsum("bthk,hkd->btd", o, p["wo"].astype(x.dtype))
+    return out, cache
+
+
+def attention_decode(x, p, cfg: ArchConfig, cache, pos, *, local: bool):
+    """One-token decode step against the cache.
+
+    ``pos``: scalar int32 — the absolute position of the incoming token.
+    Cache is a ring buffer for local layers (slot = pos % size) and a flat
+    buffer for global layers.
+    """
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k, v = _project_qkv(x, p, cfg, positions)
+    size = cache["k"].shape[1]
+    is_ring = bool(local and cfg.window and size == cfg.window)
+    slot = (pos % size) if is_ring else pos
+    ck = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+    # Decode-attention layout: when kv heads cannot shard over the TP axis
+    # the cache shards its SEQUENCE dim instead; scores/softmax/PV then
+    # contract the sharded S via partial sums + tiny all-reduces, while the
+    # (trivial) per-step head compute replicates. Cache residency >> FLOPs
+    # at decode. The pins below keep GSPMD from re-gathering the cache.
+    from repro.runtime.actctx import current_mesh
+    mesh_ = current_mesh()
+    seq_sharded = (mesh_ is not None
+                   and cfg.n_kv_heads % mesh_.shape.get("model", 1) != 0)
+    if seq_sharded:
+        ck = constrain(ck, "B", "M", None, None)
+        cv = constrain(cv, "B", "M", None, None)
+    # Positions of cached slots.
+    idx = jnp.arange(size)
+    if is_ring:
+        # slot i holds the most recent position p' <= pos with p' % size == i
+        k_pos = pos - ((pos - idx) % size)
+    else:
+        k_pos = idx
+    hd = cfg.head_dim_
+    valid = (k_pos >= 0) & (k_pos <= pos)
+    if local and cfg.window:
+        valid &= (pos - k_pos) < cfg.window
+    # NOTE on dtypes: score math accumulates in f32 via
+    # preferred_element_type, but the CACHE is never converted — an
+    # .astype(f32) on ck/cv makes XLA carry a full f32 copy of the stacked
+    # cache through the decode loop (3x memory + 2 full converts/step).
+    if seq_sharded:
+        # Grouped-GQA form, NO kv repeat: every einsum contracts/carries the
+        # sharded S dim; only tiny (B,H,..) reductions cross devices.
+        hkv = cfg.n_kv_heads
+        g = cfg.n_heads_padded // hkv
+        qg = ((q.astype(jnp.float32) * hd ** -0.5)
+              .astype(ck.dtype).reshape(b, 1, hkv, g, hd))
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, ck,
+                       preferred_element_type=jnp.float32)
+        if cfg.attn_softcap is not None:
+            s = cfg.attn_softcap * jnp.tanh(s / cfg.attn_softcap)
+        s = jnp.where(valid[None, None, None, None, :], s, -1e30)
+        pattn = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgqk,bkhd->bqhgd", pattn.astype(cv.dtype), cv,
+                       preferred_element_type=jnp.float32)
+        o = o.reshape(b, 1, cfg.n_heads_padded, hd).astype(x.dtype)
+    else:
+        kr = repeat_kv(ck, cfg.n_heads_padded)
+        vr = repeat_kv(cv, cfg.n_heads_padded)
+        qf = ((q.astype(jnp.float32) * hd ** -0.5)
+              .astype(kr.dtype))                      # (B, 1, H, hd)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kr,
+                       preferred_element_type=jnp.float32)
+        if cfg.attn_softcap is not None:
+            s = cfg.attn_softcap * jnp.tanh(s / cfg.attn_softcap)
+        s = jnp.where(valid[None, None, None, :], s, -1e30)
+        pattn = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", pattn.astype(vr.dtype), vr,
+                       preferred_element_type=jnp.float32)
+        o = o.astype(x.dtype)
+    out = jnp.einsum("bthk,hkd->btd", o, p["wo"].astype(x.dtype))
+    return out, {"k": ck, "v": cv}

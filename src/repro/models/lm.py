@@ -1,0 +1,398 @@
+"""Composable LM: one functional model covering all ten assigned archs.
+
+A model is assembled from an ``ArchConfig``: the layer *pattern* (e.g.
+``("recurrent", "recurrent", "attn_local")`` for recurrentgemma) repeats
+over ``n_layers``; whole pattern units are stacked and executed under
+``lax.scan`` (compile-time O(1) in depth), remainder layers are unrolled as
+the "tail".
+
+Every layer is a pre-norm residual pair
+
+    x += sub1(norm(x))      # attention | RG-LRU block | RWKV time-mix
+    x += sub2(norm(x))      # FFN | MoE | RWKV channel-mix
+
+and every FFN-shaped sub2 runs the paper's fused expand->mix->project
+dataflow when ``cfg.block_impl == "fused"`` (DESIGN.md §3).
+
+Three entry points per model — the (train / prefill / decode) trio the
+shape grid exercises:
+
+    forward(params, cfg, batch)                 -> logits (B, T, V)
+    prefill(params, cfg, batch)                 -> (last logits, cache)
+    decode_step(params, cfg, cache, token, pos) -> (logits, cache)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import fused_ffn as ffnlib
+from repro.models import layers as L
+from repro.models import moe as moe_mod
+from repro.models import rglru as rg
+from repro.models import rwkv6 as rwkv
+from repro.runtime.actctx import constrain
+
+Params = Dict[str, Any]
+
+ATTN_KINDS = ("attn", "attn_local")
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init
+# ---------------------------------------------------------------------------
+
+
+def init_ffn(key, cfg: ArchConfig) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_up": jax.random.normal(ks[1], (d, f), jnp.float32) * d ** -0.5,
+        "w_down": jax.random.normal(ks[2], (f, d), jnp.float32) * f ** -0.5,
+    }
+    if cfg.gated:
+        p["w_gate"] = jax.random.normal(ks[0], (d, f), jnp.float32) * d ** -0.5
+    return p
+
+
+def init_layer(key, kind: str, cfg: ArchConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    p: Params = {"norm1": L.init_rms(cfg.d_model),
+                 "norm2": L.init_rms(cfg.d_model)}
+    if cfg.sandwich_norm:
+        p["post_norm1"] = L.init_rms(cfg.d_model)
+        p["post_norm2"] = L.init_rms(cfg.d_model)
+    if kind in ATTN_KINDS:
+        p["sub1"] = L.init_attention(k1, cfg)
+    elif kind == "recurrent":
+        p["sub1"] = rg.init_rglru_block(k1, cfg)
+    elif kind == "rwkv":
+        p["sub1"] = rwkv.init_rwkv_block(k1, cfg)  # holds cm too
+    else:
+        raise ValueError(kind)
+    if kind == "rwkv":
+        p["sub2"] = {}                      # channel-mix params live in sub1
+    elif cfg.moe is not None:
+        p["sub2"] = moe_mod.init_moe(k2, cfg)
+    else:
+        p["sub2"] = init_ffn(k2, cfg)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Per-layer apply (full sequence / prefill / decode)
+# ---------------------------------------------------------------------------
+
+
+def _norm(x, s, cfg):
+    return L.rms_norm(x, s, eps=cfg.norm_eps, zero_centered=cfg.embed_scale)
+
+
+def _apply_sub2(h, p, cfg: ArchConfig):
+    if cfg.moe is not None:
+        return moe_mod.moe_layer(h, p, cfg)          # (y, aux)
+    y = ffnlib.ffn_apply(h, p, gated=cfg.gated, act_name=cfg.act,
+                         impl=cfg.block_impl, chunk=cfg.ffn_chunk)
+    return y, jnp.float32(0.0)
+
+
+def layer_apply(x, p: Params, kind: str, cfg: ArchConfig, aux):
+    """Full-sequence (training) layer."""
+    h = _norm(x, p["norm1"], cfg)
+    if kind in ATTN_KINDS:
+        y = L.attention_layer(h, p["sub1"], cfg, local=(kind == "attn_local"))
+    elif kind == "recurrent":
+        y = rg.rglru_block(h, p["sub1"], cfg)
+    elif kind == "rwkv":
+        y, _ = rwkv.time_mix(h, p["sub1"], cfg)
+    if cfg.sandwich_norm:
+        y = _norm(y, p["post_norm1"], cfg)
+    x = x + y
+    h = _norm(x, p["norm2"], cfg)
+    if kind == "rwkv":
+        y, _ = rwkv.channel_mix(h, p["sub1"], cfg)
+        aux2 = jnp.float32(0.0)
+    else:
+        y, aux2 = _apply_sub2(h, p["sub2"], cfg)
+    if cfg.sandwich_norm:
+        y = _norm(y, p["post_norm2"], cfg)
+    return x + y, aux + aux2
+
+
+def init_layer_cache(cfg: ArchConfig, kind: str, batch: int, max_len: int,
+                     dtype=jnp.bfloat16) -> Params:
+    if kind in ATTN_KINDS:
+        return L.init_kv_cache(cfg, batch, max_len,
+                               local=(kind == "attn_local"), dtype=dtype)
+    if kind == "recurrent":
+        return rg.init_rglru_cache(cfg, batch, dtype=dtype)
+    if kind == "rwkv":
+        return rwkv.init_rwkv_cache(cfg, batch, dtype=dtype)
+    raise ValueError(kind)
+
+
+def layer_prefill(x, p, kind, cfg, cache):
+    h = _norm(x, p["norm1"], cfg)
+    if kind in ATTN_KINDS:
+        y, cache = L.attention_prefill(h, p["sub1"], cfg, cache,
+                                       local=(kind == "attn_local"))
+    elif kind == "recurrent":
+        y, cache = rg.rglru_prefill(h, p["sub1"], cfg, cache)
+    elif kind == "rwkv":
+        y, cache = rwkv.time_mix(h, p["sub1"], cfg, cache)
+    if cfg.sandwich_norm:
+        y = _norm(y, p["post_norm1"], cfg)
+    x = x + y
+    h = _norm(x, p["norm2"], cfg)
+    if kind == "rwkv":
+        y, cache = rwkv.channel_mix(h, p["sub1"], cfg, cache)
+    else:
+        y, _ = _apply_sub2(h, p["sub2"], cfg)
+    if cfg.sandwich_norm:
+        y = _norm(y, p["post_norm2"], cfg)
+    return x + y, cache
+
+
+def layer_decode(x, p, kind, cfg, cache, pos):
+    h = _norm(x, p["norm1"], cfg)
+    if kind in ATTN_KINDS:
+        y, cache = L.attention_decode(h, p["sub1"], cfg, cache, pos,
+                                      local=(kind == "attn_local"))
+    elif kind == "recurrent":
+        y, cache = rg.rglru_decode(h, p["sub1"], cfg, cache)
+    elif kind == "rwkv":
+        y, cache = rwkv.time_mix(h, p["sub1"], cfg, cache)
+    if cfg.sandwich_norm:
+        y = _norm(y, p["post_norm1"], cfg)
+    x = x + y
+    h = _norm(x, p["norm2"], cfg)
+    if kind == "rwkv":
+        y, cache = rwkv.channel_mix(h, p["sub1"], cfg, cache)
+    else:
+        y, _ = _apply_sub2(h, p["sub2"], cfg)
+    if cfg.sandwich_norm:
+        y = _norm(y, p["post_norm2"], cfg)
+    return x + y, cache
+
+
+# ---------------------------------------------------------------------------
+# Whole-model init
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ArchConfig, key) -> Params:
+    ku, kt, ke, kh = jax.random.split(key, 4)
+    vp = cfg.vocab_padded()
+    p: Params = {}
+    if cfg.frontend != "audio":
+        p["embed"] = (jax.random.normal(ke, (vp, cfg.d_model), jnp.float32)
+                      * cfg.d_model ** -0.5)
+    if cfg.n_units > 0:
+        unit_keys = jax.random.split(ku, cfg.n_units)
+
+        def one_unit(k):
+            kk = jax.random.split(k, len(cfg.pattern))
+            return {str(i): init_layer(kk[i], kind, cfg)
+                    for i, kind in enumerate(cfg.pattern)}
+
+        p["units"] = jax.vmap(one_unit)(unit_keys)
+    tail = cfg.tail_kinds
+    if tail:
+        tks = jax.random.split(kt, len(tail))
+        p["tail"] = {str(i): init_layer(tks[i], kind, cfg)
+                     for i, kind in enumerate(tail)}
+    p["final_norm"] = L.init_rms(cfg.d_model)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = (jax.random.normal(kh, (cfg.d_model, vp), jnp.float32)
+                        * cfg.d_model ** -0.5)
+    return p
+
+
+def abstract_params(cfg: ArchConfig, dtype=jnp.float32):
+    """ShapeDtypeStruct pytree (no allocation) for lowering/dry-run."""
+    tree = jax.eval_shape(functools.partial(init_params, cfg),
+                          jax.random.PRNGKey(0))
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype), tree)
+
+
+# ---------------------------------------------------------------------------
+# Whole-model forward / prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def _embed(params, cfg: ArchConfig, tokens, patches=None, frames=None):
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.frontend == "audio":
+        x = frames.astype(dt)                     # stub: precomputed frames
+    else:
+        x = params["embed"][tokens].astype(dt)
+        if cfg.embed_scale:
+            x = x * jnp.asarray(cfg.d_model ** 0.5, dt)
+        if cfg.frontend == "vision" and patches is not None:
+            x = jnp.concatenate([patches.astype(dt), x], axis=1)
+    # canonical activation layout: batch-sharded, features replicated
+    # (forces the all-gather out of the model-sharded embed right here)
+    return constrain(x, "B", None, None)
+
+
+def _head(params, cfg: ArchConfig, x):
+    x = _norm(x, params["final_norm"], cfg)
+    w = (params["embed"].T if cfg.tie_embeddings
+         else params["lm_head"]).astype(x.dtype)
+    logits = (x @ w).astype(jnp.float32)
+    logits = constrain(logits, "B", None, "M")   # vocab TP-sharded
+    if cfg.final_softcap is not None:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return logits
+
+
+def _run_layers(x, params, cfg: ArchConfig):
+    aux = jnp.float32(0.0)
+
+    if cfg.n_units > 0:
+        def unit_fn(carry, unit_p):
+            x, aux = carry
+            x = constrain(x, "B", None, None)   # pin the scan-carry layout
+            for i, kind in enumerate(cfg.pattern):
+                x, aux = layer_apply(x, unit_p[str(i)], kind, cfg, aux)
+            return (x, aux), None
+
+        f = unit_fn
+        if cfg.remat != "none":
+            policy = ffnlib.REMAT_POLICIES[cfg.remat]
+            f = jax.checkpoint(unit_fn, policy=policy() if policy else None,
+                               prevent_cse=False)
+        if cfg.scan_layers:
+            (x, aux), _ = jax.lax.scan(f, (x, aux), params["units"])
+        else:
+            for u in range(cfg.n_units):
+                unit_p = jax.tree.map(lambda a, u=u: a[u], params["units"])
+                (x, aux), _ = f((x, aux), unit_p)
+    for i, kind in enumerate(cfg.tail_kinds):
+        x, aux = layer_apply(x, params["tail"][str(i)], kind, cfg, aux)
+    return x, aux
+
+
+def forward(params, cfg: ArchConfig, tokens=None, patches=None, frames=None):
+    """Training/eval forward: full logits (B, T, Vp)."""
+    x = _embed(params, cfg, tokens, patches, frames)
+    x, aux = _run_layers(x, params, cfg)
+    return _head(params, cfg, x), aux
+
+
+def loss_fn(params, cfg: ArchConfig, batch: Dict[str, jnp.ndarray]):
+    """Next-token (causal) or per-frame (encoder) cross entropy."""
+    logits, aux = forward(params, cfg,
+                          tokens=batch.get("tokens"),
+                          patches=batch.get("patches"),
+                          frames=batch.get("frames"))
+    labels = batch["labels"]
+    if cfg.frontend == "vision" and batch.get("patches") is not None:
+        logits = logits[:, batch["patches"].shape[1]:]   # text positions only
+    vp = logits.shape[-1]
+    if vp != cfg.vocab:  # mask padded vocab out of the softmax
+        mask = jnp.arange(vp) < cfg.vocab
+        logits = jnp.where(mask, logits, -1e30)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    loss = nll.mean() + aux
+    return loss, {"loss": loss, "nll": nll.mean(), "aux": aux}
+
+
+# --- cache ------------------------------------------------------------------
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> Params:
+    cache: Params = {}
+    if cfg.n_units > 0:
+        def one(kind):
+            return init_layer_cache(cfg, kind, batch, max_len, dtype)
+
+        unit_cache = {str(i): one(kind)
+                      for i, kind in enumerate(cfg.pattern)}
+        cache["units"] = jax.tree.map(
+            lambda a: jnp.zeros((cfg.n_units,) + a.shape, a.dtype),
+            unit_cache)
+    if cfg.tail_kinds:
+        cache["tail"] = {str(i): init_layer_cache(cfg, kind, batch, max_len,
+                                                  dtype)
+                         for i, kind in enumerate(cfg.tail_kinds)}
+    return cache
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, max_len: int,
+                   dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        functools.partial(init_cache, cfg, batch, max_len, dtype))
+
+
+def prefill(params, cfg: ArchConfig, tokens=None, patches=None, frames=None,
+            max_len: Optional[int] = None, cache_dtype=jnp.bfloat16):
+    """Process a prompt; return (last-token logits, populated cache)."""
+    x = _embed(params, cfg, tokens, patches, frames)
+    b, t = x.shape[0], x.shape[1]
+    max_len = max_len or t
+
+    new_units = None
+    if cfg.n_units > 0:
+        def unit_fn(x, unit_p):
+            x = constrain(x, "B", None, None)
+            caches = {}
+            for i, kind in enumerate(cfg.pattern):
+                c0 = init_layer_cache(cfg, kind, b, max_len, cache_dtype)
+                x, caches[str(i)] = layer_prefill(x, unit_p[str(i)], kind,
+                                                  cfg, c0)
+            return x, caches
+
+        x, new_units = jax.lax.scan(unit_fn, x, params["units"])
+    cache: Params = {}
+    if new_units is not None:
+        cache["units"] = new_units
+    if cfg.tail_kinds:
+        cache["tail"] = {}
+        for i, kind in enumerate(cfg.tail_kinds):
+            c0 = init_layer_cache(cfg, kind, b, max_len, cache_dtype)
+            x, cache["tail"][str(i)] = layer_prefill(
+                x, params["tail"][str(i)], kind, cfg, c0)
+    logits = _head(params, cfg, x[:, -1:])[:, 0]
+    return logits, cache
+
+
+def decode_step(params, cfg: ArchConfig, cache, token, pos):
+    """One decode step. token: (B,) int32; pos: scalar int32 absolute
+    position of this token. Returns (logits (B, Vp), new cache)."""
+    x = params["embed"][token[:, None]].astype(jnp.dtype(cfg.dtype))
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+
+    new_units = None
+    if cfg.n_units > 0:
+        def unit_fn(x, scanned):
+            unit_p, unit_c = scanned
+            x = constrain(x, "B", None, None)
+            caches = {}
+            for i, kind in enumerate(cfg.pattern):
+                x, caches[str(i)] = layer_decode(
+                    x, unit_p[str(i)], kind, cfg, unit_c[str(i)], pos)
+            return x, caches
+
+        x, new_units = jax.lax.scan(unit_fn, x,
+                                    (params["units"], cache["units"]))
+    new_cache: Params = {}
+    if new_units is not None:
+        new_cache["units"] = new_units
+    if cfg.tail_kinds:
+        new_cache["tail"] = {}
+        for i, kind in enumerate(cfg.tail_kinds):
+            x, new_cache["tail"][str(i)] = layer_decode(
+                x, params["tail"][str(i)], kind, cfg,
+                cache["tail"][str(i)], pos)
+    logits = _head(params, cfg, x)[:, 0]
+    return logits, new_cache

@@ -1,0 +1,129 @@
+"""Mixture-of-Experts FFN with capacity-based scatter dispatch.
+
+Expert weights are stacked on a leading ``experts`` axis so expert
+parallelism is a plain PartitionSpec('model', ...) — each device owns
+E / tp_size experts, and GSPMD turns the dispatch scatter / combine gather
+into the expert all-to-all.
+
+Dispatch avoids the O(T x E x C) one-hot einsum of the classic GShard
+formulation: position-in-expert comes from a cumsum over the (T*k, E)
+assignment one-hot, then tokens scatter directly into the (E * C, d) expert
+buffer (out-of-capacity tokens fall into a drop slot). The expert FFN itself
+is the paper's fused expand->mix->project sandwich, chunk-streamed over
+d_ff_expert like every other FFN in the framework.
+
+The router runs in f32; an auxiliary load-balance loss (Switch-style
+E * sum(f_e * p_e)) is returned to the caller.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, MoESpec
+from repro.core import fused_ffn as ffnlib
+from repro.runtime.actctx import constrain
+
+Params = Dict[str, Any]
+
+
+def init_moe(key, cfg: ArchConfig) -> Params:
+    m = cfg.moe
+    d, fe = cfg.d_model, m.d_ff_expert
+    ks = jax.random.split(key, 6)
+    p = {
+        "router": jax.random.normal(ks[0], (d, m.n_experts), jnp.float32)
+        * d ** -0.5,
+        "w_up": jax.random.normal(ks[2], (m.n_experts, d, fe), jnp.float32)
+        * d ** -0.5,
+        "w_down": jax.random.normal(ks[3], (m.n_experts, fe, d), jnp.float32)
+        * fe ** -0.5,
+    }
+    if cfg.gated:
+        p["w_gate"] = jax.random.normal(
+            ks[1], (m.n_experts, d, fe), jnp.float32) * d ** -0.5
+    if m.shared_d_ff:
+        fs = m.shared_d_ff
+        p["shared"] = {
+            "w_up": jax.random.normal(ks[4], (d, fs), jnp.float32) * d ** -0.5,
+            "w_down": jax.random.normal(ks[5], (fs, d), jnp.float32) * fs ** -0.5,
+        }
+        if cfg.gated:
+            p["shared"]["w_gate"] = jax.random.normal(
+                jax.random.fold_in(ks[4], 1), (d, fs), jnp.float32) * d ** -0.5
+    return p
+
+
+def capacity(n_tokens: int, m: MoESpec) -> int:
+    c = int(n_tokens * m.top_k / m.n_experts * m.capacity_factor)
+    return max(8, -(-c // 8) * 8)  # multiple of 8, floor 8
+
+
+def moe_layer(x, p: Params, cfg: ArchConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, T, D) -> (y, aux_loss)."""
+    m = cfg.moe
+    b, t, d = x.shape
+    n = b * t
+    xf = x.reshape(n, d)
+    act = ffnlib.ACTS[cfg.act]
+
+    # --- routing (f32) ------------------------------------------------------
+    logits = xf.astype(jnp.float32) @ p["router"]          # (n, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, ids = jax.lax.top_k(probs, m.top_k)             # (n, k)
+    if m.top_k > 1:
+        gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
+
+    # aux load-balance loss: E * sum_e f_e * p_e
+    oh = jax.nn.one_hot(ids[:, 0], m.n_experts, dtype=jnp.float32)
+    f_e = oh.mean(axis=0)
+    p_e = probs.mean(axis=0)
+    aux = m.n_experts * jnp.sum(f_e * p_e) * m.router_aux_weight
+
+    # --- capacity-based scatter dispatch -------------------------------------
+    cap = capacity(n, m)
+    flat_ids = ids.reshape(-1)                              # (n*k,)
+    flat_gates = gates.reshape(-1)
+    oh_all = jax.nn.one_hot(flat_ids, m.n_experts, dtype=jnp.int32)
+    pos = (jnp.cumsum(oh_all, axis=0) - 1)                 # (n*k, E)
+    pos_in_e = jnp.take_along_axis(pos, flat_ids[:, None], axis=1)[:, 0]
+    keep = pos_in_e < cap
+    dest = jnp.where(keep, flat_ids * cap + pos_in_e, m.n_experts * cap)
+
+    x_rep = jnp.repeat(xf, m.top_k, axis=0)                # (n*k, d)
+    buf = jnp.zeros((m.n_experts * cap + 1, d), x.dtype).at[dest].set(x_rep)
+    expert_in = buf[:-1].reshape(m.n_experts, cap, d)      # (E, C, d)
+    # Expert-parallel layout: experts over the model axis, CAPACITY over
+    # data. §Perf iteration 2: without the capacity-D pin GSPMD replicates
+    # the expert compute 16x over the model axis (C 27.4s -> 1.4s, M 96s ->
+    # 58s confirmed); the pin costs +28% collective wire (the pairwise
+    # dispatch exchange) — net max-term win comes with the shard_map
+    # all-to-all dispatch (documented next step in EXPERIMENTS.md).
+    expert_in = constrain(expert_in, "M", "D", None)
+
+    # --- per-expert fused FFN (expand -> mix -> project, batched over E) ----
+    if cfg.gated:
+        h = act(jnp.einsum("ecd,edf->ecf", expert_in, p["w_gate"].astype(x.dtype)))
+        h = h * jnp.einsum("ecd,edf->ecf", expert_in, p["w_up"].astype(x.dtype))
+    else:
+        h = act(jnp.einsum("ecd,edf->ecf", expert_in, p["w_up"].astype(x.dtype)))
+    expert_out = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(x.dtype))
+    expert_out = constrain(expert_out, "M", "D", None)
+
+    # --- combine: gather back + gate-weighted sum over k --------------------
+    flat_out = expert_out.reshape(m.n_experts * cap, d)
+    flat_out = jnp.concatenate([flat_out, jnp.zeros((1, d), x.dtype)], axis=0)
+    back = flat_out[dest] * (flat_gates * keep).astype(x.dtype)[:, None]
+    y = back.reshape(n, m.top_k, d).sum(axis=1)
+
+    # --- shared-expert path (dense, always on) -------------------------------
+    if m.shared_d_ff:
+        sp = p["shared"]
+        y = y + ffnlib.ffn_apply(
+            xf, sp, gated=cfg.gated, act_name=cfg.act,
+            impl=cfg.block_impl, chunk=cfg.ffn_chunk)
+
+    return y.reshape(b, t, d), aux

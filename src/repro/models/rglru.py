@@ -1,0 +1,174 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Structure of one recurrent block (De et al., arXiv:2402.19427):
+
+    x -> [W_gate branch: GeLU]----------------------\
+    x -> [W_in] -> temporal conv1d(w=4) -> RG-LRU -> * -> [W_out] -> y
+
+The temporal conv1d is a *depthwise* convolution over time — structurally
+the paper's depthwise stage (spatial mixing between two pointwise
+projections), which is why the fused-block dataflow applies here verbatim
+(DESIGN.md §5).
+
+RG-LRU recurrence (per channel):
+
+    r_t = sigmoid(x_t W_a + b_a)               recurrence gate
+    i_t = sigmoid(x_t W_x + b_x)               input gate
+    log a_t = -c * softplus(Lambda) * r_t      (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+It is a linear recurrence, so train/prefill use an associative scan
+(O(log T) depth); decode is the O(1) per-token update. The hidden state is
+the only sequence-length-independent memory — which is what makes the
+``long_500k`` cell runnable for this arch.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+Params = Dict[str, Any]
+_C = 8.0
+
+
+def init_rglru_block(key, cfg: ArchConfig) -> Params:
+    d, w = cfg.d_model, cfg.lru_width_
+    ks = jax.random.split(key, 7)
+    # Lambda init so a = sigmoid(Lambda)^c is uniform in [0.9, 0.999]^... —
+    # follow the paper: a^c uniform in [0.9, 0.999].
+    u = jax.random.uniform(ks[5], (w,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(u ** (1.0 / _C) / (1.0 - u ** (1.0 / _C)))  # logit
+    return {
+        "w_gate_br": jax.random.normal(ks[0], (d, w), jnp.float32) * d ** -0.5,
+        "w_in": jax.random.normal(ks[1], (d, w), jnp.float32) * d ** -0.5,
+        "w_out": jax.random.normal(ks[2], (w, d), jnp.float32) * w ** -0.5,
+        "conv_w": jax.random.normal(ks[3], (cfg.conv_width, w), jnp.float32)
+        * cfg.conv_width ** -0.5,
+        "conv_b": jnp.zeros((w,), jnp.float32),
+        # Griffin's gates are block-diagonal per head (w/h x w/h per block).
+        "w_a": jax.random.normal(ks[4], (cfg.n_heads, w // cfg.n_heads,
+                                         w // cfg.n_heads), jnp.float32)
+        * (w // cfg.n_heads) ** -0.5,
+        "b_a": jnp.zeros((w,), jnp.float32),
+        "w_x": jax.random.normal(ks[6], (cfg.n_heads, w // cfg.n_heads,
+                                         w // cfg.n_heads), jnp.float32)
+        * (w // cfg.n_heads) ** -0.5,
+        "b_x": jnp.zeros((w,), jnp.float32),
+        "lambda": lam,
+    }
+
+
+def _blockdiag(x32, w):
+    """x: (..., W) @ block-diagonal (H, W/H, W/H) -> (..., W)."""
+    h, blk, _ = w.shape
+    xs = x32.reshape(x32.shape[:-1] + (h, blk))
+    y = jnp.einsum("...hb,hbc->...hc", xs, w)
+    return y.reshape(x32.shape)
+
+
+def _gates(x, p):
+    """a_t (decay) and gated input for the recurrence; all f32."""
+    x32 = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(_blockdiag(x32, p["w_a"]) + p["b_a"])
+    i = jax.nn.sigmoid(_blockdiag(x32, p["w_x"]) + p["b_x"])
+    log_a = -_C * jax.nn.softplus(p["lambda"]) * r
+    a = jnp.exp(log_a)
+    gated_x = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i * x32)
+    return a, gated_x
+
+
+def rg_lru_scan(x, p) -> jnp.ndarray:
+    """(B, T, W) -> (B, T, W) via associative scan over the linear RNN."""
+    a, bx = _gates(x, p)                      # (B, T, W) each
+
+    def combine(left, right):
+        a_l, b_l = left
+        a_r, b_r = right
+        return a_l * a_r, a_r * b_l + b_r
+
+    a_c, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    del a_c
+    return h.astype(x.dtype)
+
+
+def rg_lru_step(x_t, h_prev, p) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One decode step: x_t (B, W), h_prev (B, W) f32 -> (y, h)."""
+    a, bx = _gates(x_t, p)
+    h = a * h_prev + bx
+    return h.astype(x_t.dtype), h
+
+
+def conv1d_causal(x, w, b):
+    """Depthwise causal temporal conv: (B, T, W), w (K, W)."""
+    k = w.shape[0]
+    acc = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(k):
+        shift = k - 1 - i
+        xi = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1]]
+        acc = acc + xi.astype(jnp.float32) * w[i]
+    return (acc + b).astype(x.dtype)
+
+
+def conv1d_step(x_t, conv_state, w, b):
+    """x_t (B, W); conv_state (B, K-1, W) holds the previous inputs."""
+    window = jnp.concatenate([conv_state, x_t[:, None]], axis=1)  # (B, K, W)
+    y = (window.astype(jnp.float32) * w[None]).sum(axis=1) + b
+    return y.astype(x_t.dtype), window[:, 1:]
+
+
+def init_rglru_cache(cfg: ArchConfig, batch: int,
+                     dtype=jnp.bfloat16) -> Params:
+    w = cfg.lru_width_
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),     # recurrent state: f32
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype),
+    }
+
+
+def rglru_block(x, p: Params, cfg: ArchConfig) -> jnp.ndarray:
+    """Full-sequence recurrent block (train / prefill-no-cache)."""
+    gate = jax.nn.gelu(x @ p["w_gate_br"].astype(x.dtype), approximate=True)
+    rec = x @ p["w_in"].astype(x.dtype)
+    rec = conv1d_causal(rec, p["conv_w"], p["conv_b"])
+    rec = rg_lru_scan(rec, p)
+    return (gate * rec) @ p["w_out"].astype(x.dtype)
+
+
+def rglru_prefill(x, p: Params, cfg: ArchConfig, cache: Params):
+    """Prefill: full-sequence block + final recurrent/conv state."""
+    gate = jax.nn.gelu(x @ p["w_gate_br"].astype(x.dtype), approximate=True)
+    rec_in = x @ p["w_in"].astype(x.dtype)
+    rec = conv1d_causal(rec_in, p["conv_w"], p["conv_b"])
+    a, bx = _gates(rec, p)
+
+    def combine(left, right):
+        a_l, b_l = left
+        a_r, b_r = right
+        return a_l * a_r, a_r * b_l + b_r
+
+    _, h_all = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    y = (gate * h_all.astype(x.dtype)) @ p["w_out"].astype(x.dtype)
+    km1 = cfg.conv_width - 1
+    new_cache = {
+        "h": h_all[:, -1].astype(jnp.float32),
+        "conv": rec_in[:, -km1:].astype(cache["conv"].dtype),
+    }
+    return y, new_cache
+
+
+def rglru_decode(x, p: Params, cfg: ArchConfig, cache: Params):
+    """One-token step: x (B, 1, D)."""
+    xt = x[:, 0]
+    gate = jax.nn.gelu(xt @ p["w_gate_br"].astype(x.dtype), approximate=True)
+    rec = xt @ p["w_in"].astype(x.dtype)
+    rec, conv_state = conv1d_step(rec, cache["conv"].astype(x.dtype),
+                                  p["conv_w"], p["conv_b"])
+    y_rec, h = rg_lru_step(rec, cache["h"], p)
+    y = (gate * y_rec) @ p["w_out"].astype(x.dtype)
+    return y[:, None], {"h": h, "conv": conv_state.astype(cache["conv"].dtype)}

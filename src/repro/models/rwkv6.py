@@ -1,0 +1,265 @@
+"""RWKV-6 (Finch) block: time-mix with data-dependent decay + channel-mix.
+
+Time-mix recurrence per head (head_dim = K = V dims):
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T          (state: K x V matrix)
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+
+with w_t in (0, 1) produced from the token (data-dependent decay — the
+Finch contribution) and u a learned per-channel "bonus" for the current
+token. The channel-mix is the expand -> ReLU^2 -> project sandwich, served
+by the same fused-FFN dataflow as every other block (DESIGN.md §5).
+
+Token-shift mixing uses the static-lerp form (mu parameters); the dynamic
+low-rank ddlerp of the full Finch release refines the same mechanism and is
+omitted for clarity (noted in DESIGN.md §Arch-applicability). Decay w_t
+keeps its data-dependent low-rank parameterization — that is the paper's
+novelty and the thing that distinguishes v6 from v5.
+
+Train/prefill run a lax.scan over time (the state is O(1) in sequence
+length, which is what makes long_500k runnable); decode is the single-step
+update. A chunked matmul formulation is the designated §Perf optimization
+for this arch's compute term.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+Params = Dict[str, Any]
+
+
+def init_rwkv_block(key, cfg: ArchConfig) -> Params:
+    d = cfg.d_model
+    h, hd = cfg.n_rwkv_heads, cfg.rwkv_head_dim
+    dff = cfg.d_ff
+    ks = jax.random.split(key, 12)
+    s = d ** -0.5
+    decay_lora = 64
+    return {
+        # time-mix
+        "mu": jax.random.uniform(ks[0], (5, d), jnp.float32),  # r,k,v,g,w lerps
+        "w_r": jax.random.normal(ks[1], (d, h * hd), jnp.float32) * s,
+        "w_k": jax.random.normal(ks[2], (d, h * hd), jnp.float32) * s,
+        "w_v": jax.random.normal(ks[3], (d, h * hd), jnp.float32) * s,
+        "w_g": jax.random.normal(ks[4], (d, h * hd), jnp.float32) * s,
+        "w_o": jax.random.normal(ks[5], (h * hd, d), jnp.float32) * (h * hd) ** -0.5,
+        # data-dependent decay: w_t = exp(-exp(base + tanh(x A) B))
+        "decay_base": jnp.full((h, hd), -2.0, jnp.float32),
+        "decay_A": jax.random.normal(ks[6], (d, decay_lora), jnp.float32) * s,
+        "decay_B": jax.random.normal(ks[7], (decay_lora, h * hd), jnp.float32)
+        * decay_lora ** -0.5 * 0.1,
+        "bonus_u": jax.random.normal(ks[8], (h, hd), jnp.float32) * 0.1,
+        "ln_x": jnp.ones((h * hd,), jnp.float32),  # per-head group norm scale
+        # channel-mix
+        "cm_mu": jax.random.uniform(ks[9], (2, d), jnp.float32),
+        "cm_k": jax.random.normal(ks[10], (d, dff), jnp.float32) * s,
+        "cm_v": jax.random.normal(ks[11], (dff, d), jnp.float32) * dff ** -0.5,
+        "cm_r": jax.random.normal(jax.random.fold_in(ks[10], 1), (d, d),
+                                  jnp.float32) * s,
+    }
+
+
+def _token_shift(x, x_prev_last=None):
+    """shift(x)_t = x_{t-1}; position 0 uses x_prev_last (decode carry)."""
+    shifted = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    if x_prev_last is not None:
+        shifted = shifted.at[:, 0].set(x_prev_last)
+    return shifted
+
+
+def _time_mix_inputs(x, xs, p, cfg: ArchConfig):
+    """Project token-shift-mixed inputs to r, k, v, g, w (decay)."""
+    h, hd = cfg.n_rwkv_heads, cfg.rwkv_head_dim
+    mu = p["mu"].astype(x.dtype)
+
+    def mix(i):
+        return x + (xs - x) * mu[i]
+
+    b, t, _ = x.shape
+    r = (mix(0) @ p["w_r"].astype(x.dtype)).reshape(b, t, h, hd)
+    k = (mix(1) @ p["w_k"].astype(x.dtype)).reshape(b, t, h, hd)
+    v = (mix(2) @ p["w_v"].astype(x.dtype)).reshape(b, t, h, hd)
+    g = mix(3) @ p["w_g"].astype(x.dtype)
+    xw = mix(4).astype(jnp.float32)
+    dlora = jnp.tanh(xw @ p["decay_A"]) @ p["decay_B"]
+    log_w = -jnp.exp(p["decay_base"].reshape(1, 1, h * hd) + dlora)
+    w = jnp.exp(log_w).reshape(b, t, h, hd)      # decay in (0, 1)
+    return r, k, v, g, w
+
+
+def _group_norm(y, scale, h, hd, eps=64e-5):
+    """Per-head LayerNorm (RWKV's ln_x), y: (..., h, hd)."""
+    y32 = y.astype(jnp.float32)
+    mean = y32.mean(axis=-1, keepdims=True)
+    var = y32.var(axis=-1, keepdims=True)
+    yn = (y32 - mean) * jax.lax.rsqrt(var + eps)
+    return (yn.reshape(*y.shape[:-2], h * hd) * scale).astype(y.dtype)
+
+
+def _wkv_step(S, inp, u):
+    r_t, k_t, v_t, w_t = inp                        # (B, H, K) / (B, H, V)
+    kv = k_t[..., :, None] * v_t[..., None, :]      # (B, H, K, V)
+    y = jnp.einsum("bhk,bhkv->bhv", r_t, S + u[None, :, :, None] * kv)
+    S = w_t[..., :, None] * S + kv
+    return S, y
+
+
+def _wkv_scan(r, k, v, w, u, state0, *, chunk: int = 64):
+    """Sequential WKV with a two-level (chunked) scan.
+
+    r,k,v,w: (B, T, H, K); state0: (B, H, K, V) f32.
+
+    The outer scan iterates time chunks and saves ONLY the chunk-boundary
+    states for the backward pass (T/chunk x |S| instead of T x |S|); each
+    chunk's inner scan is wrapped in jax.checkpoint so its per-step
+    residuals are recomputed during backprop. This is the recompute-over-
+    store trade at the sequence dimension — the same zero-buffer discipline
+    as the fused blocks, applied to recurrent state (DESIGN.md §5).
+    """
+    b, t, h, dk = r.shape
+    pad = (-t) % chunk
+    if pad:
+        zerot = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zerot(r), zerot(k), zerot(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                    constant_values=1.0)   # decay 1 = state passthrough
+    tt = r.shape[1]
+    n_chunks = tt // chunk
+
+    def to_chunks(a):                       # (B, T, H, K)->(C, L, B, H, K)
+        a = a.transpose(1, 0, 2, 3).astype(jnp.float32)
+        return a.reshape(n_chunks, chunk, b, h, a.shape[-1])
+
+    xs = tuple(to_chunks(a) for a in (r, k, v, w))
+
+    @jax.checkpoint
+    def chunk_body(S, blk):
+        S, ys = jax.lax.scan(lambda s, i: _wkv_step(s, i, u), S, blk)
+        return S, ys
+
+    state, ys = jax.lax.scan(chunk_body, state0, xs)
+    ys = ys.reshape(tt, b, h, ys.shape[-1])[:t]
+    return ys.transpose(1, 0, 2, 3), state              # (B, T, H, V)
+
+
+def _wkv_chunk_parallel(r, k, v, w, u, state0, *, chunk: int = 32):
+    """Chunk-PARALLEL WKV: intra-chunk work as dense einsums, state updated
+    once per chunk (§Perf iteration 3 for the rwkv cell).
+
+    The per-token scan reads+writes the (B, H, K, V) state every step —
+    T state round-trips per layer make rwkv the worst memory-bound cell of
+    the whole grid. Rewriting the recurrence per chunk of L tokens:
+
+        y_t = (r_t . c_t) @ S_in                        (inter-chunk, dot)
+            + sum_{s<t} [sum_d r_td k_sd e^(lc_t - lc_(s+1))_d] v_s (intra)
+            + (r_t . u . k_t) @ v_t                     (bonus diagonal)
+        S_out = diag(c_end) S_in + sum_t (k_t . c_end/c_(t+1)) v_t^T
+
+    cuts state traffic by L and puts the work on the MXU. All exponents are
+    differences of a nondecreasing log-decay cumsum with s < t, so every
+    exp() argument is <= 0 — no overflow. Exactness vs the sequential scan
+    is asserted in tests/test_models.py.
+    """
+    b, t, h, dk = r.shape
+    pad = (-t) % chunk
+    if pad:
+        zerot = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zerot(r), zerot(k), zerot(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                    constant_values=1.0)
+    tt = r.shape[1]
+    n_chunks = tt // chunk
+
+    def to_chunks(a):                      # (B,T,H,K) -> (C, B, L, H, K)
+        a = a.astype(jnp.float32).reshape(b, n_chunks, chunk, h, dk)
+        return a.transpose(1, 0, 2, 3, 4)
+
+    rs, ks, vs, ws = (to_chunks(a) for a in (r, k, v, w))
+
+    def chunk_body(S, blk):
+        rc, kc, vc, wc = blk               # (B, L, H, K) each
+        log_w = jnp.log(jnp.maximum(wc, 1e-38))
+        lc = jnp.cumsum(log_w, axis=1) - log_w       # exclusive cumsum lc_t
+        lc_next = lc + log_w                         # inclusive (lc_{t+1})
+        lc_end = lc_next[:, -1]                      # (B, H, K): log prod
+        # inter-chunk: y_t += (r_t . e^{lc_t}) @ S_in
+        y_inter = jnp.einsum("blhk,bhkv->blhv", rc * jnp.exp(lc), S)
+        # intra-chunk: att[t,s] = sum_d r_td k_sd e^{(lc_t - lc_{s+1})_d}
+        z = lc[:, :, None] - lc_next[:, None]        # (B, Lt, Ls, H, K)
+        mask = (jnp.arange(chunk)[:, None] > jnp.arange(chunk)[None, :])
+        z = jnp.where(mask[None, :, :, None, None], z, -jnp.inf)
+        att = jnp.einsum("bthk,bshk,btshk->btsh", rc, kc, jnp.exp(z))
+        # bonus diagonal (the current token's u-weighted contribution)
+        diag = jnp.einsum("bthk,bthk->bth", rc * u[None, None], kc)
+        att = att + diag[:, :, None] * jnp.eye(chunk)[None, :, :, None]
+        y_intra = jnp.einsum("btsh,bshv->bthv", att, vc)
+        # state: S' = diag(e^{lc_end}) S + sum_t (k_t . e^{lc_end-lc_{t+1}}) v_t^T
+        k_dec = kc * jnp.exp(lc_end[:, None] - lc_next)
+        S_new = jnp.exp(lc_end)[..., :, None] * S \
+            + jnp.einsum("blhk,blhv->bhkv", k_dec, vc)
+        return S_new, y_inter + y_intra
+
+    chunk_fn = jax.checkpoint(chunk_body)
+    state, ys = jax.lax.scan(chunk_fn, state0, (rs, ks, vs, ws))
+    ys = ys.transpose(1, 0, 2, 3, 4).reshape(b, tt, h, -1)[:, :t]
+    return ys, state
+
+
+def init_rwkv_cache(cfg: ArchConfig, batch: int,
+                    dtype=jnp.bfloat16) -> Params:
+    h, hd = cfg.n_rwkv_heads, cfg.rwkv_head_dim
+    d = cfg.d_model
+    return {
+        "S": jnp.zeros((batch, h, hd, hd), jnp.float32),  # wkv state: f32
+        "x_tm": jnp.zeros((batch, d), dtype),   # last token (time-mix)
+        "x_cm": jnp.zeros((batch, d), dtype),   # last token (chan-mix)
+    }
+
+
+def time_mix(x, p: Params, cfg: ArchConfig, cache=None):
+    """(B, T, D) -> (y, new_cache or None)."""
+    h, hd = cfg.n_rwkv_heads, cfg.rwkv_head_dim
+    x_prev = None if cache is None else cache["x_tm"].astype(x.dtype)
+    xs = _token_shift(x, x_prev)
+    r, k, v, g, w = _time_mix_inputs(x, xs, p, cfg)
+    b = x.shape[0]
+    state0 = (jnp.zeros((b, h, hd, hd), jnp.float32) if cache is None
+              else cache["S"])
+    if x.shape[1] > 8:      # train/prefill: chunk-parallel (MXU) form
+        y, state = _wkv_chunk_parallel(r, k, v, w, p["bonus_u"], state0)
+    else:                   # decode: per-token state update
+        y, state = _wkv_scan(r, k, v, w, p["bonus_u"], state0)
+    y = _group_norm(y, p["ln_x"], h, hd)
+    y = (y * jax.nn.silu(g)).astype(x.dtype)
+    out = y @ p["w_o"].astype(x.dtype)
+    new_cache = None if cache is None else {
+        **cache, "S": state, "x_tm": x[:, -1].astype(cache["x_tm"].dtype)}
+    return out, new_cache
+
+
+def channel_mix(x, p: Params, cfg: ArchConfig, cache=None):
+    """Expand -> ReLU^2 -> project (+ receptance gate), fused-chunk streamed."""
+    x_prev = None if cache is None else cache["x_cm"].astype(x.dtype)
+    xs = _token_shift(x, x_prev)
+    mu = p["cm_mu"].astype(x.dtype)
+    xk = x + (xs - x) * mu[0]
+    xr = x + (xs - x) * mu[1]
+    recept = jax.nn.sigmoid(xr @ p["cm_r"].astype(x.dtype))
+    if cfg.block_impl == "reference":
+        hmid = jnp.square(jax.nn.relu(xk @ p["cm_k"].astype(x.dtype)))
+        y = hmid @ p["cm_v"].astype(x.dtype)
+    else:  # fused: d_ff streamed in chunks, zero-buffer (core.fused_ffn)
+        from repro.core.fused_ffn import ffn_fused_ungated, relu_sq
+        y = ffn_fused_ungated(xk, p["cm_k"].astype(x.dtype),
+                              p["cm_v"].astype(x.dtype), act=relu_sq,
+                              chunk=cfg.ffn_chunk)
+    y = recept * y
+    new_cache = None if cache is None else {
+        **cache, "x_cm": x[:, -1].astype(cache["x_cm"].dtype)}
+    return y, new_cache

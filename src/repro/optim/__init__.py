@@ -1,0 +1,8 @@
+"""Optimizer substrate (no optax dependency): AdamW, schedules, clipping,
+and int8 gradient compression with error feedback."""
+
+from repro.optim.adamw import (  # noqa: F401
+    OptState, adamw_init, adamw_update, clip_by_global_norm, global_norm)
+from repro.optim.schedule import cosine_warmup  # noqa: F401
+from repro.optim.compression import (  # noqa: F401
+    compress_state_init, compress_decompress)

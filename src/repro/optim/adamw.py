@@ -1,0 +1,81 @@
+"""AdamW (decoupled weight decay) on arbitrary pytrees.
+
+Moments inherit parameter shardings automatically (they are tree_maps of
+the params), so FSDP x TP sharding extends to the optimizer state with no
+extra code — the property the dry-run's memory analysis relies on.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+@dataclasses.dataclass
+class OptState:
+    m: Pytree
+    v: Pytree
+    count: jnp.ndarray
+
+
+jax.tree_util.register_pytree_node(
+    OptState,
+    lambda s: ((s.m, s.v, s.count), None),
+    lambda aux, ch: OptState(*ch))
+
+
+def adamw_init(params: Pytree) -> OptState:
+    zeros = lambda p: jnp.zeros_like(p)
+    return OptState(m=jax.tree.map(zeros, params),
+                    v=jax.tree.map(zeros, params),
+                    count=jnp.zeros((), jnp.int32))
+
+
+def global_norm(tree: Pytree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(grads: Pytree, max_norm: float
+                        ) -> Tuple[Pytree, jnp.ndarray]:
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), gn
+
+
+def adamw_update(grads: Pytree, state: OptState, params: Pytree, *,
+                 lr: jnp.ndarray | float, b1: float = 0.9, b2: float = 0.95,
+                 eps: float = 1e-8, weight_decay: float = 0.1
+                 ) -> Tuple[Pytree, OptState]:
+    """Returns (new_params, new_state). All math in f32."""
+    count = state.count + 1
+    c = count.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** c
+    bc2 = 1.0 - b2 ** c
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1.0 - b1) * g
+        v = b2 * v + (1.0 - b2) * jnp.square(g)
+        mhat = m / bc1
+        vhat = v / bc2
+        step = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, OptState(m=new_m, v=new_v, count=count)

@@ -1,0 +1,53 @@
+"""int8 gradient compression with error feedback.
+
+On multi-pod meshes the pod-axis gradient all-reduce crosses the slow DCN
+link; quantizing gradients to int8 (per-tensor absmax scale) before the
+cross-pod reduce cuts those bytes 4x (vs f32 grads). The quantization error
+is carried to the next step ("error feedback"), which keeps SGD-style
+convergence (Karimireddy et al., 2019).
+
+Implementation note: under GSPMD we cannot intercept the all-reduce
+itself from jit-level code, so the transform quantizes the *gradient
+tensor* (the thing being reduced); the simulated-compression path is
+numerically identical to compress -> reduce -> decompress when scales are
+synchronized, which per-tensor absmax over the *global* (sharded) tensor
+is. The roofline collective term for the pod axis is scaled accordingly in
+repro/roofline (documented there).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def compress_state_init(params: Pytree) -> Pytree:
+    """Error-feedback residuals, one per parameter (f32, param-sharded)."""
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _q_dq(x: jnp.ndarray) -> jnp.ndarray:
+    """Quantize to int8 (per-tensor absmax) and back — the wire format."""
+    amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12)
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q.astype(jnp.float32) * scale
+
+
+def compress_decompress(grads: Pytree, residuals: Pytree
+                        ) -> Tuple[Pytree, Pytree]:
+    """g_hat = QDQ(g + residual); new_residual = (g + residual) - g_hat."""
+    def one(g, r):
+        g32 = g.astype(jnp.float32) + r
+        ghat = _q_dq(g32)
+        return ghat.astype(g.dtype), g32 - ghat
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(residuals)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (treedef.unflatten([o[0] for o in out]),
+            treedef.unflatten([o[1] for o in out]))

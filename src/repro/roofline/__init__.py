@@ -1,0 +1,3 @@
+from repro.roofline.analysis import (  # noqa: F401
+    HW_V5E, CollectiveStats, RooflineReport, collective_stats,
+    roofline_from_compiled, summarize)

@@ -1,0 +1,103 @@
+"""Per-instruction cost attribution over the HLO call graph.
+
+The §Perf loop needs to know *which ops* dominate each roofline term.
+``breakdown(text, n_devices)`` walks the module like hlo_cost but keeps a
+per-instruction ledger scaled by total loop multiplicity, then reports the
+top contributors per category (dot flops / op bytes / collectives) keyed
+by op + shape so repeated instances aggregate.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Optional, Tuple
+
+from repro.roofline import hlo_cost as hc
+
+
+def breakdown(text: str, n_devices: int):
+    comps, entry = hc.parse_hlo(text)
+    flops_by = defaultdict(float)
+    bytes_by = defaultdict(float)
+    coll_by = defaultdict(float)
+    coll_cnt = defaultdict(float)
+
+    def visit(comp_name: str, mult: float, count_bytes: bool):
+        comp = comps[comp_name]
+        for inst in comp.instrs:
+            op = inst.op
+            res_e, res_b = hc._shape_elems_bytes(inst.shape)
+            if op == "while":
+                body = re.search(r"body=%?([\w.\-]+)", inst.attrs)
+                cond = re.search(r"condition=%?([\w.\-]+)", inst.attrs)
+                trips = hc._trip_count(inst, comps)
+                if body:
+                    visit(body.group(1), mult * trips, count_bytes)
+                if cond:
+                    visit(cond.group(1), mult * trips, count_bytes)
+                continue
+            if op in ("fusion", "call", "map", "reduce", "reduce-window",
+                      "scatter", "sort", "conditional", "select-and-scatter"):
+                if op == "reduce":
+                    opr_e = sum(hc._shape_elems_bytes(
+                        comp.shapes.get(o, ""))[0] for o in inst.operands)
+                    flops_by[f"reduce {inst.shape[:48]}"] += mult * opr_e
+                else:
+                    for c in hc._called(inst):
+                        if c in comps:
+                            visit(c, mult, False)
+                if count_bytes:
+                    opr_b = hc._fusion_operand_bytes(inst, comp, comps,
+                                                     res_b)
+                    bytes_by[f"{op} {inst.shape[:48]}"] += mult * (res_b + opr_b)
+                continue
+            if op == "dot":
+                f = hc._dot_flops(inst, comp.shapes)
+                lhs = comp.shapes.get(inst.operands[0], "?")[:40]
+                rhs = comp.shapes.get(inst.operands[1], "?")[:40] \
+                    if len(inst.operands) > 1 else "?"
+                flops_by[f"dot {lhs} x {rhs} -> {inst.shape[:40]}"] += mult * f
+                if count_bytes:
+                    opr_b = sum(hc._shape_elems_bytes(
+                        comp.shapes.get(o, ""))[1] for o in inst.operands)
+                    bytes_by[f"dot -> {inst.shape[:48]}"] += mult * (res_b + opr_b)
+                continue
+            hit = False
+            for c in hc._COLLECTIVES:
+                if op == c or op.startswith(c + "-"):
+                    if not op.endswith("-done"):
+                        cost = hc.Cost()
+                        hc._collective(inst, comp.shapes, n_devices, cost)
+                        key = f"{c} {inst.shape[:56]}"
+                        coll_by[key] += mult * cost.total_coll_bytes
+                        coll_cnt[key] += mult
+                    hit = True
+                    break
+            if hit:
+                if count_bytes:
+                    bytes_by[f"{op} {inst.shape[:48]}"] += mult * res_b
+                continue
+            if op in hc._ZERO_BYTE_OPS:
+                continue
+            if count_bytes:
+                opr_b = sum(hc._shape_elems_bytes(
+                    comp.shapes.get(o, ""))[1] for o in inst.operands)
+                bytes_by[f"{op} {inst.shape[:48]}"] += mult * (res_b + opr_b)
+            flops_by[f"{op} {inst.shape[:48]}"] += mult * res_e
+
+    visit(entry, 1.0, True)
+    return flops_by, bytes_by, coll_by, coll_cnt
+
+
+def print_top(text: str, n_devices: int, k: int = 15):
+    flops_by, bytes_by, coll_by, coll_cnt = breakdown(text, n_devices)
+    print(f"== top {k} FLOP contributors (per device) ==")
+    for key, v in sorted(flops_by.items(), key=lambda kv: -kv[1])[:k]:
+        print(f"  {v:12.4e}  {key}")
+    print(f"== top {k} BYTE contributors (per device) ==")
+    for key, v in sorted(bytes_by.items(), key=lambda kv: -kv[1])[:k]:
+        print(f"  {v / 2**30:10.2f}GiB  {key}")
+    print(f"== top {k} collectives (wire bytes per device) ==")
+    for key, v in sorted(coll_by.items(), key=lambda kv: -kv[1])[:k]:
+        print(f"  {v / 2**30:10.2f}GiB x{coll_cnt[key]:7.0f}  {key}")

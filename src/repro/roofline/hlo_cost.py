@@ -1,0 +1,371 @@
+"""Loop-aware static cost model over optimized HLO text.
+
+XLA's built-in ``compiled.cost_analysis()`` counts a while-loop body ONCE,
+ignoring the trip count — useless for scan-over-layers / microbatch /
+chunked-attention modules where >99% of the work is inside loops. This
+walker parses the optimized HLO, builds the computation call graph, and
+accumulates per-device costs with multiplicity:
+
+    while  -> (body + cond) x known_trip_count   (backend_config, with a
+              fallback to the condition's comparison constant)
+    fusion/call/custom-call -> recurse for FLOPs; BYTES counted only at the
+              call boundary (fusions access operands/results once — that is
+              their purpose)
+    dot    -> 2 x |result| x prod(contracting dims)
+    elementwise -> |result| FLOPs (transcendentals counted as 1; see note)
+    collectives -> wire bytes per the ring model (collective_bytes.py),
+              multiplied by loop trip counts like everything else
+
+Validated against analytic counts in tests/test_roofline.py (exact for
+matmuls and scans of matmuls).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+_ZERO_BYTE_OPS = {
+    "parameter", "get-tuple-element", "tuple", "bitcast", "constant",
+    "iota", "after-all", "partition-id", "replica-id", "bitcast-convert",
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_elems_bytes(s: str) -> Tuple[int, int]:
+    elems = 0
+    byts = 0
+    for m in _SHAPE_RE.finditer(s):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems += n
+        byts += n * _DTYPE_BYTES[dt]
+    return elems, byts
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape: str          # result shape text
+    op: str
+    operands: List[str]
+    attrs: str          # raw remainder (contracting dims, trip counts, ...)
+    raw: str = ""       # full instruction line
+
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\(.*?\)|\S+)\s+([\w\-]+)\((.*)$")
+
+
+def _split_operands(argstr: str) -> Tuple[List[str], str]:
+    """Split 'a, b, c), attr=1, ...' -> ([a, b, c], 'attr=1, ...')."""
+    depth = 0
+    for i, ch in enumerate(argstr):
+        if ch in "([{":
+            depth += 1
+        elif ch == ")" and depth == 0:
+            ops = argstr[:i]
+            attrs = argstr[i + 1:]
+            names = re.findall(r"%([\w.\-]+)", ops)
+            return names, attrs
+        elif ch in ")]}":
+            depth -= 1
+    return re.findall(r"%([\w.\-]+)", argstr), ""
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    shapes: Dict[str, str]       # instr name -> result shape text
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        header = re.match(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\((.*)\)\s*->.*\{\s*$",
+                          line)
+        if header and not line.lstrip().startswith("%param"):
+            cur = Computation(header.group(2), [], {})
+            comps[cur.name] = cur
+            if header.group(1):
+                entry = cur.name
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, shape, op, rest = m.groups()
+        operands, attrs = _split_operands(rest)
+        inst = Instr(name=name, shape=shape, op=op, operands=operands,
+                     attrs=attrs, raw=line)
+        cur.instrs.append(inst)
+        cur.shapes[name] = shape
+    return comps, entry
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    transcendental: float = 0.0
+    coll_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
+    coll_counts: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def __iadd__(self, other: "Cost"):
+        self.flops += other.flops
+        self.bytes += other.bytes
+        self.transcendental += other.transcendental
+        for k, v in other.coll_bytes.items():
+            self.coll_bytes[k] = self.coll_bytes.get(k, 0.0) + v
+        for k, v in other.coll_counts.items():
+            self.coll_counts[k] = self.coll_counts.get(k, 0.0) + v
+        return self
+
+    def scaled(self, f: float) -> "Cost":
+        return Cost(self.flops * f, self.bytes * f, self.transcendental * f,
+                    {k: v * f for k, v in self.coll_bytes.items()},
+                    {k: v * f for k, v in self.coll_counts.items()})
+
+    @property
+    def total_coll_bytes(self) -> float:
+        return sum(self.coll_bytes.values())
+
+
+_TRANSCENDENTAL = {"exp", "exponential", "log", "tanh", "rsqrt", "sqrt",
+                   "power", "sine", "cosine", "logistic",
+                   "exponential-minus-one", "log-plus-one", "atan2"}
+
+
+def _dot_flops(inst: Instr, shapes: Dict[str, str]) -> float:
+    res_elems, _ = _shape_elems_bytes(inst.shape)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", inst.attrs)
+    cdims = [int(x) for x in m.group(1).split(",")] if m and m.group(1) else []
+    lhs_shape = shapes.get(inst.operands[0], "") if inst.operands else ""
+    sm = _SHAPE_RE.search(lhs_shape)
+    contract = 1
+    if sm and sm.group(2):
+        dims = [int(x) for x in sm.group(2).split(",")]
+        for c in cdims:
+            if c < len(dims):
+                contract *= dims[c]
+    return 2.0 * res_elems * contract
+
+
+def _group_size(attrs: str, default: int) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", attrs)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", attrs)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def _collective(inst: Instr, shapes: Dict[str, str], n_devices: int,
+                cost: Cost):
+    base = None
+    for c in _COLLECTIVES:
+        if inst.op == c or inst.op.startswith(c + "-"):
+            base = c
+            break
+    if base is None or inst.op.endswith("-done"):
+        return
+    g = _group_size(inst.attrs, n_devices)
+    _, res_b = _shape_elems_bytes(inst.shape)
+    opr_b = sum(_shape_elems_bytes(shapes.get(o, ""))[1]
+                for o in inst.operands)
+    frac = (g - 1) / g if g > 1 else 0.0
+    if base == "all-gather":
+        b = frac * res_b
+    elif base == "reduce-scatter":
+        b = frac * opr_b
+    elif base == "all-reduce":
+        b = 2.0 * frac * opr_b
+    elif base == "all-to-all":
+        b = frac * opr_b
+    else:
+        b = opr_b
+    cost.coll_bytes[base] = cost.coll_bytes.get(base, 0.0) + b
+    cost.coll_counts[base] = cost.coll_counts.get(base, 0.0) + 1
+
+
+def _trip_count(inst: Instr, comps: Dict[str, Computation]) -> float:
+    m = re.search(r'known_trip_count.*?"?n"?\s*[:=]\s*"?(\d+)', inst.attrs)
+    if m:
+        return float(m.group(1))
+    # fallback: the condition computation compares against a constant
+    cm = re.search(r"condition=%?([\w.\-]+)", inst.attrs)
+    if cm and cm.group(1) in comps:
+        for ci in comps[cm.group(1)].instrs:
+            if ci.op == "constant":
+                mm = re.search(r"constant\((\d+)\)", ci.raw)
+                if mm:
+                    return float(mm.group(1))
+    return 1.0
+
+
+def _called(inst: Instr) -> List[str]:
+    out = []
+    for key in ("calls", "to_apply", "body", "condition"):
+        m = re.search(key + r"=%?([\w.\-]+)", inst.attrs)
+        if m:
+            out.append(m.group(1))
+    m = re.search(r"called_computations=\{([^}]*)\}", inst.attrs)
+    if m:
+        out += [c.strip().lstrip("%") for c in m.group(1).split(",")]
+    return out
+
+
+def _fusion_operand_bytes(inst: Instr, comp: "Computation",
+                          comps: Dict[str, "Computation"],
+                          res_b: int) -> float:
+    """Operand bytes of a fusion, with slice-aware accounting.
+
+    A fusion that dynamic-slices a big buffer (scan xs inside a while
+    body) reads only the slice on TPU; likewise a fused
+    dynamic-update-slice writes in place. XLA-CPU's buffer shuffling would
+    charge the FULL stacked buffer every iteration — a pure lowering
+    artifact that would dominate every scanned module's memory term. Rule:
+    when the fusion's computation contains dynamic-(update-)slice/gather
+    and an operand is >16x the result, charge one result-size read for it.
+    """
+    has_slice = False
+    for c in _called(inst):
+        if c in comps:
+            for ci in comps[c].instrs:
+                if ci.op in ("dynamic-slice", "dynamic-update-slice",
+                             "gather", "scatter"):
+                    has_slice = True
+                    break
+        if has_slice:
+            break
+    total = 0.0
+    for o in inst.operands:
+        ob = _shape_elems_bytes(comp.shapes.get(o, ""))[1]
+        if has_slice and res_b > 0 and ob > 16 * res_b:
+            total += res_b
+        else:
+            total += ob
+    return total
+
+
+def compute_cost(comps: Dict[str, Computation], root: str, n_devices: int,
+                 *, count_bytes: bool = True,
+                 _memo: Optional[Dict] = None) -> Cost:
+    """Cost of one invocation of computation ``root``."""
+    if _memo is None:
+        _memo = {}
+    key = (root, count_bytes)
+    if key in _memo:
+        return _memo[key]
+    comp = comps[root]
+    total = Cost()
+    for inst in comp.instrs:
+        op = inst.op
+        _, res_b = _shape_elems_bytes(inst.shape)
+        res_e, _ = _shape_elems_bytes(inst.shape)
+        if op == "while":
+            body = re.search(r"body=%?([\w.\-]+)", inst.attrs)
+            cond = re.search(r"condition=%?([\w.\-]+)", inst.attrs)
+            trips = _trip_count(inst, comps)
+            inner = Cost()
+            if body:
+                inner += compute_cost(comps, body.group(1), n_devices,
+                                      count_bytes=count_bytes, _memo=_memo)
+            if cond:
+                inner += compute_cost(comps, cond.group(1), n_devices,
+                                      count_bytes=count_bytes, _memo=_memo)
+            total += inner.scaled(trips)
+            continue
+        if op in ("fusion", "call", "map", "reduce", "reduce-window",
+                  "scatter", "sort", "conditional", "select-and-scatter"):
+            if op == "reduce":
+                # one combiner application per input element (approx)
+                opr_e = sum(_shape_elems_bytes(comp.shapes.get(o, ""))[0]
+                            for o in inst.operands)
+                total.flops += opr_e
+            else:
+                # FLOPs: recurse into called computations (x1).
+                for c in _called(inst):
+                    if c in comps:
+                        total += compute_cost(
+                            comps, c, n_devices,
+                            count_bytes=False, _memo=_memo)
+            if count_bytes and op not in _ZERO_BYTE_OPS:
+                total.bytes += res_b + _fusion_operand_bytes(
+                    inst, comp, comps, res_b)
+            continue
+        if op == "dot":
+            total.flops += _dot_flops(inst, comp.shapes)
+            if count_bytes:
+                opr_b = sum(_shape_elems_bytes(comp.shapes.get(o, ""))[1]
+                            for o in inst.operands)
+                total.bytes += res_b + opr_b
+            continue
+        if op == "convolution":
+            # flops = 2 * |result| * prod(kernel spatial) * C_in (approx via
+            # kernel operand size / C_out)
+            kshape = comp.shapes.get(inst.operands[1], "") if len(inst.operands) > 1 else ""
+            ke, _ = _shape_elems_bytes(kshape)
+            # |kernel| = prod(spatial) * Cin * Cout ; flops = 2*|res|*|kernel|/Cout
+            # Cout = last dim of result for NHWC; use res last dim
+            sm = _SHAPE_RE.search(inst.shape)
+            cout = int(sm.group(2).split(",")[-1]) if sm and sm.group(2) else 1
+            total.flops += 2.0 * res_e * (ke / max(cout, 1))
+            if count_bytes:
+                opr_b = sum(_shape_elems_bytes(comp.shapes.get(o, ""))[1]
+                            for o in inst.operands)
+                total.bytes += res_b + opr_b
+            continue
+        for c in _COLLECTIVES:
+            if inst.op == c or inst.op.startswith(c + "-"):
+                _collective(inst, comp.shapes, n_devices, total)
+                if count_bytes:
+                    total.bytes += res_b
+                break
+        else:
+            # plain op
+            if op in _TRANSCENDENTAL:
+                total.transcendental += res_e
+                total.flops += res_e
+            elif op not in _ZERO_BYTE_OPS:
+                total.flops += res_e
+            if count_bytes and op not in _ZERO_BYTE_OPS:
+                opr_b = sum(_shape_elems_bytes(comp.shapes.get(o, ""))[1]
+                            for o in inst.operands)
+                total.bytes += res_b + opr_b
+    _memo[key] = total
+    return total
+
+
+def hlo_cost(text: str, n_devices: int) -> Cost:
+    comps, entry = parse_hlo(text)
+    if entry is None:
+        # fall back to the computation named like the module entry
+        entry = next(iter(comps))
+    return compute_cost(comps, entry, n_devices)

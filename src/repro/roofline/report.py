@@ -1,0 +1,78 @@
+"""Aggregate results/dryrun/*.json into the §Roofline table (markdown).
+
+    PYTHONPATH=src python -m repro.roofline.report [--dir results/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List
+
+ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(d: str) -> List[Dict]:
+    out = []
+    for f in sorted(os.listdir(d)):
+        if f.endswith(".json"):
+            with open(os.path.join(d, f)) as fh:
+                out.append(json.load(fh))
+    return out
+
+
+def fmt_s(x) -> str:
+    if x is None:
+        return "-"
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    return f"{x * 1e3:.2f}ms"
+
+
+def table(records: List[Dict], mesh: str) -> str:
+    rows = [r for r in records if r.get("mesh") == mesh or
+            (r.get("status") == "n/a" and r.get("mesh") == mesh)]
+    rows.sort(key=lambda r: (r["arch"], ORDER.index(r["shape"])
+                             if r["shape"] in ORDER else 9))
+    lines = [
+        "| arch | shape | compute | memory | collective | bound | "
+        "MFU* | useful | mem/dev (args+temp) |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r.get("status") == "n/a":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | N/A |"
+                         f" — | — | {r['reason']} |")
+            continue
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | ERROR: "
+                         f"{r.get('error', '?')} | | | | | | |")
+            continue
+        mem = r.get("memory", {})
+        args_gib = (mem.get("argument_bytes") or 0) / 2 ** 30
+        temp_gib = (mem.get("temp_bytes") or 0) / 2 ** 30
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(r['t_compute'])} | "
+            f"{fmt_s(r['t_memory'])} | {fmt_s(r['t_collective'])} | "
+            f"{r['bottleneck']} | {r['mfu_proxy'] * 100:.1f}% | "
+            f"{r['useful_flops_frac'] * 100:.1f}% | "
+            f"{args_gib:.2f}+{temp_gib:.2f} GiB |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=os.path.join(
+        os.path.dirname(__file__), "..", "..", "..", "results", "dryrun"))
+    args = ap.parse_args()
+    recs = load(args.dir)
+    for mesh in ("single", "multi"):
+        n_ok = sum(1 for r in recs if r.get("mesh") == mesh
+                   and r.get("status") == "ok")
+        print(f"\n## mesh = {mesh} ({n_ok} cells compiled)\n")
+        print(table(recs, mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+"""Trace-time activation-sharding context.
+
+Model code is mesh-agnostic; the step builders wrap tracing in
+``activation_mesh(mesh)`` so the model's ``constrain()`` calls resolve to
+real NamedShardings. Outside the context (smoke tests, single device)
+``constrain`` is a no-op.
+
+Why this exists: GSPMD propagates *weight* shardings well, but loses the
+batch sharding at representation-changing ops (e.g. the microbatch
+reshape (B,) -> (n_micro, B/n_micro) when n_micro < the data-axis size).
+One lost constraint lets the partitioner re-shard activations onto the
+model axis and replicate the batch — silently costing 16x compute. The
+``constrain`` calls at layer boundaries pin the intended data layout.
+
+Placeholders:
+    "B"  -> the batch axes ("pod","data") / ("data",)   (dropped if the
+            dim does not divide)
+    "M"  -> the "model" axis (dropped if the dim does not divide)
+    None -> unsharded
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_TLS = threading.local()
+
+
+@contextlib.contextmanager
+def activation_mesh(mesh: Optional[Mesh]):
+    prev = getattr(_TLS, "mesh", None)
+    _TLS.mesh = mesh
+    try:
+        yield
+    finally:
+        _TLS.mesh = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_TLS, "mesh", None)
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def constrain(x, *spec):
+    """with_sharding_constraint honoring the context; no-op without one.
+
+    Placeholders: "B" batch axes (pod+data), "D" the FSDP axis (data
+    only — weights never shard across pods), "M" the model axis.
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    if any(d <= 0 for d in getattr(x, "shape", ())):
+        return x
+    resolved = []
+    for dim, s in zip(x.shape, spec):
+        if s == "B":
+            ax = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+            size = _axis_size(mesh, ax)
+            resolved.append(ax if dim % size == 0 and dim >= size else None)
+        elif s in ("M", "D"):
+            name = "model" if s == "M" else "data"
+            size = mesh.shape[name]
+            resolved.append(name if dim % size == 0 and dim >= size
+                            else None)
+        else:
+            resolved.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*resolved)))
+
+
+# --- backward-pass dtype guard ----------------------------------------------
+# f32 accumulators inside fused attention/losses are correct, but their
+# cotangents must not leak f32 into the (bf16) residual stream: one f32
+# cotangent at a matmul boundary turns every downstream gradient tensor,
+# fusion and all-reduce into f32 — 2x bytes on the whole backward pass.
+
+import jax.numpy as jnp  # noqa: E402
+
+
+@jax.custom_vjp
+def grad_dtype_guard(x):
+    """Identity whose backward casts the cotangent to x's dtype."""
+    return x
+
+
+def _gdg_fwd(x):
+    return x, jnp.empty((0,), x.dtype)
+
+
+def _gdg_bwd(res, g):
+    return (g.astype(res.dtype),)
+
+
+grad_dtype_guard.defvjp(_gdg_fwd, _gdg_bwd)

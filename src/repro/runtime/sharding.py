@@ -1,0 +1,233 @@
+"""Sharding rules: ArchConfig + mesh -> PartitionSpec for every tensor.
+
+Strategy (DESIGN.md §6): hybrid **FSDP x TP**.
+
+* ``model`` mesh axis = tensor parallelism: d_ff columns, attention heads,
+  experts, vocab.
+* ``data`` mesh axis = FSDP: the *other* matrix dim of every weight, plus
+  the batch dim of activations.
+* ``pod``  mesh axis (multi-pod mesh only) = pure data parallelism:
+  weights replicated across pods, batch sharded; the only cross-pod
+  collective is the once-per-step gradient all-reduce (DCN-friendly).
+
+Divisibility guard: a dim is sharded on an axis only if it divides evenly;
+otherwise that dim is replicated (recorded by ``explain()``). This is what
+keeps e.g. qwen3's 40 heads or glm4's kv=2 lowerable on a 16-way model
+axis — attention weights fall back to FSDP-only while the (dominant) FFN
+weights stay TP-sharded.
+
+Rules are keyed on parameter path names from the model zoo's pytrees; the
+same table serves every assigned arch.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Pytree = Any
+
+
+def mesh_axis_size(mesh: Mesh, axis: Optional[str]) -> int:
+    if axis is None:
+        return 1
+    return int(np.prod([mesh.shape[a] for a in _astuple(axis)]))
+
+
+def _astuple(axis):
+    return axis if isinstance(axis, tuple) else (axis,)
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Batch shards over pod+data when the pod axis exists."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+# ---------------------------------------------------------------------------
+# Per-parameter rules
+# ---------------------------------------------------------------------------
+
+# (regex on the leaf path, spec builder). The builder gets the leaf shape
+# and the mesh; axes that don't divide are dropped to None.
+# fsdp = "data" (never "pod": weights replicate across pods).
+
+def _spec(shape, mesh, axes):
+    """Build a PartitionSpec, dropping any axis that doesn't divide."""
+    out = []
+    for dim, ax in zip(shape, axes):
+        if ax is None:
+            out.append(None)
+            continue
+        size = mesh_axis_size(mesh, ax)
+        out.append(ax if dim % size == 0 and size > 1 else None)
+    return P(*out)
+
+
+_RULES = [
+    # embeddings / head.
+    # The embed table shards d_model over "model", NOT vocab: a gather with
+    # a sharded vocab dim forces GSPMD into "involuntary full
+    # rematerialization" (replicate-then-reshard) — sharding the feature
+    # dim keeps both the lookup and its scatter-add gradient local.
+    (r"embed$", lambda s, m: _spec(s, m, (None, "model"))),
+    (r"lm_head$", lambda s, m: _spec(s, m, ("data", "model"))),
+    # attention
+    (r"sub1/wq$", lambda s, m: _spec(s, m, ("data", "model", None))),
+    (r"sub1/wk$", lambda s, m: _spec(s, m, ("data", "model", None))),
+    (r"sub1/wv$", lambda s, m: _spec(s, m, ("data", "model", None))),
+    (r"sub1/wo$", lambda s, m: _spec(s, m, ("model", None, "data"))),
+    (r"sub1/b[qkv]$", lambda s, m: _spec(s, m, ("model", None))),
+    (r"sub1/[qk]_norm$", lambda s, m: P(None)),
+    # dense FFN
+    (r"sub2/w_gate$", lambda s, m: _spec(s, m, ("data", "model"))),
+    (r"sub2/w_up$", lambda s, m: _spec(s, m, ("data", "model"))),
+    (r"sub2/w_down$", lambda s, m: _spec(s, m, ("model", "data"))),
+    # MoE: experts over model (EP), FSDP inside each expert
+    (r"sub2/router$", lambda s, m: _spec(s, m, ("data", None))),
+    (r"sub2/shared/w_gate$", lambda s, m: _spec(s, m, ("data", "model"))),
+    (r"sub2/shared/w_up$", lambda s, m: _spec(s, m, ("data", "model"))),
+    (r"sub2/shared/w_down$", lambda s, m: _spec(s, m, ("model", "data"))),
+    # (MoE expert tensors are 3-D and matched before these 2-D rules by the
+    #  shape check inside _spec_for)
+    # RG-LRU
+    (r"sub1/w_gate_br$", lambda s, m: _spec(s, m, ("data", "model"))),
+    (r"sub1/w_in$", lambda s, m: _spec(s, m, ("data", "model"))),
+    (r"sub1/w_out$", lambda s, m: _spec(s, m, ("model", "data"))),
+    (r"sub1/conv_w$", lambda s, m: _spec(s, m, (None, "model"))),
+    (r"sub1/conv_b$", lambda s, m: _spec(s, m, ("model",))),
+    (r"sub1/w_[ax]$", lambda s, m: _spec(s, m, ("model", None, None))),
+    (r"sub1/b_[ax]$", lambda s, m: _spec(s, m, ("model",))),
+    (r"sub1/lambda$", lambda s, m: _spec(s, m, ("model",))),
+    # RWKV time-mix: heads (40) don't divide 16 -> shard flat h*hd columns
+    # on model only where they divide; state math is per-head so keep the
+    # projections data-sharded, model-replicated (DESIGN.md §6 note).
+    (r"sub1/w_[rkvg]$", lambda s, m: _spec(s, m, ("data", None))),
+    (r"sub1/w_o$", lambda s, m: _spec(s, m, (None, "data"))),
+    (r"sub1/decay_A$", lambda s, m: _spec(s, m, ("data", None))),
+    (r"sub1/decay_B$", lambda s, m: P(None, None)),
+    (r"sub1/(decay_base|bonus_u)$", lambda s, m: P(None, None)),
+    (r"sub1/(ln_x|mu|cm_mu)$", lambda s, m: P(None)),
+    # RWKV channel-mix
+    (r"sub1/cm_k$", lambda s, m: _spec(s, m, ("data", "model"))),
+    (r"sub1/cm_v$", lambda s, m: _spec(s, m, ("model", "data"))),
+    (r"sub1/cm_r$", lambda s, m: _spec(s, m, ("data", None))),
+    # norms
+    (r"(norm1|norm2|post_norm1|post_norm2|final_norm)$",
+     lambda s, m: P(None)),
+]
+
+_MOE_3D = {
+    "sub2/w_gate": ("model", "data", None),
+    "sub2/w_up": ("model", "data", None),
+    "sub2/w_down": ("model", None, "data"),
+}
+
+
+def _spec_for(path: str, shape, mesh: Mesh) -> P:
+    # MoE expert weights are 3-D versions of the FFN names.
+    for suffix, axes in _MOE_3D.items():
+        if path.endswith(suffix) and "shared" not in path and len(shape) == 3:
+            return _spec(shape, mesh, axes)
+    for pat, fn in _RULES:
+        if re.search(pat, path):
+            return fn(shape, mesh)
+    if len(shape) <= 1:                  # scalars / odd vectors: replicate
+        return P(None) if shape else P()
+    raise ValueError(f"no sharding rule for param {path!r} shape {shape}")
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+def param_specs(abstract_params: Pytree, mesh: Mesh) -> Pytree:
+    """PartitionSpec tree matching the params tree.
+
+    Stacked unit params (leading n_units axis) get None prepended.
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(abstract_params)
+    specs = []
+    for path, leaf in flat:
+        ps = _path_str(path)
+        stacked = "units/" in ps
+        shape = leaf.shape[1:] if stacked else leaf.shape
+        # normalize tail params to the same rule names
+        key = re.sub(r"^(units|tail)/\d+/", "", ps)
+        spec = _spec_for(key, shape, mesh)
+        if stacked:
+            spec = P(None, *spec)
+        specs.append(spec)
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def param_shardings(abstract_params: Pytree, mesh: Mesh) -> Pytree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(abstract_params, mesh))
+
+
+# ---------------------------------------------------------------------------
+# Activation / batch / cache specs
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(cfg, mesh: Mesh, batch_abstract: Pytree) -> Pytree:
+    """Shard every batch tensor on its leading (global-batch) dim."""
+    da = data_axes(mesh)
+    dsize = mesh_axis_size(mesh, da)
+
+    def one(leaf):
+        if leaf.shape and leaf.shape[0] % dsize == 0 and leaf.shape[0] > 1:
+            return P(da)
+        return P()
+    return jax.tree.map(one, batch_abstract)
+
+
+def cache_specs(cfg, mesh: Mesh, cache_abstract: Pytree) -> Pytree:
+    """KV/state caches: batch dim sharded; kv-head dim sharded over model
+    when divisible. Stacked (units) leading axis -> None."""
+    da = data_axes(mesh)
+    dsize = mesh_axis_size(mesh, da)
+    msize = mesh_axis_size(mesh, "model")
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_abstract)
+    out = []
+    for path, leaf in flat:
+        ps = _path_str(path)
+        stacked = "units/" in ps
+        shape = leaf.shape[1:] if stacked else leaf.shape
+        name = ps.rsplit("/", 1)[-1]
+        spec: Tuple = ()
+        if name in ("k", "v"):          # (B, S, Hkv, hd)
+            bs = da if shape[0] % dsize == 0 and shape[0] > 1 else None
+            hs = "model" if shape[2] % msize == 0 else None
+            # kv heads rarely divide the TP axis; shard the SEQUENCE dim
+            # instead (ring-attention-style cache residency) — without it a
+            # 32k cache for a 72B model is 160 GiB/device.
+            ss = ("model" if hs is None and shape[1] % msize == 0
+                  and shape[1] >= msize else None)
+            spec = (bs, ss, hs, None)
+        elif name == "S":               # rwkv state (B, H, K, V)
+            bs = da if shape[0] % dsize == 0 and shape[0] > 1 else None
+            spec = (bs,) + (None,) * (len(shape) - 1)
+        else:                           # h / conv / x_tm / x_cm: (B, ...)
+            bs = da if shape and shape[0] % dsize == 0 and shape[0] > 1 else None
+            last = ("model" if shape and shape[-1] % msize == 0
+                    and name in ("h", "conv") else None)
+            spec = (bs,) + (None,) * (len(shape) - 2) + (last,) \
+                if len(shape) >= 2 else (bs,)
+        if stacked:
+            spec = (None,) + spec
+        out.append(P(*spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def explain(abstract_params: Pytree, mesh: Mesh) -> Dict[str, str]:
+    """Human-readable map path -> spec (for DESIGN.md / debugging)."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(abstract_params)
+    specs = jax.tree.leaves(
+        param_specs(abstract_params, mesh), is_leaf=lambda x: isinstance(x, P))
+    return {_path_str(p): str(s) for (p, _), s in zip(flat, specs)}

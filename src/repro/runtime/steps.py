@@ -1,0 +1,288 @@
+"""Step builders: the jitted train / prefill / decode functions.
+
+``build_train_step(cfg, mesh, train)`` returns a function
+
+    (state, batch) -> (state, metrics)
+
+with explicit in/out shardings, donation of the state, microbatched
+gradient accumulation (the accumulation loop is a lax.scan, so the HLO
+stays O(1) in the number of microbatches and XLA overlaps the pod-axis
+gradient reduce with the next microbatch's compute), optional int8
+gradient compression with error feedback, global-norm clipping, AdamW and
+a cosine schedule.
+
+``build_prefill_step`` / ``build_decode_step`` are the serving pair the
+decode-shape cells lower: decode donates the cache (in-place KV update).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.models import lm
+from repro.optim import (OptState, adamw_init, adamw_update,
+                         clip_by_global_norm, compress_decompress,
+                         compress_state_init, cosine_warmup)
+from repro.runtime import sharding as shd
+from repro.runtime.actctx import activation_mesh, constrain
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainSpec:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    weight_decay: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    clip_norm: float = 1.0
+    grad_compression: bool = False   # int8 + error feedback (pod-axis DCN)
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Pytree
+    opt: OptState
+    step: jnp.ndarray
+    grad_residual: Optional[Pytree] = None   # error feedback (compression)
+
+
+jax.tree_util.register_pytree_node(
+    TrainState,
+    lambda s: ((s.params, s.opt, s.step, s.grad_residual), None),
+    lambda aux, ch: TrainState(*ch))
+
+
+def init_train_state(cfg: ArchConfig, key, train: TrainSpec) -> TrainState:
+    params = lm.init_params(cfg, key)
+    return TrainState(
+        params=params, opt=adamw_init(params),
+        step=jnp.zeros((), jnp.int32),
+        grad_residual=(compress_state_init(params)
+                       if train.grad_compression else None))
+
+
+def abstract_train_state(cfg: ArchConfig, train: TrainSpec) -> TrainState:
+    return jax.eval_shape(
+        functools.partial(init_train_state, cfg, train=train),
+        jax.random.PRNGKey(0))
+
+
+def train_state_shardings(cfg: ArchConfig, mesh: Mesh, train: TrainSpec,
+                          abstract: Optional[TrainState] = None):
+    abstract = abstract or abstract_train_state(cfg, train)
+    pspecs = shd.param_specs(abstract.params, mesh)
+    named = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t)
+    return TrainState(
+        params=named(pspecs),
+        opt=OptState(m=named(pspecs), v=named(pspecs),
+                     count=NamedSharding(mesh, P())),
+        step=NamedSharding(mesh, P()),
+        grad_residual=(named(pspecs) if train.grad_compression else None))
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+
+def build_train_step(cfg: ArchConfig, mesh: Mesh, train: TrainSpec,
+                     shape: InputShape,
+                     donate: bool = True) -> Callable:
+    """Returns jitted (state, batch) -> (state, metrics)."""
+    da = shd.data_axes(mesh)
+    # Each microbatch must still shard its batch dim over all data axes:
+    # clamp n_micro so B/n_micro stays a multiple of the data-axis size
+    # (multi-pod halves the max microbatch count automatically).
+    dsize = shd.mesh_axis_size(mesh, da)
+    n_micro = max(1, min(cfg.microbatch_for(shape.name),
+                         shape.global_batch // max(dsize, 1)))
+
+    def loss_for(params, batch):
+        return lm.loss_fn(params, cfg, batch)
+
+    def step_fn(state: TrainState, batch: Dict[str, jnp.ndarray]):
+      # activation_mesh: trace-time context so the model's constrain()
+      # calls pin the batch-sharded activation layout (see actctx.py).
+      with activation_mesh(mesh):
+        params = state.params
+
+        if n_micro == 1:
+            (_, metrics), grads = jax.value_and_grad(
+                lambda p: loss_for(p, batch), has_aux=True)(params)
+        else:
+            # Split batch into microbatches and accumulate grads in f32.
+            def micro(batch_i):
+                (l, met), g = jax.value_and_grad(
+                    lambda p: loss_for(p, batch_i), has_aux=True)(params)
+                return g, met
+
+            def resh_one(x):
+                y = x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:])
+                # the (B,)->(n_micro, B/n_micro) reshape must keep dim 1
+                # batch-sharded; without this pin GSPMD replicates it
+                return constrain(y, None, "B", *([None] * (y.ndim - 2)))
+
+            resh = jax.tree.map(resh_one, batch)
+
+            def scan_body(acc, batch_i):
+                batch_i = jax.tree.map(
+                    lambda x: constrain(x, "B", *([None] * (x.ndim - 1))),
+                    batch_i)
+                g, met = micro(batch_i)
+                acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), acc, g)
+                return acc, met
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            gsum, mets = jax.lax.scan(scan_body, zeros, resh)
+            grads = jax.tree.map(lambda g: g / n_micro, gsum)
+            metrics = jax.tree.map(lambda m: m.mean(), mets)
+
+        # --- gradient compression (int8 + error feedback) -------------------
+        residual = state.grad_residual
+        if train.grad_compression:
+            grads, residual = compress_decompress(grads, residual)
+
+        # --- clip + AdamW ----------------------------------------------------
+        grads, gnorm = clip_by_global_norm(grads, train.clip_norm)
+        lr = cosine_warmup(state.step, peak_lr=train.peak_lr,
+                           warmup_steps=train.warmup_steps,
+                           total_steps=train.total_steps)
+        new_params, new_opt = adamw_update(
+            grads, state.opt, params, lr=lr, b1=train.b1, b2=train.b2,
+            weight_decay=train.weight_decay)
+        new_state = TrainState(params=new_params, opt=new_opt,
+                               step=state.step + 1, grad_residual=residual)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        metrics["lr"] = lr
+        return new_state, metrics
+
+    abstract = abstract_train_state(cfg, train)
+    state_sh = train_state_shardings(cfg, mesh, train, abstract)
+    batch_abs = abstract_batch(cfg, shape)
+    batch_sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                            shd.batch_specs(cfg, mesh, batch_abs))
+    return jax.jit(
+        step_fn,
+        in_shardings=(state_sh, batch_sh),
+        out_shardings=(state_sh, NamedSharding(mesh, P())),
+        donate_argnums=(0,) if donate else ())
+
+
+# ---------------------------------------------------------------------------
+# Serving steps
+# ---------------------------------------------------------------------------
+
+
+def build_prefill_step(cfg: ArchConfig, mesh: Mesh, shape: InputShape):
+    """(params, batch) -> (last logits, cache). Params in bf16."""
+    max_len = shape.seq_len
+
+    def fn(params, batch):
+        with activation_mesh(mesh):
+            return lm.prefill(params, cfg, tokens=batch.get("tokens"),
+                              patches=batch.get("patches"),
+                              frames=batch.get("frames"), max_len=max_len)
+
+    abs_p = lm.abstract_params(cfg, dtype=jnp.bfloat16)
+    p_sh = shd.param_shardings(abs_p, mesh)
+    batch_abs = abstract_batch(cfg, shape)
+    b_sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        shd.batch_specs(cfg, mesh, batch_abs))
+    abs_cache = lm.abstract_cache(cfg, shape.global_batch, max_len)
+    c_sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        shd.cache_specs(cfg, mesh, abs_cache))
+    logits_sh = NamedSharding(mesh, P(shd.data_axes(mesh), "model"))
+    return jax.jit(fn, in_shardings=(p_sh, b_sh),
+                   out_shardings=(logits_sh, c_sh))
+
+
+def build_encode_step(cfg: ArchConfig, mesh: Mesh, shape: InputShape):
+    """Encoder-only archs: full-sequence forward (B, T, V) logits."""
+    def fn(params, batch):
+        with activation_mesh(mesh):
+            logits, _ = lm.forward(params, cfg, tokens=batch.get("tokens"),
+                                   patches=batch.get("patches"),
+                                   frames=batch.get("frames"))
+            return logits
+
+    abs_p = lm.abstract_params(cfg, dtype=jnp.bfloat16)
+    p_sh = shd.param_shardings(abs_p, mesh)
+    batch_abs = abstract_batch(cfg, shape)
+    b_sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        shd.batch_specs(cfg, mesh, batch_abs))
+    out_sh = NamedSharding(mesh, P(shd.data_axes(mesh), None, None))
+    return jax.jit(fn, in_shardings=(p_sh, b_sh), out_shardings=out_sh)
+
+
+def build_decode_step(cfg: ArchConfig, mesh: Mesh, shape: InputShape,
+                      donate: bool = True):
+    """(params, cache, token, pos) -> (logits, cache); cache donated."""
+    def fn(params, cache, token, pos):
+        with activation_mesh(mesh):
+            return lm.decode_step(params, cfg, cache, token, pos)
+
+    abs_p = lm.abstract_params(cfg, dtype=jnp.bfloat16)
+    p_sh = shd.param_shardings(abs_p, mesh)
+    abs_cache = lm.abstract_cache(cfg, shape.global_batch, shape.seq_len)
+    c_sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        shd.cache_specs(cfg, mesh, abs_cache))
+    da = shd.data_axes(mesh)
+    dsize = shd.mesh_axis_size(mesh, da)
+    tok_sh = NamedSharding(
+        mesh, P(da) if shape.global_batch % dsize == 0
+        and shape.global_batch > 1 else P())
+    logits_sh = NamedSharding(
+        mesh, P(da if shape.global_batch % dsize == 0
+                and shape.global_batch > 1 else None, "model"))
+    return jax.jit(fn,
+                   in_shardings=(p_sh, c_sh, tok_sh, NamedSharding(mesh, P())),
+                   out_shardings=(logits_sh, c_sh),
+                   donate_argnums=(1,) if donate else ())
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs (ShapeDtypeStruct stand-ins — the dry-run contract)
+# ---------------------------------------------------------------------------
+
+
+def abstract_batch(cfg: ArchConfig, shape: InputShape) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of one cell."""
+    b, t = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    out: Dict[str, Any] = {}
+    if shape.kind == "decode":
+        # decode lowers (token, pos) separately — see decode_inputs()
+        raise ValueError("use decode_inputs() for decode shapes")
+    if cfg.frontend == "audio":
+        out["frames"] = sds((b, t, cfg.d_model), jnp.bfloat16)
+    else:
+        out["tokens"] = sds((b, t), jnp.int32)
+        if cfg.frontend == "vision":
+            out["patches"] = sds((b, cfg.n_patches, cfg.d_model),
+                                 jnp.bfloat16)
+    if shape.kind == "train":
+        out["labels"] = sds((b, t), jnp.int32)
+    return out
+
+
+def decode_inputs(cfg: ArchConfig, shape: InputShape):
+    """(cache, token, pos) stand-ins for a decode cell."""
+    sds = jax.ShapeDtypeStruct
+    cache = lm.abstract_cache(cfg, shape.global_batch, shape.seq_len)
+    token = sds((shape.global_batch,), jnp.int32)
+    pos = sds((), jnp.int32)
+    return cache, token, pos

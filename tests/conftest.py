@@ -1,0 +1,40 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests must see the
+real (single-device) CPU; only launch/dryrun.py forces 512 host devices,
+and multi-device tests spawn subprocesses (tests/test_distributed.py)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+def f32_smoke(name):
+    """Reduced config in f32 with no-drop MoE (for exact-ish comparisons)."""
+    from repro.configs import registry
+    cfg = dataclasses.replace(registry.get_smoke(name), dtype="float32")
+    if cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(
+                cfg.moe, capacity_factor=float(cfg.moe.n_experts)))
+    return cfg
+
+
+def make_batch(cfg, b, t, seed=0):
+    rng = np.random.default_rng(seed)
+    batch = {}
+    if cfg.frontend == "audio":
+        batch["frames"] = rng.standard_normal((b, t, cfg.d_model)).astype(np.float32)
+    else:
+        batch["tokens"] = rng.integers(0, cfg.vocab, (b, t)).astype(np.int32)
+        if cfg.frontend == "vision":
+            batch["patches"] = rng.standard_normal(
+                (b, cfg.n_patches, cfg.d_model)).astype(np.float32) * 0.02
+    batch["labels"] = rng.integers(0, cfg.vocab, (b, t)).astype(np.int32)
+    return batch

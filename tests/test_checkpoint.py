@@ -1,0 +1,68 @@
+"""Checkpointing: atomicity, retention, async, elastic restore."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointManager, latest_step,
+                              restore_checkpoint, save_checkpoint)
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"params": {"w": jnp.asarray(rng.standard_normal((4, 4)),
+                                        jnp.float32),
+                       "b": jnp.asarray(rng.standard_normal(4), jnp.float32)},
+            "step": jnp.asarray(7, jnp.int32)}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    t = _tree()
+    save_checkpoint(str(tmp_path), 7, t)
+    abstract = jax.eval_shape(lambda: t)
+    r = restore_checkpoint(str(tmp_path), abstract)
+    np.testing.assert_array_equal(np.asarray(t["params"]["w"]),
+                                  np.asarray(r["params"]["w"]))
+    assert int(r["step"]) == 7
+
+
+def test_latest_step_and_retention(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), period=1, keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.maybe_save(s, _tree(s), force=True)
+        mgr.wait()
+    assert latest_step(str(tmp_path)) == 4
+    kept = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert len(kept) == 2                      # retention
+    r = mgr.restore_latest(jax.eval_shape(lambda: _tree()))
+    np.testing.assert_array_equal(np.asarray(r["params"]["w"]),
+                                  np.asarray(_tree(4)["params"]["w"]))
+
+
+def test_atomicity_tmp_dirs_ignored(tmp_path):
+    save_checkpoint(str(tmp_path), 1, _tree(1))
+    # simulate a crash mid-save: leftover .tmp directory
+    os.makedirs(tmp_path / "step_00000002.tmp")
+    assert latest_step(str(tmp_path)) == 1
+    r = restore_checkpoint(str(tmp_path), jax.eval_shape(lambda: _tree()))
+    assert int(r["step"]) == 7
+
+
+def test_restore_shape_mismatch_raises(tmp_path):
+    save_checkpoint(str(tmp_path), 1, _tree())
+    bad = jax.eval_shape(
+        lambda: {"params": {"w": jnp.zeros((2, 2)), "b": jnp.zeros(4)},
+                 "step": jnp.zeros((), jnp.int32)})
+    with pytest.raises(ValueError, match="shape mismatch"):
+        restore_checkpoint(str(tmp_path), bad)
+
+
+def test_async_save_overlaps_and_waits(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), period=2, keep=5)
+    assert not mgr.maybe_save(1, _tree())      # not on period
+    assert mgr.maybe_save(2, _tree())
+    mgr.wait()
+    assert latest_step(str(tmp_path)) == 2

@@ -1,0 +1,76 @@
+"""Fault tolerance: watchdog, injected preemption, restart determinism."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import registry
+from repro.configs.base import InputShape
+from repro.data import SyntheticLMData
+from repro.runtime import steps as steps_mod
+from repro.runtime.fault import (DriverReport, FailureInjector, TrainDriver,
+                                 Watchdog)
+
+
+def test_watchdog_flags_stragglers():
+    w = Watchdog(alpha=0.5, threshold=2.0, warmup=1)
+    flags = [w.observe(i, dt) for i, dt in
+             enumerate([0.1, 0.1, 0.1, 0.5, 0.1])]
+    assert flags == [False, False, False, True, False]
+    assert len(w.stragglers) == 1 and w.stragglers[0]["step"] == 3
+    # the straggler must not poison the EWMA
+    assert w.ewma == pytest.approx(0.1, rel=0.05)
+
+
+def test_injector_fires_once():
+    inj = FailureInjector([3])
+    inj.check(2)
+    with pytest.raises(RuntimeError):
+        inj.check(3)
+    inj.check(3)   # second time: no raise
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = registry.get_smoke("glm4-9b")
+    shape = InputShape("train_4k", 16, 4, "train")
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    train = steps_mod.TrainSpec(peak_lr=1e-3, warmup_steps=2,
+                                total_steps=50)
+    step = steps_mod.build_train_step(cfg, mesh, train, shape, donate=False)
+    data = SyntheticLMData(cfg, shape, seed=11)
+    init = lambda: steps_mod.init_train_state(cfg, jax.random.PRNGKey(1),
+                                              train)
+    return step, init, data, cfg, mesh, train
+
+
+def test_restart_is_bit_deterministic(setup, tmp_path):
+    step, init, data, cfg, mesh, train = setup
+    ckpt = CheckpointManager(str(tmp_path), period=3, keep=3)
+    drv = TrainDriver(step_fn=step, init_state_fn=init,
+                      batch_at=data.batch_at, ckpt=ckpt,
+                      failure_injector=FailureInjector([5]))
+    rep: DriverReport = drv.run(8, log_every=1000, log=lambda s: None)
+    assert rep.restarts == 1
+    assert rep.final_step == 8
+
+    # uninterrupted reference run
+    state = init()
+    for i in range(8):
+        state, m = step(state, data.batch_at(i))
+    assert rep.metrics_history[-1]["loss"] == pytest.approx(
+        float(np.asarray(m["loss"])), abs=1e-6)
+
+
+def test_driver_raises_after_max_restarts(setup, tmp_path):
+    step, init, data, *_ = setup
+    ckpt = CheckpointManager(str(tmp_path), period=100, keep=1)
+    drv = TrainDriver(step_fn=step, init_state_fn=init,
+                      batch_at=data.batch_at, ckpt=ckpt,
+                      failure_injector=FailureInjector([0, 1, 2]),
+                      max_restarts=2)
+    # three injected failures but only 2 restarts allowed
+    with pytest.raises(RuntimeError):
+        drv.run(4, log_every=1000, log=lambda s: None)

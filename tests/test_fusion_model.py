@@ -1,0 +1,49 @@
+"""The calibrated cycle model must reproduce the paper's measurements:
+Fig. 14 speedups (27.4x / 46.3x / 59.3x for layer 3) and Table III(A)."""
+
+import pytest
+
+from repro.core.dsc import DSCBlockSpec
+from repro.core.fusion import Schedule, modeled_cycles, speedup_table
+
+LAYERS = {
+    "3rd": (DSCBlockSpec(cin=8, cmid=48, cout=8), 40),
+    "5th": (DSCBlockSpec(cin=16, cmid=96, cout=16), 20),
+    "8th": (DSCBlockSpec(cin=24, cmid=144, cout=24), 10),
+    "15th": (DSCBlockSpec(cin=56, cmid=336, cout=56), 5),
+}
+
+# Table III(A): baseline (v0) and our-v3 total cycles
+TABLE_III = {"3rd": (109.7e6, 1.8e6), "5th": (46.1e6, 1.4e6),
+             "8th": (20.5e6, 0.76e6), "15th": (18.2e6, 1.0e6)}
+
+
+def test_fig14_layer3_speedup_progression():
+    spec, hw = LAYERS["3rd"]
+    tbl = speedup_table(spec, hw, hw)
+    # paper: 27.4x, 46.3x, 59.3x — model within 10%
+    assert tbl["v1"].speedup_vs_v0 == pytest.approx(27.4, rel=0.10)
+    assert tbl["v2"].speedup_vs_v0 == pytest.approx(46.3, rel=0.10)
+    assert tbl["v3"].speedup_vs_v0 == pytest.approx(59.3, rel=0.10)
+
+
+def test_speedups_monotonic_for_all_layers():
+    for name, (spec, hw) in LAYERS.items():
+        tbl = speedup_table(spec, hw, hw)
+        assert (tbl["v0"].cycles > tbl["v1"].cycles
+                > tbl["v2"].cycles), name
+        # v3 >= v2 up to the pipeline fill-tick artifact on tiny (5x5)
+        # feature maps: v3 has 4 fill ticks vs v2's 2, which the model
+        # does not amortize for n_px = 25 (within 3%).
+        assert tbl["v3"].cycles < tbl["v2"].cycles * 1.03, name
+
+
+@pytest.mark.parametrize("layer", list(TABLE_III))
+def test_table_iii_absolute_cycles(layer):
+    spec, hw = LAYERS[layer]
+    v0_want, v3_want = TABLE_III[layer]
+    v0 = modeled_cycles(spec, hw, hw, Schedule.V0_LAYER_BY_LAYER)
+    v3 = modeled_cycles(spec, hw, hw, Schedule.V3_INTRA_STAGE)
+    # calibrated model: within 35% absolute on every published number
+    assert v0 == pytest.approx(v0_want, rel=0.35)
+    assert v3 == pytest.approx(v3_want, rel=0.35)

@@ -1,0 +1,51 @@
+"""End-to-end MobileNetV2 int8: the paper's target network."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.fusion import Schedule
+from repro.models import mobilenetv2 as mnv2
+
+
+@pytest.fixture(scope="module")
+def net():
+    return mnv2.init_and_quantize(jax.random.PRNGKey(0), img_hw=80)
+
+
+@pytest.fixture(scope="module")
+def img():
+    return np.random.default_rng(0).standard_normal((80, 80, 3)).astype(np.float32)
+
+
+def test_paper_blocks_have_paper_shapes(net):
+    names = [n for n, *_ in mnv2.PAPER_BLOCKS]
+    for want in ("3rd", "5th", "8th", "15th"):
+        assert want in names
+    # 5th block: F1/F2 = 20x20x96 => 38.4 KB buffer (paper §III-A)
+    b5 = dict(zip(names, net.blocks))["5th"]
+    assert b5.spec.cmid == 96
+    assert 20 * 20 * 96 == 38_400
+
+
+def test_all_schedules_end_to_end_identical(net, img):
+    ref = np.asarray(mnv2.forward_int8(img, net,
+                                       schedule=Schedule.V0_LAYER_BY_LAYER))
+    for sched in (Schedule.V1_PIXEL_SEQUENTIAL, Schedule.V2_INTER_STAGE,
+                  Schedule.V3_INTRA_STAGE):
+        out = np.asarray(mnv2.forward_int8(img, net, schedule=sched))
+        np.testing.assert_array_equal(ref, out, err_msg=str(sched))
+
+
+def test_pallas_kernel_end_to_end_identical(net, img):
+    ref = np.asarray(mnv2.forward_int8(img, net,
+                                       schedule=Schedule.V0_LAYER_BY_LAYER))
+    out = np.asarray(mnv2.forward_int8(img, net, use_pallas=True))
+    np.testing.assert_array_equal(ref, out)
+
+
+def test_batched_inference(net):
+    imgs = np.random.default_rng(1).standard_normal((4, 80, 80, 3)).astype(np.float32)
+    logits = mnv2.forward_batch(imgs, net, schedule=Schedule.V3_INTRA_STAGE)
+    assert logits.shape == (4, 2)
+    assert np.isfinite(np.asarray(logits)).all()

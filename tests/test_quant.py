@@ -1,0 +1,59 @@
+"""Property tests for the TFLite-int8 arithmetic (paper §III post-processing)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quant
+
+
+@given(st.lists(st.floats(-100, 100), min_size=2, max_size=64))
+@settings(max_examples=50, deadline=None)
+def test_quantize_roundtrip_error_bounded(vals):
+    x = np.asarray(vals, np.float32)
+    qp = quant.choose_qparams(x)
+    q = np.asarray(quant.quantize(x, qp))
+    deq = np.asarray(quant.dequantize(q, qp))
+    # round-trip error <= scale/2 inside the representable range
+    scale = float(np.asarray(qp.scale))
+    assert np.all(np.abs(deq - np.clip(x, deq.min() - scale, deq.max() + scale))
+                  <= scale * 0.500001 + 1e-6)
+
+
+@given(st.floats(1e-6, 10.0))
+@settings(max_examples=100, deadline=None)
+def test_quantize_multiplier_reconstructs(real):
+    qm, shift = quant.quantize_multiplier(real)
+    approx = qm * 2.0 ** (shift - 31)
+    assert abs(approx - real) / real < 1e-6
+
+
+@given(st.integers(-2**20, 2**20), st.floats(1e-4, 0.5))
+@settings(max_examples=200, deadline=None)
+def test_fixedpoint_requant_matches_float_within_1lsb(acc, eff):
+    """The paper's silicon (int32 mul + shift) vs the TPU float path."""
+    acc_a = np.asarray([acc], np.int64)
+    qm, shift = quant.quantize_multiplier(eff)
+    fx = quant.requantize_fixedpoint_np(acc_a, qm, shift, zp_out=0)
+    fl = np.asarray(quant.requantize(acc_a.astype(np.int32),
+                                     np.float32(eff), 0))
+    assert abs(int(fx[0]) - int(fl[0])) <= 1
+
+
+def test_zero_point_folding_identity():
+    """acc(raw int8 stream) + folded bias == acc(zero-point-corrected)."""
+    rng = np.random.default_rng(0)
+    x_q = rng.integers(-128, 128, (5, 16)).astype(np.int64)
+    w_q = rng.integers(-128, 128, (16, 8)).astype(np.int64)
+    zp = 7
+    direct = (x_q - zp) @ w_q
+    folded = x_q @ w_q + quant.fold_zero_point_correction(w_q, zp, (0,))
+    np.testing.assert_array_equal(direct, folded)
+
+
+def test_per_channel_weight_quant_zero_zp():
+    rng = np.random.default_rng(1)
+    w = rng.standard_normal((16, 8)).astype(np.float32)
+    qp = quant.choose_qparams(w, channel_axis=1)
+    assert qp.zero_point == 0
+    assert qp.scale_arr().shape == (8,)

@@ -1,0 +1,51 @@
+"""Paper Eq. 1/2 + Tables VI data-movement claims, reproduced exactly."""
+
+import pytest
+
+from repro.core.dsc import DSCBlockSpec
+from repro.core.traffic import (block_traffic, ffn_traffic_reduction,
+                                intermediate_feature_bytes,
+                                min_sram_buffer_bytes, network_traffic)
+
+# (paper layer, spec, H=W) — Table VI workloads
+PAPER_LAYERS = [
+    ("3rd", DSCBlockSpec(cin=8, cmid=48, cout=8, stride=1), 40, 307_200),
+    ("5th", DSCBlockSpec(cin=16, cmid=96, cout=16, stride=1), 20, 153_600),
+    ("8th", DSCBlockSpec(cin=24, cmid=144, cout=24, stride=1), 10, 57_600),
+    ("15th", DSCBlockSpec(cin=56, cmid=336, cout=56, stride=1), 5, 33_600),
+]
+
+
+@pytest.mark.parametrize("name,spec,hw,want", PAPER_LAYERS)
+def test_table_vi_intermediate_bytes_exact(name, spec, hw, want):
+    assert intermediate_feature_bytes(spec, hw, hw) == want
+
+
+def test_eq2_buffer_38_4kb_for_5th_layer():
+    spec = DSCBlockSpec(cin=16, cmid=96, cout=16, stride=1)
+    assert min_sram_buffer_bytes(spec, 20, 20) == 38_400   # 38.4 KB
+
+
+def test_87_percent_reduction_claim():
+    """Paper abstract: 'reducing the data movement UP TO 87%' — the best
+    per-block reduction hits 87%; the four-layer aggregate stays > 80%."""
+    per_block = [block_traffic(s, hw, hw, n).reduction_pct
+                 for n, s, hw, _ in PAPER_LAYERS]
+    assert max(per_block) == pytest.approx(87.0, abs=2.0)
+    rows = [(n, s, hw, hw) for n, s, hw, _ in PAPER_LAYERS]
+    agg = network_traffic(rows)
+    assert agg["reduction_pct"] > 80.0
+
+
+def test_fused_total_is_io_plus_weights_only():
+    name, spec, hw, _ = PAPER_LAYERS[1]
+    t = block_traffic(spec, hw, hw)
+    assert t.fused_total < t.baseline_total
+    assert t.intermediate_bytes == t.baseline_total - t.fused_total
+
+
+def test_lm_ffn_generalization_reduction():
+    """DESIGN.md §3: the same counting on a transformer FFN."""
+    r = ffn_traffic_reduction(tokens=4096, d_model=8192, d_ff=29568)
+    assert 0.0 < r["reduction_pct"] < 100.0
+    assert r["fused_bytes"] < r["baseline_bytes"]
