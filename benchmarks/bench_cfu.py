@@ -1,0 +1,54 @@
+"""CFU instruction-level simulation: Table III(A) / V / VI analogues.
+
+Unlike the analytic benches (bench_speedup / bench_energy / bench_traffic),
+every number here is *measured from an instruction stream*: the paper's
+four bottleneck layers are compiled to the CFU ISA under the three
+schedules (layer-by-layer via DRAM, layer-by-layer via SRAM, fused
+pixel-wise) and walked by the timing model. The byte counts are asserted
+to match core.traffic's Eq. 1/2 exactly, and a bit-exactness smoke check
+runs the encoded binary through the golden executor against
+core.dsc.dsc_block_reference.
+"""
+
+import jax
+import numpy as np
+
+from repro.cfu.compiler import CFUSchedule, compile_block
+from repro.cfu.executor import run_program
+from repro.cfu.report import (build_layer_reports, table_iii_lines,
+                              table_v_lines, table_vi_lines)
+from repro.core import dsc, quant
+from repro.core.dsc import DSCBlockSpec
+
+
+def _verify_bit_exact(report):
+    """Golden-executor smoke: encoded binary vs core/dsc, exact equality."""
+    spec = DSCBlockSpec(cin=8, cmid=48, cout=8, stride=1)
+    hw = 10
+    key = jax.random.PRNGKey(0)
+    p32 = dsc.init_dsc_block_f32(key, spec)
+    calib = np.asarray(jax.random.normal(key, (hw, hw, spec.cin)))
+    qp = dsc.quantize_dsc_block(p32, spec, calib)
+    x_q = np.asarray(quant.quantize(calib, qp.qp_in))
+    ref = np.asarray(dsc.dsc_block_reference(x_q, qp))
+    for sched in CFUSchedule:
+        y = run_program(compile_block(spec, hw, hw, sched), x_q, [qp])
+        ok = np.array_equal(y, ref)
+        report(f"# executor bit-exact vs dsc_block_reference "
+               f"[{sched.value}]: {ok}")
+        assert ok, f"CFU executor diverged under {sched.value}"
+
+
+def run(report):
+    _verify_bit_exact(report)
+    rows = build_layer_reports()
+    for line in table_iii_lines(rows):
+        report(line)
+    for line in table_vi_lines(rows):
+        report(line)
+    for line in table_v_lines(rows):
+        report(line)
+
+
+if __name__ == "__main__":
+    run(print)

@@ -14,23 +14,16 @@ The claim being validated is the paper's: the fused dataflow's energy win
 comes almost entirely from eliminated intermediate movement, not from MACs.
 """
 
-from repro.core.dsc import DSCBlockSpec
+from repro.cfu.report import PAPER_LAYERS as LAYERS
+from repro.cfu.timing import (E_DRAM_BYTE, E_MAC_INT8, E_RF_BYTE,
+                              E_SRAM_BYTE)
 from repro.core.traffic import (intermediate_feature_bytes, io_bytes,
                                 min_sram_buffer_bytes, weight_bytes)
 
-# pJ per op / per byte (Horowitz ISSCC'14-derived, int8, ~28-40 nm class)
-E_MAC_INT8 = 0.2          # pJ per int8 MAC
-E_SRAM_BYTE = 1.25        # pJ per byte, large on-chip SRAM
-E_RF_BYTE = 0.1           # pJ per byte, register file / pipeline regs
-E_DRAM_BYTE = 160.0       # pJ per byte, off-chip DRAM
-
-LAYERS = [
-    ("3rd", DSCBlockSpec(cin=8, cmid=48, cout=8), 40),
-    ("5th", DSCBlockSpec(cin=16, cmid=96, cout=16), 20),
-    ("8th", DSCBlockSpec(cin=24, cmid=144, cout=24), 10),
-    ("15th", DSCBlockSpec(cin=56, cmid=336, cout=56), 5),
-]
-
+# pJ-per-op/byte constants (Horowitz ISSCC'14-derived, int8, ~28-40 nm
+# class) are defined once in repro.cfu.timing and shared with the
+# instruction-level simulator so the analytic table and the measured
+# bench_cfu numbers price energy identically.
 
 def energies(spec, hw):
     macs = sum(spec.macs(hw, hw).values())

@@ -16,16 +16,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.cfu.report import PAPER_LAYERS as LAYERS
 from repro.core import dsc, quant
-from repro.core.dsc import DSCBlockSpec
 from repro.core.fusion import Schedule, speedup_table
-
-LAYERS = [
-    ("3rd", DSCBlockSpec(cin=8, cmid=48, cout=8), 40),
-    ("5th", DSCBlockSpec(cin=16, cmid=96, cout=16), 20),
-    ("8th", DSCBlockSpec(cin=24, cmid=144, cout=24), 10),
-    ("15th", DSCBlockSpec(cin=56, cmid=336, cout=56), 5),
-]
 
 PAPER_V0 = {"3rd": 109.7e6, "5th": 46.1e6, "8th": 20.5e6, "15th": 18.2e6}
 PAPER_V3 = {"3rd": 1.8e6, "5th": 1.4e6, "8th": 0.76e6, "15th": 1.0e6}

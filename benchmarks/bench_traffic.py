@@ -9,28 +9,27 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.cfu.report import PAPER_LAYERS as LAYERS
 from repro.core import dsc, quant
-from repro.core.dsc import DSCBlockSpec
 from repro.core.traffic import block_traffic, network_traffic
 from repro.roofline.hlo_cost import hlo_cost
 
-LAYERS = [
-    ("3rd", DSCBlockSpec(cin=8, cmid=48, cout=8), 40, 307_200, 14.0e6),
-    ("5th", DSCBlockSpec(cin=16, cmid=96, cout=16), 20, 153_600, 7.6e6),
-    ("8th", DSCBlockSpec(cin=24, cmid=144, cout=24), 10, 57_600, 2.7e6),
-    ("15th", DSCBlockSpec(cin=56, cmid=336, cout=56), 5, 33_600, 1.8e6),
-]
+# Paper Table VI's published intermediate-byte counts per layer (the
+# cycle column of the paper's table backs the 45.6 cycles/byte constant
+# documented in core/fusion.py).
+PAPER_INTER_BYTES = {"3rd": 307_200, "5th": 153_600,
+                     "8th": 57_600, "15th": 33_600}
 
 
 def run(report):
     report("# Table VI: intermediate feature-map traffic (analytic, bytes)")
     report("layer,intermediate_bytes,paper_bytes,buffer_bytes(Eq2),"
            "reduction_pct")
-    for name, spec, hw, paper_bytes, _ in LAYERS:
+    for name, spec, hw in LAYERS:
         t = block_traffic(spec, hw, hw, name)
-        report(f"{name},{t.intermediate_bytes},{paper_bytes},"
+        report(f"{name},{t.intermediate_bytes},{PAPER_INTER_BYTES[name]},"
                f"{t.buffer_bytes},{t.reduction_pct:.1f}")
-    agg = network_traffic([(n, s, hw, hw) for n, s, hw, _, _ in LAYERS])
+    agg = network_traffic([(n, s, hw, hw) for n, s, hw in LAYERS])
     report(f"# aggregate reduction over the four layers: "
            f"{agg['reduction_pct']:.1f}%  (paper: 'up to 87%')")
 
@@ -40,7 +39,7 @@ def run(report):
     report("# boundary IS the block's HBM traffic; XLA-CPU has no VMEM")
     report("# level, hence the boundary is computed from the kernel jaxpr).")
     report("layer,hlo_bytes_reference,kernel_boundary_bytes,reduction_pct")
-    for name, spec, hw, _, _ in LAYERS:
+    for name, spec, hw in LAYERS:
         key = jax.random.PRNGKey(0)
         p32 = dsc.init_dsc_block_f32(key, spec)
         calib = np.asarray(jax.random.normal(key, (hw, hw, spec.cin)))

@@ -10,14 +10,15 @@ tooling can parse it; see EXPERIMENTS.md for the interpreted tables.
 import argparse
 import time
 
-from benchmarks import (bench_energy, bench_ffn_fusion, bench_speedup,
-                        bench_traffic)
+from benchmarks import (bench_cfu, bench_energy, bench_ffn_fusion,
+                        bench_speedup, bench_traffic)
 
 BENCHES = {
     "speedup": bench_speedup,        # Fig. 14 / Table III(A)
     "traffic": bench_traffic,        # Table VI + 87% claim
     "energy": bench_energy,          # Table V analogue
     "ffn_fusion": bench_ffn_fusion,  # Table VII / LM generalization
+    "cfu": bench_cfu,                # Tables III/V/VI from the CFU simulator
 }
 
 

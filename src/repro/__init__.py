@@ -1,0 +1,2 @@
+"""Reproduction of 'RISC-V Based TinyML Accelerator for Depthwise
+Separable Convolutions in Edge AI' — see README.md and ROADMAP.md."""

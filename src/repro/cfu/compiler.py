@@ -1,0 +1,198 @@
+"""Block compiler: lower ``DSCBlockSpec`` chains to CFU instruction streams.
+
+Three schedules, matching the execution disciplines of ``core.dsc`` /
+``core.traffic``:
+
+* ``LAYER_DRAM`` — layer-by-layer with F1/F2 materialized off-chip: three
+  full passes (expansion at input resolution, depthwise, projection), every
+  intermediate written to and read back from DRAM (paper Eq. 1 traffic).
+* ``LAYER_SRAM`` — same passes, intermediates in the on-chip SRAM scratch
+  (paper Eq. 2: requires an H*W*M-byte F1 buffer).
+* ``FUSED``      — the paper's pixel-wise dataflow: per output pixel
+  LD_WIN -> EXP_MAC -> REQUANT F1 -> DW_MAC -> REQUANT F2 -> PROJ_MAC ->
+  REQUANT OUT [-> RES_ADD] -> ST_PX; F1/F2 never reach a memory space.
+
+Memory layout: a bump allocator per space. Block inputs/outputs always live
+in DRAM (the paper streams block IO off-chip; the CFU owns no persistent
+feature-map storage). Layer-by-layer scratch (F1/F2) has single-block
+lifetime, so the scratch arena is reused across blocks and the reported
+SRAM footprint is the maximum over blocks, which is what a real allocator
+would provision.
+
+For a multi-block network the stream is simply concatenated per-block
+programs: CFG / SET_BASE / LD_WGT prologue, then the pixel loops, with
+block i's output region becoming block i+1's input region. The stem / head
+/ classifier of ``models.mobilenetv2`` run on the scalar core in the
+paper's system and are not lowered here — the CFU accelerates the
+bottleneck (DSC) chain.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Dict, List, Sequence, Tuple
+
+from repro.cfu import isa
+from repro.cfu.isa import Instr, Program
+from repro.core.dsc import DSCBlockSpec
+
+
+class CFUSchedule(enum.Enum):
+    LAYER_DRAM = "layer-dram"
+    LAYER_SRAM = "layer-sram"
+    FUSED = "fused"
+
+
+@dataclasses.dataclass(frozen=True)
+class Region:
+    name: str
+    space: int          # isa.SPACE_DRAM | isa.SPACE_SRAM
+    base: int
+    size: int
+
+
+@dataclasses.dataclass
+class Layout:
+    """Where the compiler placed every feature map."""
+
+    regions: Dict[str, Region] = dataclasses.field(default_factory=dict)
+    dram_size: int = 0
+    sram_size: int = 0          # high-water mark of the reused scratch arena
+
+    def add(self, name: str, space: int, base: int, size: int) -> Region:
+        r = Region(name, space, base, size)
+        self.regions[name] = r
+        return r
+
+
+def _block_chain_hw(specs: Sequence[Tuple[str, DSCBlockSpec]],
+                    h: int, w: int) -> List[Tuple[str, DSCBlockSpec, int, int]]:
+    """Input (h, w) of every block when chained from an (h, w) input."""
+    out = []
+    for name, spec in specs:
+        out.append((name, spec, h, w))
+        h, w = spec.out_hw(h, w)
+    return out
+
+
+def compile_network(specs: Sequence[Tuple[str, DSCBlockSpec]],
+                    h: int, w: int,
+                    schedule: CFUSchedule) -> Program:
+    """Lower a chain of DSC blocks into one CFU instruction stream."""
+    chain = _block_chain_hw(specs, h, w)
+    layout = Layout()
+    dram_top = 0
+
+    # --- allocate the block-IO chain in DRAM --------------------------------
+    io_regions: List[Tuple[Region, Region]] = []
+    first = chain[0]
+    r_in = layout.add("x0", isa.SPACE_DRAM, dram_top,
+                      first[2] * first[3] * first[1].cin)
+    dram_top += r_in.size
+    prev = r_in
+    for name, spec, bh, bw in chain:
+        h2, w2 = spec.out_hw(bh, bw)
+        r_out = layout.add(f"y@{name}", isa.SPACE_DRAM, dram_top,
+                           h2 * w2 * spec.cout)
+        dram_top += r_out.size
+        io_regions.append((prev, r_out))
+        prev = r_out
+
+    # --- scratch arena for layer-by-layer intermediates (reused per block) --
+    scratch_space = (isa.SPACE_SRAM if schedule is CFUSchedule.LAYER_SRAM
+                     else isa.SPACE_DRAM)
+    scratch_base = dram_top if scratch_space == isa.SPACE_DRAM else 0
+    scratch_peak = 0
+
+    instrs: List[Instr] = []
+    phase = 0
+    for bi, ((name, spec, bh, bw), (r_x, r_y)) in enumerate(
+            zip(chain, io_regions)):
+        assert spec.kernel == isa.KERNEL, "the CFU's depthwise is 3x3"
+        h2, w2 = spec.out_hw(bh, bw)
+        instrs.append(Instr("CFG", (spec.cin, spec.cmid, spec.cout,
+                                    spec.stride, bh, bw)))
+        instrs.append(Instr("SET_BASE", (isa.REG_IN, r_x.space, r_x.base)))
+        instrs.append(Instr("SET_BASE", (isa.REG_OUT, r_y.space, r_y.base)))
+        for which in (isa.WGT_EXP, isa.WGT_DW, isa.WGT_PROJ):
+            instrs.append(Instr("LD_WGT", (which, bi)))
+
+        if schedule is CFUSchedule.FUSED:
+            instrs.append(Instr("BAR", (phase % 256,))); phase += 1
+            for oy in range(h2):
+                for ox in range(w2):
+                    instrs.append(Instr("LD_WIN", (oy, ox)))
+                    instrs.append(Instr("EXP_MAC", (isa.MODE_WIN,)))
+                    instrs.append(Instr("REQUANT", (isa.STAGE_F1,)))
+                    instrs.append(Instr("DW_MAC", ()))
+                    instrs.append(Instr("REQUANT", (isa.STAGE_F2,)))
+                    instrs.append(Instr("PROJ_MAC", ()))
+                    instrs.append(Instr("REQUANT", (isa.STAGE_OUT,)))
+                    if spec.has_residual:
+                        instrs.append(Instr("RES_ADD", (oy, ox)))
+                    instrs.append(Instr("ST_PX", (oy, ox)))
+        else:
+            r_f1 = layout.add(f"f1@{name}", scratch_space, scratch_base,
+                              bh * bw * spec.cmid)
+            r_f2 = layout.add(f"f2@{name}", scratch_space,
+                              scratch_base + r_f1.size,
+                              h2 * w2 * spec.cmid)
+            scratch_peak = max(scratch_peak, r_f1.size + r_f2.size)
+            instrs.append(Instr("SET_BASE", (isa.REG_F1, r_f1.space,
+                                             r_f1.base)))
+            instrs.append(Instr("SET_BASE", (isa.REG_F2, r_f2.space,
+                                             r_f2.base)))
+            # pass 1: expansion at input resolution, F1 materialized
+            instrs.append(Instr("BAR", (phase % 256,))); phase += 1
+            for y in range(bh):
+                for x in range(bw):
+                    instrs.append(Instr("LD_VEC", (isa.REG_IN, y, x)))
+                    instrs.append(Instr("EXP_MAC", (isa.MODE_VEC,)))
+                    instrs.append(Instr("REQUANT", (isa.STAGE_F1,)))
+                    instrs.append(Instr("ST_VEC", (isa.REG_F1, y, x)))
+            # pass 2: depthwise over the materialized F1, F2 materialized
+            instrs.append(Instr("BAR", (phase % 256,))); phase += 1
+            for oy in range(h2):
+                for ox in range(w2):
+                    instrs.append(Instr("LD_TILE", (isa.REG_F1, oy, ox)))
+                    instrs.append(Instr("DW_MAC", ()))
+                    instrs.append(Instr("REQUANT", (isa.STAGE_F2,)))
+                    instrs.append(Instr("ST_VEC", (isa.REG_F2, oy, ox)))
+            # pass 3: projection (+ residual) to the block output
+            instrs.append(Instr("BAR", (phase % 256,))); phase += 1
+            for oy in range(h2):
+                for ox in range(w2):
+                    instrs.append(Instr("LD_VEC", (isa.REG_F2, oy, ox)))
+                    instrs.append(Instr("PROJ_MAC", ()))
+                    instrs.append(Instr("REQUANT", (isa.STAGE_OUT,)))
+                    if spec.has_residual:
+                        instrs.append(Instr("RES_ADD", (oy, ox)))
+                    instrs.append(Instr("ST_PX", (oy, ox)))
+
+    instrs.append(Instr("HALT", ()))
+
+    if scratch_space == isa.SPACE_DRAM:
+        layout.dram_size = dram_top + scratch_peak
+        layout.sram_size = 0
+    else:
+        layout.dram_size = dram_top
+        layout.sram_size = scratch_peak
+
+    last_name, last_spec, lh, lw = chain[-1]
+    lh2, lw2 = last_spec.out_hw(lh, lw)
+    return Program(instrs, meta={
+        "schedule": schedule.value,
+        "layout": layout,
+        "blocks": [(name, spec, bh, bw) for name, spec, bh, bw in chain],
+        "in_region": "x0",
+        "in_shape": (chain[0][2], chain[0][3], chain[0][1].cin),
+        "out_region": f"y@{last_name}",
+        "out_shape": (lh2, lw2, last_spec.cout),
+    })
+
+
+def compile_block(spec: DSCBlockSpec, h: int, w: int,
+                  schedule: CFUSchedule, name: str = "b0") -> Program:
+    """Lower a single block (convenience wrapper over compile_network)."""
+    return compile_network([(name, spec)], h, w, schedule)

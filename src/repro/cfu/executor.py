@@ -1,0 +1,330 @@
+"""Golden-model CFU executor: bit-exact, vectorized, pure numpy.
+
+The interpreter executes the *encoded* 64-bit words (``run_words``), so the
+binary ISA provably carries the whole program; ``run_program`` is sugar that
+encodes first. Per instruction the datapath is one vectorized numpy op
+(an einsum for EXP/PROJ, an elementwise-multiply-reduce for DW) — the
+"vectorization" is across the channel/tile dimension, exactly the
+parallelism of the paper's engine arrays (9x8 expansion MACs, 9-way
+depthwise, 56 output-stationary projection engines).
+
+Bit-exactness contract: the int8 outputs equal
+``core.dsc.dsc_block_reference`` / ``dsc_block_fused_pixelwise`` with EXACT
+integer equality (tests/test_cfu.py), because every arithmetic step mirrors
+``core.quant`` operation-for-operation in IEEE float32 / int32:
+
+* MAC loops accumulate raw int8 operands in int32 with the zero-point
+  correction folded into the bias (``quant.fold_zero_point_correction``);
+* ``_requantize_np`` mirrors ``quant.requantize``: float32 multiply by the
+  effective scale, round-half-to-even, int32 add of the zero point, clip;
+* ``_residual_add_np`` mirrors ``quant.residual_add_q``'s TFLite ADD;
+* on-the-fly padding (LD_WIN/LD_TILE) returns the destination domain's
+  zero point for out-of-bounds taps — numerically identical to the
+  reference's explicitly padded tensors (see the NOTE in
+  ``dsc_block_reference``).
+
+Machine state (see package docstring): WIN (3x3xC + validity mask), VEC,
+F1T (3x3xM), F2V (M), the pending int32 accumulator ACC, the requant
+result RES, four base registers, and one int8 array per memory space.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.cfu import isa
+from repro.cfu.isa import Instr
+from repro.core.dsc import QuantizedDSCParams
+
+INT8_MIN, INT8_MAX = -128, 127
+
+
+# --- numpy mirrors of core.quant (bit-exact by op-for-op identity) ----------
+
+
+def _requantize_np(acc_i32: np.ndarray, eff_scale, zp_out: int,
+                   relu: bool = False,
+                   relu6_max_q: Optional[int] = None) -> np.ndarray:
+    y = np.round(acc_i32.astype(np.float32)
+                 * np.asarray(eff_scale, np.float32))
+    y = y.astype(np.int32) + zp_out
+    lo = zp_out if relu else INT8_MIN
+    hi = INT8_MAX if relu6_max_q is None else min(relu6_max_q, INT8_MAX)
+    return np.clip(y, lo, hi).astype(np.int8)
+
+
+def _residual_add_np(y_q: np.ndarray, x_q: np.ndarray,
+                     p: QuantizedDSCParams) -> np.ndarray:
+    s_y = np.float32(np.asarray(p.qp_out.scale))
+    s_x = np.float32(np.asarray(p.qp_in.scale))
+    acc = (s_y * (y_q.astype(np.float32) - p.qp_out.zero_point)
+           + s_x * (x_q.astype(np.float32) - p.qp_in.zero_point))
+    out = np.round(acc / s_y) + p.qp_out.zero_point
+    return np.clip(out, INT8_MIN, INT8_MAX).astype(np.int8)
+
+
+@dataclasses.dataclass
+class _BlockWeights:
+    """Numpy views of one block's tensors + requant constants."""
+
+    p: QuantizedDSCParams
+    w_exp: np.ndarray
+    w_dw: np.ndarray
+    w_proj: np.ndarray
+    b_exp: np.ndarray
+    b_dw: np.ndarray
+    b_proj: np.ndarray
+    m_exp: np.ndarray
+    m_dw: np.ndarray
+    m_proj: np.ndarray
+
+    @classmethod
+    def of(cls, p: QuantizedDSCParams) -> "_BlockWeights":
+        return cls(
+            p=p,
+            w_exp=np.asarray(p.w_exp, np.int32),
+            w_dw=np.asarray(p.w_dw, np.int32),
+            w_proj=np.asarray(p.w_proj, np.int32),
+            b_exp=np.asarray(p.b_exp, np.int32),
+            b_dw=np.asarray(p.b_dw, np.int32),
+            b_proj=np.asarray(p.b_proj, np.int32),
+            m_exp=np.asarray(p.m_exp, np.float32),
+            m_dw=np.asarray(p.m_dw, np.float32),
+            m_proj=np.asarray(p.m_proj, np.float32),
+        )
+
+
+@dataclasses.dataclass
+class ExecStats:
+    n_instr: int = 0
+    n_macs: int = 0
+    counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+
+class CFUMachine:
+    """Architectural state + instruction dispatch."""
+
+    def __init__(self, params: Sequence[QuantizedDSCParams],
+                 dram_size: int, sram_size: int):
+        self.params = list(params)
+        self._wcache: Dict[int, _BlockWeights] = {}
+        self.mem = {
+            isa.SPACE_DRAM: np.zeros(max(dram_size, 1), np.int8),
+            isa.SPACE_SRAM: np.zeros(max(sram_size, 1), np.int8),
+        }
+        # CFG state
+        self.cin = self.cmid = self.cout = 0
+        self.stride = 1
+        self.h = self.w = self.h2 = self.w2 = 0
+        # base registers: reg -> (space, addr)
+        self.base: Dict[int, Tuple[int, int]] = {}
+        self.cur: Optional[_BlockWeights] = None
+        self.cur_block: Optional[int] = None
+        self.wgt_loaded: set = set()     # which engines LD_WGT streamed
+        # datapath registers
+        self.win = None          # (3,3,C) int8 input window
+        self.win_valid = None    # (3,3) bool
+        self.vec = None          # (C,) or (M,) int8
+        self.acc = None          # pending int32 accumulator
+        self.acc_src = None      # which MAC produced it ("exp_win"|...)
+        self.f1t = None          # (3,3,M) int8
+        self.f2v = None          # (M,) int8
+        self.res = None          # last requant result (int8 vector)
+        self.stats = ExecStats()
+
+    # --- address helpers ----------------------------------------------------
+
+    def _map_shape(self, reg: int) -> Tuple[int, int, int]:
+        if reg == isa.REG_IN:
+            return self.h, self.w, self.cin
+        if reg == isa.REG_F1:
+            return self.h, self.w, self.cmid
+        if reg == isa.REG_F2:
+            return self.h2, self.w2, self.cmid
+        if reg == isa.REG_OUT:
+            return self.h2, self.w2, self.cout
+        raise ValueError(reg)
+
+    def _vec_slice(self, reg: int, y: int, x: int) -> np.ndarray:
+        space, base = self.base[reg]
+        _, w, ch = self._map_shape(reg)
+        off = base + (y * w + x) * ch
+        return self.mem[space][off:off + ch]
+
+    def _zp_of(self, reg: int) -> int:
+        p = self.cur.p
+        return {isa.REG_IN: p.qp_in.zero_point,
+                isa.REG_F1: p.qp_f1.zero_point,
+                isa.REG_F2: p.qp_f2.zero_point,
+                isa.REG_OUT: p.qp_out.zero_point}[reg]
+
+    def _gather_window(self, reg: int, oy: int, ox: int
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+        """3x3 window with on-the-fly zero-point padding (paper Fig. 13b).
+
+        Window top-left = out*stride - 1 — identical to
+        ``core.dsc._window_indices`` (SAME padding, pad_top = pad_left = 1).
+        """
+        hm, wm, ch = self._map_shape(reg)
+        k, s = isa.KERNEL, self.stride
+        win = np.empty((k, k, ch), np.int8)
+        valid = np.zeros((k, k), bool)
+        zp = np.int8(self._zp_of(reg))
+        for dy in range(k):
+            iy = oy * s + dy - 1
+            for dx in range(k):
+                ix = ox * s + dx - 1
+                if 0 <= iy < hm and 0 <= ix < wm:
+                    win[dy, dx] = self._vec_slice(reg, iy, ix)
+                    valid[dy, dx] = True
+                else:
+                    win[dy, dx] = zp
+        return win, valid
+
+    # --- dispatch -----------------------------------------------------------
+
+    def execute(self, instrs: Sequence[Instr]) -> ExecStats:
+        for ins in instrs:
+            self.stats.n_instr += 1
+            self.stats.counts[ins.op] = self.stats.counts.get(ins.op, 0) + 1
+            getattr(self, "_op_" + ins.op.lower())(*ins.args)
+        return self.stats
+
+    def _op_halt(self):
+        pass
+
+    def _op_bar(self, phase):
+        pass  # pipeline drain; architectural state is unaffected
+
+    def _op_cfg(self, cin, cmid, cout, stride, h, w):
+        self.cin, self.cmid, self.cout = cin, cmid, cout
+        self.stride, self.h, self.w = stride, h, w
+        self.h2, self.w2 = -(-h // stride), -(-w // stride)
+
+    def _op_set_base(self, reg, space, addr):
+        self.base[reg] = (space, addr)
+
+    def _op_ld_wgt(self, which, block):
+        if block not in self._wcache:
+            self._wcache[block] = _BlockWeights.of(self.params[block])
+        self.cur = self._wcache[block]
+        if block != self.cur_block:      # new block: old streams invalid
+            self.cur_block = block
+            self.wgt_loaded = set()
+        self.wgt_loaded.add(which)
+
+    def _need_wgt(self, which, engine: str):
+        if which not in self.wgt_loaded:
+            raise RuntimeError(
+                f"{engine} engine used before LD_WGT streamed its weights "
+                f"(block {self.cur_block})")
+
+    def _op_ld_win(self, oy, ox):
+        self.win, self.win_valid = self._gather_window(isa.REG_IN, oy, ox)
+
+    def _op_ld_vec(self, reg, y, x):
+        v = self._vec_slice(reg, y, x).copy()
+        if reg == isa.REG_F2:
+            self.f2v = v     # projection input port
+        else:
+            self.vec = v     # expansion input port
+
+    def _op_ld_tile(self, reg, oy, ox):
+        # Materialized-F1 window: pad value IS the F1 zero point, exactly
+        # what the reference's jnp.pad(..., constant_values=zp_f1) provides.
+        self.f1t, _ = self._gather_window(reg, oy, ox)
+
+    def _op_exp_mac(self, mode):
+        self._need_wgt(isa.WGT_EXP, "expansion")
+        cw = self.cur
+        src = self.win if mode == isa.MODE_WIN else self.vec
+        self.acc = (np.einsum("...c,cm->...m", src.astype(np.int32),
+                              cw.w_exp) + cw.b_exp)
+        self.acc_src = "exp_win" if mode == isa.MODE_WIN else "exp_vec"
+        self.stats.n_macs += src.size * self.cmid
+
+    def _op_dw_mac(self):
+        self._need_wgt(isa.WGT_DW, "depthwise")
+        cw = self.cur
+        prod = self.f1t.astype(np.int32) * cw.w_dw
+        self.acc = prod.sum(axis=(-3, -2)) + cw.b_dw
+        self.acc_src = "dw"
+        self.stats.n_macs += isa.KERNEL * isa.KERNEL * self.cmid
+
+    def _op_proj_mac(self):
+        self._need_wgt(isa.WGT_PROJ, "projection")
+        cw = self.cur
+        self.acc = (np.einsum("m,mn->n", self.f2v.astype(np.int32),
+                              cw.w_proj) + cw.b_proj)
+        self.acc_src = "proj"
+        self.stats.n_macs += self.cmid * self.cout
+
+    def _op_requant(self, stage):
+        cw, p = self.cur, self.cur.p
+        if stage == isa.STAGE_F1:
+            y = _requantize_np(self.acc, cw.m_exp, p.qp_f1.zero_point,
+                               relu=True, relu6_max_q=p.q6_f1)
+            if y.ndim == 3:
+                # Fused path: taps whose SOURCE pixel was padding must read
+                # as zp_f1 downstream (the hardware's address check gates
+                # the expansion engines) — same masking as
+                # ``dsc_block_fused_pixelwise``.
+                self.f1t = np.where(self.win_valid[..., None], y,
+                                    np.int8(p.qp_f1.zero_point))
+            else:
+                self.res = y
+        elif stage == isa.STAGE_F2:
+            y = _requantize_np(self.acc, cw.m_dw, p.qp_f2.zero_point,
+                               relu=True, relu6_max_q=p.q6_f2)
+            self.f2v = y
+            self.res = y
+        else:
+            self.res = _requantize_np(self.acc, cw.m_proj,
+                                      p.qp_out.zero_point, relu=False)
+
+    def _op_res_add(self, oy, ox):
+        x_px = self._vec_slice(isa.REG_IN, oy, ox)
+        self.res = _residual_add_np(self.res, x_px, self.cur.p)
+
+    def _op_st_px(self, oy, ox):
+        self._vec_slice(isa.REG_OUT, oy, ox)[:] = self.res
+
+    def _op_st_vec(self, reg, y, x):
+        self._vec_slice(reg, y, x)[:] = self.res
+
+
+# --- host-side entry points --------------------------------------------------
+
+
+def run_words(words: Sequence[int], x_q, params: Sequence[QuantizedDSCParams],
+              meta: Dict[str, object],
+              return_stats: bool = False):
+    """Execute an encoded program on input ``x_q`` (H, W, C) int8.
+
+    ``meta`` is the Program.meta of the compiled stream (memory layout +
+    input/output binding); the architectural behaviour is fully determined
+    by the words themselves.
+    """
+    layout = meta["layout"]
+    m = CFUMachine(params, layout.dram_size, layout.sram_size)
+    x_q = np.asarray(x_q, np.int8)
+    r_in = layout.regions[meta["in_region"]]
+    if x_q.size != r_in.size:
+        raise ValueError(f"input has {x_q.size} bytes, region "
+                         f"{r_in.name} holds {r_in.size}")
+    m.mem[r_in.space][r_in.base:r_in.base + r_in.size] = x_q.reshape(-1)
+    stats = m.execute(isa.decode_words(words))
+    r_out = layout.regions[meta["out_region"]]
+    y = m.mem[r_out.space][r_out.base:r_out.base + r_out.size]
+    y = y.reshape(meta["out_shape"]).copy()
+    return (y, stats) if return_stats else y
+
+
+def run_program(program, x_q, params: Sequence[QuantizedDSCParams],
+                return_stats: bool = False):
+    """Encode then execute — every run exercises the binary format."""
+    return run_words(isa.encode_program(program), x_q, params, program.meta,
+                     return_stats=return_stats)

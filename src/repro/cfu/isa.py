@@ -1,0 +1,189 @@
+"""CFU instruction set: encodings, assembler, disassembler.
+
+Every instruction is one 64-bit word:
+
+    [63:56]  opcode (8 bits)
+    [55:0]   operand fields, packed MSB-first in the order given by
+             ``FIELD_SPECS[op]`` (a list of (field_name, bit_width))
+
+The encoding is total — ``decode(encode(i)) == i`` for every legal
+instruction, and the golden executor runs *from the encoded words*
+(``executor.run_words``), so the binary format provably carries the whole
+program. A text form (one mnemonic + comma-separated fields per line) is
+provided for debugging and round-trips through ``program_from_asm``.
+
+Operand value tables
+--------------------
+base registers : IN=0  OUT=1  F1=2  F2=3
+memory spaces  : DRAM=0  SRAM=1
+LD_WGT.which   : EXP=0  DW=1  PROJ=2
+EXP_MAC.mode   : WIN=0 (3x3 window)  VEC=1 (single pixel, layer-by-layer)
+REQUANT.stage  : F1=0  F2=1  OUT=2
+
+The depthwise kernel is fixed at 3x3 (the paper's engines); ``CFG`` carries
+no kernel field.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+# --- operand value tables ---------------------------------------------------
+
+REG_IN, REG_OUT, REG_F1, REG_F2 = 0, 1, 2, 3
+REG_NAMES = {REG_IN: "IN", REG_OUT: "OUT", REG_F1: "F1", REG_F2: "F2"}
+
+SPACE_DRAM, SPACE_SRAM = 0, 1
+SPACE_NAMES = {SPACE_DRAM: "DRAM", SPACE_SRAM: "SRAM"}
+
+WGT_EXP, WGT_DW, WGT_PROJ = 0, 1, 2
+MODE_WIN, MODE_VEC = 0, 1
+STAGE_F1, STAGE_F2, STAGE_OUT = 0, 1, 2
+
+KERNEL = 3  # the paper's depthwise kernel; fixed in the ISA
+
+# --- opcodes & field layouts ------------------------------------------------
+
+OPCODES: Dict[str, int] = {
+    "HALT": 0x00,
+    "CFG": 0x01,
+    "SET_BASE": 0x02,
+    "LD_WGT": 0x03,
+    "LD_WIN": 0x04,
+    "LD_VEC": 0x05,
+    "LD_TILE": 0x06,
+    "EXP_MAC": 0x07,
+    "DW_MAC": 0x08,
+    "PROJ_MAC": 0x09,
+    "REQUANT": 0x0A,
+    "RES_ADD": 0x0B,
+    "ST_PX": 0x0C,
+    "ST_VEC": 0x0D,
+    "BAR": 0x0E,
+}
+MNEMONICS = {v: k for k, v in OPCODES.items()}
+
+FIELD_SPECS: Dict[str, List[Tuple[str, int]]] = {
+    "HALT": [],
+    "CFG": [("cin", 10), ("cmid", 12), ("cout", 10), ("stride", 2),
+            ("h", 10), ("w", 10)],
+    "SET_BASE": [("reg", 2), ("space", 1), ("addr", 32)],
+    "LD_WGT": [("which", 2), ("block", 10)],
+    "LD_WIN": [("oy", 12), ("ox", 12)],
+    "LD_VEC": [("reg", 2), ("y", 12), ("x", 12)],
+    "LD_TILE": [("reg", 2), ("oy", 12), ("ox", 12)],
+    "EXP_MAC": [("mode", 1)],
+    "DW_MAC": [],
+    "PROJ_MAC": [],
+    "REQUANT": [("stage", 2)],
+    "RES_ADD": [("oy", 12), ("ox", 12)],
+    "ST_PX": [("oy", 12), ("ox", 12)],
+    "ST_VEC": [("reg", 2), ("y", 12), ("x", 12)],
+    "BAR": [("phase", 8)],
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Instr:
+    """One decoded instruction: mnemonic + named operand fields."""
+
+    op: str
+    args: Tuple[int, ...] = ()
+
+    def __post_init__(self):
+        spec = FIELD_SPECS.get(self.op)
+        if spec is None:
+            raise ValueError(f"unknown opcode {self.op!r}")
+        if len(self.args) != len(spec):
+            raise ValueError(f"{self.op} expects {len(spec)} operands "
+                             f"{[n for n, _ in spec]}, got {self.args}")
+        for v, (name, bits) in zip(self.args, spec):
+            if not 0 <= int(v) < (1 << bits):
+                raise ValueError(
+                    f"{self.op}.{name}={v} out of range for {bits} bits")
+
+
+@dataclasses.dataclass
+class Program:
+    """An instruction stream plus host-side binding metadata.
+
+    ``meta`` is *not* part of the architectural state: it records where the
+    compiler placed the input/output maps (so a host can bind tensors) and
+    which ``DSCBlockSpec``s the stream implements. The words alone fully
+    determine execution once input/params are bound.
+    """
+
+    instrs: List[Instr]
+    meta: Dict[str, object] = dataclasses.field(default_factory=dict)
+
+    def __len__(self) -> int:
+        return len(self.instrs)
+
+
+# --- binary assembler / disassembler ---------------------------------------
+
+
+def assemble(instr: Instr) -> int:
+    """Instr -> 64-bit word."""
+    word = OPCODES[instr.op] << 56
+    pos = 56
+    for v, (_, bits) in zip(instr.args, FIELD_SPECS[instr.op]):
+        pos -= bits
+        word |= int(v) << pos
+    return word
+
+
+def disassemble(word: int) -> Instr:
+    """64-bit word -> Instr. Raises on unknown opcodes."""
+    word = int(word)
+    opcode = (word >> 56) & 0xFF
+    op = MNEMONICS.get(opcode)
+    if op is None:
+        raise ValueError(f"unknown opcode byte 0x{opcode:02x}")
+    args = []
+    pos = 56
+    for _, bits in FIELD_SPECS[op]:
+        pos -= bits
+        args.append((word >> pos) & ((1 << bits) - 1))
+    return Instr(op, tuple(args))
+
+
+def encode_program(program: Program) -> np.ndarray:
+    """Program -> uint64 word array (the 'binary')."""
+    return np.asarray([assemble(i) for i in program.instrs], dtype=np.uint64)
+
+
+def decode_words(words: Sequence[int]) -> List[Instr]:
+    return [disassemble(int(w)) for w in words]
+
+
+# --- text assembler ----------------------------------------------------------
+
+
+def instr_to_asm(instr: Instr) -> str:
+    if not instr.args:
+        return instr.op
+    return f"{instr.op} " + ", ".join(str(int(v)) for v in instr.args)
+
+
+def asm_to_instr(line: str) -> Instr:
+    head, _, rest = line.strip().partition(" ")
+    args = tuple(int(tok) for tok in rest.replace(",", " ").split()) \
+        if rest.strip() else ()
+    return Instr(head, args)
+
+
+def program_to_asm(program: Program) -> str:
+    return "\n".join(instr_to_asm(i) for i in program.instrs) + "\n"
+
+
+def program_from_asm(text: str) -> Program:
+    instrs = []
+    for line in text.splitlines():
+        line = line.split(";", 1)[0].strip()   # ';' starts a comment
+        if line:
+            instrs.append(asm_to_instr(line))
+    return Program(instrs)

@@ -1,0 +1,326 @@
+"""Cycle + energy model of the CFU, driven by the instruction stream.
+
+The model walks a compiled ``Program`` (no data needed — every address is
+statically determined by CFG/SET_BASE + the pixel coordinates in the
+instructions) and produces cycles, byte traffic per memory space, MAC
+counts and energy.
+
+Cycle model
+-----------
+Per-pixel datapath costs reuse the CALIBRATED per-stage constants of
+``core.fusion`` (C_EX_PER_IN_CH etc., solved from the paper's published
+Table III(A) cycle counts), so the FUSED stream under v1/v2/v3 pipelining
+reproduces ``core.fusion.modeled_cycles`` — and therefore the paper's
+27.4x/46.3x/59.3x progression — by construction of the same constants,
+not by copying the totals: this model derives them from the instruction
+stream. Pipelining modes:
+
+* ``v1`` — sequential: pixel cycles = sum of stage costs + fixed overhead;
+* ``v2`` — inter-stage: II = max(Ex, Dw, Pr stage groups) + fixed;
+* ``v3`` — intra-stage (MAC/Quantize split): II = max of the five substage
+  costs + fixed;
+
+plus 2 (v2) / 4 (v3) pipeline-fill iterations per multi-stage phase.
+Layer-by-layer passes have single-stage iterations, so all modes coincide
+there (there is nothing to overlap across stages that live in different
+passes — exactly why the paper fuses).
+
+Memory-port model
+-----------------
+Each phase (BAR-delimited) overlaps compute with its DMA traffic:
+``phase_cycles = max(compute, transfer)`` — the exposed difference is the
+memory-port stall. Port costs:
+
+* DRAM: ``CYC_PER_DRAM_BYTE`` = 45.6 cycles/byte, the paper's own measured
+  software-managed transfer cost (Table VI: 14.0M cycles / 307200 B) — in
+  this system the scalar core mediates all off-chip traffic (it is a CFU,
+  not a DMA master).
+* SRAM: 1 byte/cycle single-port scratch.
+* Weights are boot-time resident in the CFU's weight buffers (loaded once,
+  amortized over frames): LD_WGT contributes *traffic bytes* (they are
+  moved, and ``core.traffic.weight_bytes`` counts them) but no per-frame
+  stall cycles.
+
+Reads use line-buffered unique-byte accounting: within one stream of one
+phase, every map byte is fetched from its memory space at most once (the
+standard 2-row line buffer of a 3x3 windowing engine); the residual port
+is a separate stream, so a residual block re-reads its input exactly as
+``core.traffic.io_bytes`` assumes. This makes the measured bytes equal the
+analytic Eq. 1/2 counts EXACTLY (asserted in tests/test_cfu.py).
+
+Energy model
+------------
+Eyeriss-style op pricing shared with ``benchmarks/bench_energy.py`` (the
+constants are defined here and imported there): every MAC and every byte
+at its hierarchy level. Unlike the analytic table, the MAC count here is
+the *executed* count, so the FUSED schedule honestly pays its 9x expansion
+recompute (the paper's No-Local-Reuse trade).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.cfu import isa
+from repro.cfu.isa import Program
+from repro.core.fusion import (C_DW, C_DWQ, C_EX_PER_IN_CH, C_EXQ, C_PR,
+                               C_PX_FIXED, PROJECTION_ENGINES,
+                               SW_CYCLES_PER_XFER_BYTE)
+
+# Memory-port costs (cycles per byte), see module docstring.
+CYC_PER_DRAM_BYTE = SW_CYCLES_PER_XFER_BYTE     # CPU-mediated off-chip port
+CYC_PER_SRAM_BYTE = 1.0                         # single-port on-chip scratch
+
+# pJ per op / per byte (Horowitz ISSCC'14-derived, int8, ~28-40 nm class).
+# Canonical definitions — benchmarks/bench_energy.py imports these.
+E_MAC_INT8 = 0.2          # pJ per int8 MAC
+E_SRAM_BYTE = 1.25        # pJ per byte, large on-chip SRAM
+E_RF_BYTE = 0.1           # pJ per byte, register file / pipeline regs
+E_DRAM_BYTE = 160.0       # pJ per byte, off-chip DRAM
+
+PIPELINES = ("v1", "v2", "v3")
+_FILL_ITERS = {"v1": 0, "v2": 2, "v3": 4}
+
+
+@dataclasses.dataclass
+class PhaseStats:
+    n_iters: int = 0
+    compute_cycles: float = 0.0
+    transfer_cycles: float = 0.0
+    multi_stage: bool = False
+    last_iter_cycles: float = 0.0
+
+
+@dataclasses.dataclass
+class TimingReport:
+    pipeline: str
+    total_cycles: float
+    compute_cycles: float
+    transfer_cycles: float
+    stall_cycles: float               # exposed (not hidden) memory time
+    dram_bytes: int                   # reads + writes, incl. weights
+    sram_bytes: int
+    weight_bytes: int
+    macs: int
+    energy_pj: Dict[str, float]      # {"mac", "dram", "sram", "total"}
+    sram_buffer_bytes: int            # scratch high-water (Eq. 2 analogue)
+    n_phases: int
+
+
+class _Walker:
+    def __init__(self, pipeline: str):
+        if pipeline not in PIPELINES:
+            raise ValueError(f"pipeline must be one of {PIPELINES}")
+        self.pipeline = pipeline
+        # CFG / base state
+        self.cin = self.cmid = self.cout = 0
+        self.stride = 1
+        self.h = self.w = self.h2 = self.w2 = 0
+        self.base: Dict[int, Tuple[int, int]] = {}
+        # traffic
+        self.touched: Dict[Tuple[int, str], np.ndarray] = {}
+        self.space_sizes = {isa.SPACE_DRAM: 0, isa.SPACE_SRAM: 0}
+        self.bytes_rw = {isa.SPACE_DRAM: 0, isa.SPACE_SRAM: 0}
+        self.weight_bytes = 0
+        self.macs = 0
+        # cycles
+        self.phases: List[PhaseStats] = []
+        self.cur = PhaseStats()
+        self.iter_stages: Dict[str, float] = {}
+        self.last_exp_mode: Optional[int] = None
+
+    # --- map geometry (mirrors executor._map_shape) -------------------------
+
+    def _map_shape(self, reg: int) -> Tuple[int, int, int]:
+        return {isa.REG_IN: (self.h, self.w, self.cin),
+                isa.REG_F1: (self.h, self.w, self.cmid),
+                isa.REG_F2: (self.h2, self.w2, self.cmid),
+                isa.REG_OUT: (self.h2, self.w2, self.cout)}[reg]
+
+    # --- traffic helpers ----------------------------------------------------
+
+    def _read(self, reg: int, y: int, x: int, stream: str):
+        """Line-buffered unique read of one channel vector."""
+        space, addr = self.base[reg]
+        hm, wm, ch = self._map_shape(reg)
+        if not (0 <= y < hm and 0 <= x < wm):
+            return  # on-the-fly padding: no memory access
+        key = (space, stream)
+        t = self.touched.get(key)
+        if t is None:
+            t = self.touched[key] = np.zeros(self.space_sizes[space], bool)
+        off = addr + (y * wm + x) * ch
+        seg = t[off:off + ch]
+        new = ch - int(seg.sum())
+        if new:
+            seg[:] = True
+            self.bytes_rw[space] += new
+            self.cur.transfer_cycles += new * _cyc_per_byte(space)
+
+    def _write(self, reg: int, n: int):
+        space, _ = self.base[reg]
+        self.bytes_rw[space] += n
+        self.cur.transfer_cycles += n * _cyc_per_byte(space)
+
+    # --- cycle helpers ------------------------------------------------------
+
+    def _end_iter(self):
+        if not self.iter_stages:
+            return
+        st = self.iter_stages
+        groups = {"ex_mac": "ex", "ex_q": "ex", "dw_mac": "dw",
+                  "dw_q": "dw", "pr_mac": "pr"}
+        n_groups = len({groups[k] for k in st})
+        # Pipelining (v2/v3) is a property of the FUSED pipeline, where one
+        # iteration spans all three engines. Layer-by-layer iterations
+        # occupy a single engine group, so their cost is the sequential sum
+        # under every mode ("all modes coincide", module docstring).
+        if n_groups < 2 or self.pipeline == "v1":
+            body = sum(st.values())
+        elif self.pipeline == "v2":
+            body = max(st.get("ex_mac", 0.0) + st.get("ex_q", 0.0),
+                       st.get("dw_mac", 0.0) + st.get("dw_q", 0.0),
+                       st.get("pr_mac", 0.0))
+        else:
+            body = max(st.values())
+        cyc = body + C_PX_FIXED
+        self.cur.compute_cycles += cyc
+        self.cur.n_iters += 1
+        self.cur.last_iter_cycles = cyc
+        if n_groups >= 2:
+            self.cur.multi_stage = True
+        self.iter_stages = {}
+
+    def _end_phase(self):
+        self._end_iter()
+        if self.cur.multi_stage:
+            self.cur.compute_cycles += (_FILL_ITERS[self.pipeline]
+                                        * self.cur.last_iter_cycles)
+        if self.cur.n_iters or self.cur.transfer_cycles:
+            self.phases.append(self.cur)
+        self.cur = PhaseStats()
+        self.touched.clear()
+
+    def _begin_iter(self):
+        self._end_iter()
+
+    # --- instruction dispatch ----------------------------------------------
+
+    def walk(self, program: Program) -> None:
+        layout = program.meta["layout"]
+        self.space_sizes = {isa.SPACE_DRAM: layout.dram_size,
+                            isa.SPACE_SRAM: layout.sram_size}
+        k2 = isa.KERNEL * isa.KERNEL
+        for ins in program.instrs:
+            op = ins.op
+            if op == "CFG":
+                cin, cmid, cout, stride, h, w = ins.args
+                self.cin, self.cmid, self.cout = cin, cmid, cout
+                self.stride, self.h, self.w = stride, h, w
+                self.h2, self.w2 = -(-h // stride), -(-w // stride)
+            elif op == "SET_BASE":
+                reg, space, addr = ins.args
+                self.base[reg] = (space, addr)
+            elif op == "LD_WGT":
+                which = ins.args[0]
+                nbytes = {isa.WGT_EXP: self.cin * self.cmid,
+                          isa.WGT_DW: k2 * self.cmid,
+                          isa.WGT_PROJ: self.cmid * self.cout}[which]
+                self.weight_bytes += nbytes
+                self.bytes_rw[isa.SPACE_DRAM] += nbytes
+                # boot-resident: no per-frame transfer cycles
+            elif op == "BAR":
+                self._end_phase()
+            elif op == "LD_WIN":
+                self._begin_iter()
+                oy, ox = ins.args
+                for dy in range(isa.KERNEL):
+                    for dx in range(isa.KERNEL):
+                        self._read(isa.REG_IN, oy * self.stride + dy - 1,
+                                   ox * self.stride + dx - 1, "win")
+                self.last_exp_mode = isa.MODE_WIN
+            elif op == "LD_VEC":
+                self._begin_iter()
+                reg, y, x = ins.args
+                self._read(reg, y, x, f"vec{reg}")
+                self.last_exp_mode = isa.MODE_VEC
+            elif op == "LD_TILE":
+                self._begin_iter()
+                reg, oy, ox = ins.args
+                for dy in range(isa.KERNEL):
+                    for dx in range(isa.KERNEL):
+                        self._read(reg, oy * self.stride + dy - 1,
+                                   ox * self.stride + dx - 1, "tile")
+            elif op == "EXP_MAC":
+                mode = ins.args[0]
+                pixels = k2 if mode == isa.MODE_WIN else 1
+                self.macs += pixels * self.cin * self.cmid
+                self.iter_stages["ex_mac"] = (
+                    C_EX_PER_IN_CH * self.cin * self.cmid * pixels / k2)
+            elif op == "DW_MAC":
+                self.macs += k2 * self.cmid
+                self.iter_stages["dw_mac"] = C_DW * self.cmid
+            elif op == "PROJ_MAC":
+                self.macs += self.cmid * self.cout
+                groups = -(-self.cout // PROJECTION_ENGINES)
+                self.iter_stages["pr_mac"] = C_PR * self.cmid * groups
+            elif op == "REQUANT":
+                stage = ins.args[0]
+                if stage == isa.STAGE_F1:
+                    pixels = (k2 if self.last_exp_mode == isa.MODE_WIN else 1)
+                    self.iter_stages["ex_q"] = C_EXQ * self.cmid * pixels / k2
+                elif stage == isa.STAGE_F2:
+                    self.iter_stages["dw_q"] = C_DWQ * self.cmid
+                # OUT requant is folded into C_PX_FIXED (fusion calibration)
+            elif op == "RES_ADD":
+                oy, ox = ins.args
+                self._read(isa.REG_IN, oy, ox, "res")
+            elif op == "ST_PX":
+                self._write(isa.REG_OUT, self.cout)
+            elif op == "ST_VEC":
+                reg = ins.args[0]
+                _, _, ch = self._map_shape(reg)
+                self._write(reg, ch)
+            elif op == "HALT":
+                self._end_phase()
+            else:
+                raise ValueError(f"timing model: unhandled opcode {op}")
+        self._end_phase()  # in case HALT was omitted
+
+
+def _cyc_per_byte(space: int) -> float:
+    return (CYC_PER_DRAM_BYTE if space == isa.SPACE_DRAM
+            else CYC_PER_SRAM_BYTE)
+
+
+def analyze(program: Program, pipeline: str = "v3") -> TimingReport:
+    """Walk one compiled program and report cycles/traffic/energy."""
+    w = _Walker(pipeline)
+    w.walk(program)
+    compute = sum(p.compute_cycles for p in w.phases)
+    transfer = sum(p.transfer_cycles for p in w.phases)
+    total = sum(max(p.compute_cycles, p.transfer_cycles) for p in w.phases)
+    dram = w.bytes_rw[isa.SPACE_DRAM]
+    sram = w.bytes_rw[isa.SPACE_SRAM]
+    e_mac = w.macs * E_MAC_INT8
+    e_dram = dram * E_DRAM_BYTE
+    e_sram = sram * E_SRAM_BYTE
+    layout = program.meta["layout"]
+    return TimingReport(
+        pipeline=pipeline,
+        total_cycles=total,
+        compute_cycles=compute,
+        transfer_cycles=transfer,
+        stall_cycles=total - compute,
+        dram_bytes=int(dram),
+        sram_bytes=int(sram),
+        weight_bytes=int(w.weight_bytes),
+        macs=int(w.macs),
+        energy_pj={"mac": e_mac, "dram": e_dram, "sram": e_sram,
+                   "total": e_mac + e_dram + e_sram},
+        sram_buffer_bytes=int(layout.sram_size),
+        n_phases=len(w.phases),
+    )

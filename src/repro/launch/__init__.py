@@ -1,0 +1,2 @@
+"""Entry points: dryrun (sharded LM grid), train, serve, cfu (CFU
+instruction-level simulator CLI). Run as ``python -m repro.launch.<name>``."""

@@ -1,0 +1,145 @@
+"""CFU simulator launcher: compile, execute, and time a network on the CFU.
+
+    python -m repro.launch.cfu --net mobilenetv2 --schedule fused
+    python -m repro.launch.cfu --block 3rd --schedule all --pipeline v3
+    python -m repro.launch.cfu --net mobilenetv2 --asm /tmp/net.asm
+
+``--net mobilenetv2`` lowers the bottleneck (DSC) chain of
+``models.mobilenetv2`` — the stem/head run on the scalar core in the
+paper's system — at the stem-output resolution (40x40 for the paper's
+80x80 input). ``--block`` targets one of the paper's four benchmarked
+bottleneck layers at its published feature-map size.
+
+Unless ``--no-verify`` is given, the encoded instruction stream is executed
+by the golden model and checked bit-exactly (exact integer equality)
+against the ``core.dsc`` reference chain. ``--json`` writes the timing
+reports to a file (``results/cfu/`` by convention, like launch.dryrun).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.cfu import isa
+from repro.cfu.compiler import CFUSchedule, compile_network
+from repro.cfu.executor import run_program
+from repro.cfu.report import PAPER_LAYERS
+from repro.cfu.timing import analyze
+from repro.core import dsc, quant
+from repro.core.fusion import Schedule, modeled_cycles, run_block
+
+
+def _net_blocks(key, hw: int):
+    """The MobileNetV2 DSC chain with coherently chained quantization."""
+    from repro.models import mobilenetv2
+    specs = mobilenetv2.block_specs()
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((hw, hw, specs[0][1].cin)).astype(np.float32)
+    params = []
+    for i, (name, spec) in enumerate(specs):
+        p32 = dsc.init_dsc_block_f32(jax.random.fold_in(key, i), spec)
+        qp = dsc.quantize_dsc_block(p32, spec, x)
+        params.append(qp)
+        x = np.asarray(dsc.dsc_block_f32(x, p32, spec))
+    return specs, params
+
+
+def _single_block(key, name: str):
+    layer = {n: (s, hw) for n, s, hw in PAPER_LAYERS}[name]
+    spec, hw = layer
+    p32 = dsc.init_dsc_block_f32(key, spec)
+    calib = np.asarray(jax.random.normal(key, (hw, hw, spec.cin)))
+    qp = dsc.quantize_dsc_block(p32, spec, calib)
+    return [(name, spec)], [qp], hw
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    tgt = ap.add_mutually_exclusive_group()
+    tgt.add_argument("--net", choices=["mobilenetv2"], default=None)
+    tgt.add_argument("--block", choices=[n for n, _, _ in PAPER_LAYERS])
+    ap.add_argument("--schedule", default="fused",
+                    choices=[s.value for s in CFUSchedule] + ["all"])
+    ap.add_argument("--pipeline", default="v3", choices=["v1", "v2", "v3"])
+    ap.add_argument("--hw", type=int, default=40,
+                    help="input feature-map size for --net (stem output)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-verify", action="store_true",
+                    help="skip the bit-exact golden-model execution")
+    ap.add_argument("--asm", default=None,
+                    help="dump the text assembly of the stream to this path")
+    ap.add_argument("--json", default=None,
+                    help="write timing reports as JSON to this path")
+    args = ap.parse_args()
+
+    key = jax.random.PRNGKey(args.seed)
+    if args.block:
+        specs, params, hw = _single_block(key, args.block)
+        target = f"block {args.block} ({hw}x{hw})"
+    else:
+        hw = args.hw
+        specs, params = _net_blocks(key, hw)
+        target = f"mobilenetv2 DSC chain ({hw}x{hw} stem output)"
+
+    schedules = (list(CFUSchedule) if args.schedule == "all"
+                 else [CFUSchedule(args.schedule)])
+
+    # v0 software baseline over the same chain (calibrated cycle model)
+    h = w = hw
+    sw_cycles = 0.0
+    for _, spec in specs:
+        sw_cycles += modeled_cycles(spec, h, w, Schedule.V0_LAYER_BY_LAYER)
+        h, w = spec.out_hw(h, w)
+
+    print(f"# CFU simulation: {target}, schedules="
+          f"{[s.value for s in schedules]}, pipeline={args.pipeline}")
+    print("schedule,n_instr,cycles,speedup_vs_sw_v0,dram_bytes,sram_bytes,"
+          "sram_buffer_bytes,energy_uJ,verified,exec_s")
+    results = {"target": target, "pipeline": args.pipeline,
+               "sw_v0_cycles": sw_cycles, "schedules": {}}
+    for sched in schedules:
+        prog = compile_network(specs, hw, hw, sched)
+        if args.asm:
+            os.makedirs(os.path.dirname(args.asm) or ".", exist_ok=True)
+            with open(args.asm, "w") as f:
+                f.write(isa.program_to_asm(prog))
+            print(f"# assembly ({len(prog)} instrs) -> {args.asm}")
+        rep = analyze(prog, args.pipeline)
+        verified, exec_s = "-", 0.0
+        if not args.no_verify:
+            rng = np.random.default_rng(args.seed)
+            x_f = rng.standard_normal(
+                (hw, hw, specs[0][1].cin)).astype(np.float32)
+            x_q = np.asarray(quant.quantize(x_f, params[0].qp_in))
+            t0 = time.time()
+            y = run_program(prog, x_q, params)
+            exec_s = time.time() - t0
+            ref = x_q
+            for qp in params:
+                ref = run_block(ref, qp, Schedule.V0_LAYER_BY_LAYER)
+            verified = bool(np.array_equal(y, np.asarray(ref)))
+            if not verified:
+                raise SystemExit(
+                    f"BIT-EXACTNESS FAILURE under {sched.value}")
+        print(f"{sched.value},{len(prog)},{rep.total_cycles:.3e},"
+              f"{sw_cycles / rep.total_cycles:.1f},{rep.dram_bytes},"
+              f"{rep.sram_bytes},{rep.sram_buffer_bytes},"
+              f"{rep.energy_pj['total'] / 1e6:.2f},{verified},{exec_s:.2f}")
+        results["schedules"][sched.value] = dataclasses.asdict(rep)
+
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"# wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()
