@@ -13,10 +13,13 @@ core.dsc.dsc_block_reference.
 import jax
 import numpy as np
 
-from repro.cfu.compiler import CFUSchedule, compile_block
+from repro.cfu.compiler import (CFUSchedule, compile_block,
+                                compile_vww_network)
 from repro.cfu.executor import run_program
-from repro.cfu.report import (build_layer_reports, table_iii_lines,
-                              table_v_lines, table_vi_lines)
+from repro.cfu.network import vww_cfu_params
+from repro.cfu.report import (build_layer_reports, modeled_network_sw_cycles,
+                              table_iii_lines, table_v_lines, table_vi_lines)
+from repro.cfu.timing import analyze
 from repro.core import dsc, quant
 from repro.core.dsc import DSCBlockSpec
 
@@ -39,14 +42,58 @@ def _verify_bit_exact(report):
         assert ok, f"CFU executor diverged under {sched.value}"
 
 
+def _verify_vww_end_to_end(report, img_hw: int = 16, batch: int = 2):
+    """Full-network smoke: a whole (tiny) VWW inference from encoded words,
+    batch of 2, bit-exact vs forward_int8's int8 logits per image."""
+    from repro.models import mobilenetv2 as mnv2
+    net = mnv2.init_and_quantize(jax.random.PRNGKey(0), img_hw=img_hw)
+    specs = mnv2.block_specs()
+    params = vww_cfu_params(net)
+    rng = np.random.default_rng(0)
+    imgs = rng.standard_normal((batch, img_hw, img_hw, 3)).astype(np.float32)
+    imgs_q = np.asarray(quant.quantize(imgs, net.qp_img))
+    ref = np.asarray(mnv2.forward_batch(imgs, net, return_quantized=True))
+    prog = compile_vww_network(specs, img_hw, CFUSchedule.FUSED)
+    y = run_program(prog, imgs_q, params)
+    ok = np.array_equal(y, ref)
+    report(f"# batched executor bit-exact vs forward_int8 "
+           f"[vww {img_hw}x{img_hw}, batch {batch}, fused]: {ok}")
+    assert ok, "full-network CFU executor diverged from forward_int8"
+
+
+def _network_lines(img_hw: int = 80):
+    """Full-VWW cycles per schedule (the whole-inference Table III row)."""
+    from repro.models.mobilenetv2 import block_specs
+    specs = block_specs()
+    sw = modeled_network_sw_cycles(specs, img_hw)
+    out = [f"# full VWW inference ({img_hw}x{img_hw}): cycles from one "
+           "instruction stream (stem+blocks+head+GAP+FC)",
+           "config,cycles,speedup_vs_sw_v0"]
+    out.append(f"sw_v0,{sw:.3e},1.0")
+    for sched in CFUSchedule:
+        prog = compile_vww_network(specs, img_hw, sched)
+        pipelines = ("v1", "v2", "v3") if sched is CFUSchedule.FUSED \
+            else ("v1",)
+        for pl in pipelines:
+            rep = analyze(prog, pl)
+            label = (f"cfu_{sched.value.replace('-', '_')}"
+                     + (f"_{pl}" if sched is CFUSchedule.FUSED else ""))
+            out.append(f"{label},{rep.total_cycles:.3e},"
+                       f"{sw / rep.total_cycles:.1f}")
+    return out
+
+
 def run(report):
     _verify_bit_exact(report)
+    _verify_vww_end_to_end(report)
     rows = build_layer_reports()
     for line in table_iii_lines(rows):
         report(line)
     for line in table_vi_lines(rows):
         report(line)
     for line in table_v_lines(rows):
+        report(line)
+    for line in _network_lines():
         report(line)
 
 

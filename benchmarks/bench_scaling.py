@@ -1,0 +1,152 @@
+"""Cycles-vs-PE-count scaling sweep over the full VWW instruction stream.
+
+    python -m benchmarks.bench_scaling                       # print CSV
+    python -m benchmarks.bench_scaling --json results/scaling.json
+    python -m benchmarks.bench_scaling --tiny --check-speedup 50
+
+The full VWW network is compiled ONCE per schedule
+(``compile_vww_network``); each PE design point of ``configs.vww.PE_SWEEP``
+is then a pure ``timing.analyze(pe=...)`` re-walk — engine counts shape
+time, never values, so no re-execution is needed. Output is cycles /
+speedup-vs-software-v0 per (PE config, pipeline), the Fig.-14-style
+scaling curve Bai et al. (arXiv:1809.01536) report as the dominant
+area/throughput knob. The sweep shows the saturation knee: MAC-stage
+latencies scale with engine count but the per-pipeline quantize units do
+not, so past ~2x the paper's arrays the v3 initiation interval is
+requant-bound and more PEs buy nothing.
+
+``--check-speedup MIN`` exits nonzero if the fused-v3 speedup on the
+paper's 3rd bottleneck layer (40x40, paper PE point) falls below MIN — the
+CI regression gate for the seed's modeled 59.3x. That gate geometry is
+fixed even under ``--tiny`` (which only shrinks the sweep image), so smoke
+runs check the same invariant as full runs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+
+from repro.cfu.compiler import (CFUSchedule, compile_block, compile_network,
+                                compile_vww_network)
+from repro.cfu.report import PAPER_LAYERS, modeled_network_sw_cycles
+from repro.cfu.timing import analyze
+from repro.configs.vww import PAPER_PE, PE_SWEEP, VWW
+from repro.core.fusion import Schedule, modeled_cycles
+from repro.models.mobilenetv2 import block_specs
+
+PIPELINES = ("v1", "v2", "v3")
+
+
+def sweep(img_hw: int = VWW.img_hw, pipelines=PIPELINES):
+    """Compile the VWW network + DSC chain, walk every PE design point."""
+    specs = block_specs()
+    sh = -(-img_hw // 2)
+    sw_net = modeled_network_sw_cycles(specs, img_hw, img_ch=VWW.img_ch,
+                                       head_ch=VWW.head_ch,
+                                       n_classes=VWW.n_classes)
+    sw_chain = 0.0
+    h = w = sh
+    for _, spec in specs:
+        sw_chain += modeled_cycles(spec, h, w, Schedule.V0_LAYER_BY_LAYER)
+        h, w = spec.out_hw(h, w)
+
+    prog_net = compile_vww_network(specs, img_hw, CFUSchedule.FUSED,
+                                   img_ch=VWW.img_ch, head_ch=VWW.head_ch,
+                                   n_classes=VWW.n_classes)
+    prog_chain = compile_network(specs, sh, sh, CFUSchedule.FUSED)
+
+    points = []
+    for pe in PE_SWEEP:
+        for pl in pipelines:
+            rep_n = analyze(prog_net, pl, pe=pe)
+            rep_c = analyze(prog_chain, pl, pe=pe)
+            points.append({
+                **dataclasses.asdict(pe),
+                "pipeline": pl,
+                "network_cycles": rep_n.total_cycles,
+                "network_speedup_vs_sw_v0": sw_net / rep_n.total_cycles,
+                "chain_cycles": rep_c.total_cycles,
+                "chain_speedup_vs_sw_v0": sw_chain / rep_c.total_cycles,
+            })
+    return {
+        "img_hw": img_hw,
+        "schedule": "fused",
+        "sw_v0_network_cycles": sw_net,
+        "sw_v0_chain_cycles": sw_chain,
+        "n_instr_network": len(prog_net),
+        "n_instr_chain": len(prog_chain),
+        "sweep": points,
+    }
+
+
+def block3_paper_speedup() -> float:
+    """Fused-v3 speedup on the paper's 3rd bottleneck layer at 40x40 under
+    the paper's PE config — the seed's 59.3x (Table III(A)) analogue. Fixed
+    geometry regardless of ``--tiny``, so the CI gate is size-independent."""
+    name, spec, hw = PAPER_LAYERS[0]
+    sw = modeled_cycles(spec, hw, hw, Schedule.V0_LAYER_BY_LAYER)
+    prog = compile_block(spec, hw, hw, CFUSchedule.FUSED, name=name,
+                         pe=PAPER_PE)
+    return sw / analyze(prog, "v3").total_cycles
+
+
+def run(report, img_hw: int = VWW.img_hw):
+    """Benchmark-harness entry (python -m benchmarks.run scaling)."""
+    result = sweep(img_hw)
+    report(f"# cycles-vs-PE sweep, full VWW {img_hw}x{img_hw} fused stream "
+           f"({result['n_instr_network']} instrs) + DSC chain "
+           f"({result['n_instr_chain']} instrs)")
+    report("exp_pes,dw_lanes,proj_engines,pipeline,network_cycles,"
+           "network_speedup,chain_cycles,chain_speedup")
+    for pt in result["sweep"]:
+        report(f"{pt['exp_pes']},{pt['dw_lanes']},{pt['proj_engines']},"
+               f"{pt['pipeline']},{pt['network_cycles']:.3e},"
+               f"{pt['network_speedup_vs_sw_v0']:.1f},"
+               f"{pt['chain_cycles']:.3e},"
+               f"{pt['chain_speedup_vs_sw_v0']:.1f}")
+    gate = block3_paper_speedup()
+    result["block3_paper_pe_v3_speedup"] = gate
+    report(f"# block-3 fused-v3 speedup at the paper PE point: "
+           f"{gate:.1f}x (paper/seed model: 59.3x)")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--img-hw", type=int, default=VWW.img_hw)
+    ap.add_argument("--tiny", action="store_true",
+                    help="16x16 image (CI smoke: same code path, ~1s)")
+    ap.add_argument("--json", default=None,
+                    help="write the sweep as JSON to this path")
+    ap.add_argument("--check-speedup", type=float, default=None,
+                    metavar="MIN",
+                    help="fail if the block-3 fused-v3 speedup at the "
+                         "paper PE point (fixed 40x40 geometry, NOT the "
+                         "sweep's chain column) drops below MIN "
+                         "(CI regression gate; seed models ~57x)")
+    args = ap.parse_args()
+
+    img_hw = 16 if args.tiny else args.img_hw
+    result = run(print, img_hw=img_hw)
+
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(result, f, indent=2)
+        print(f"# wrote {args.json}")
+
+    if args.check_speedup is not None:
+        got = result["block3_paper_pe_v3_speedup"]
+        if got < args.check_speedup:
+            raise SystemExit(
+                f"SPEEDUP REGRESSION: block-3 fused-v3 speedup at the "
+                f"paper PE point {got:.1f}x < required "
+                f"{args.check_speedup:.1f}x")
+        print(f"# speedup gate OK: {got:.1f}x >= {args.check_speedup:.1f}x")
+
+
+if __name__ == "__main__":
+    main()

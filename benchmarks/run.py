@@ -11,7 +11,7 @@ import argparse
 import time
 
 from benchmarks import (bench_cfu, bench_energy, bench_ffn_fusion,
-                        bench_speedup, bench_traffic)
+                        bench_scaling, bench_speedup, bench_traffic)
 
 BENCHES = {
     "speedup": bench_speedup,        # Fig. 14 / Table III(A)
@@ -19,6 +19,7 @@ BENCHES = {
     "energy": bench_energy,          # Table V analogue
     "ffn_fusion": bench_ffn_fusion,  # Table VII / LM generalization
     "cfu": bench_cfu,                # Tables III/V/VI from the CFU simulator
+    "scaling": bench_scaling,        # cycles-vs-PE sweep (full VWW stream)
 }
 
 

@@ -44,7 +44,25 @@ ST_PX     store the output pixel to the OUT map
 ST_VEC    store the requantized vector to a materialized map (layer-by-layer)
 BAR       stage barrier: drains the pipeline, resets the stream trackers
 HALT      end of program
+CONV_MAC  stem 3x3 standard conv over the loaded window -> int32 accumulator
+GAP_RST   reset the global-average-pool int32 accumulator
+GAP_ACC   add the last-loaded channel vector to the pooling accumulator
+GAP_FIN   round(acc / n) -> int8 pooled vector on the projection port
+CFG_PE    latch engine counts (expansion PEs, depthwise lanes, projection
+          engines) — timing-only; the golden executor ignores it
 ======== ====================================================================
+
+Full-network simulation (PR 2)
+------------------------------
+``compiler.compile_vww_network`` lowers a COMPLETE MobileNetV2-VWW
+inference (stem -> bottleneck chain -> head 1x1 -> GAP -> FC) into one
+stream; ``network.vww_cfu_params`` binds a quantized
+``models.mobilenetv2`` network to it. The executor carries a batch axis on
+every memory space, so one stream drives N images in lockstep
+(``run_words`` accepts (H, W, C) or (B, H, W, C)), bit-exact per image vs
+``models.mobilenetv2.forward_int8(..., return_quantized=True)``.
+``timing.PEConfig`` parameterizes the engine counts for
+cycles-vs-PE-count sweeps (``benchmarks/bench_scaling.py``).
 
 Schedules (``compiler.CFUSchedule``)
 ------------------------------------
@@ -76,13 +94,17 @@ Paper-table mapping (``benchmarks/bench_cfu.py``)
 from repro.cfu.isa import (Instr, Program, assemble, disassemble,
                            encode_program, decode_words, program_to_asm,
                            program_from_asm)
-from repro.cfu.compiler import CFUSchedule, compile_block, compile_network
+from repro.cfu.compiler import (CFUSchedule, compile_block, compile_network,
+                                compile_vww_network)
 from repro.cfu.executor import run_program, run_words
-from repro.cfu.timing import TimingReport, analyze
+from repro.cfu.network import (CFUFCParams, CFUHeadParams, CFUStemParams,
+                               vww_cfu_params)
+from repro.cfu.timing import PEConfig, TimingReport, analyze
 
 __all__ = [
     "Instr", "Program", "assemble", "disassemble", "encode_program",
     "decode_words", "program_to_asm", "program_from_asm",
-    "CFUSchedule", "compile_block", "compile_network",
-    "run_program", "run_words", "TimingReport", "analyze",
+    "CFUSchedule", "compile_block", "compile_network", "compile_vww_network",
+    "run_program", "run_words", "TimingReport", "analyze", "PEConfig",
+    "CFUStemParams", "CFUHeadParams", "CFUFCParams", "vww_cfu_params",
 ]

@@ -1,4 +1,5 @@
-"""Block compiler: lower ``DSCBlockSpec`` chains to CFU instruction streams.
+"""Block/network compiler: lower DSC chains and whole VWW networks to CFU
+instruction streams.
 
 Three schedules, matching the execution disciplines of ``core.dsc`` /
 ``core.traffic``:
@@ -19,22 +20,42 @@ lifetime, so the scratch arena is reused across blocks and the reported
 SRAM footprint is the maximum over blocks, which is what a real allocator
 would provision.
 
-For a multi-block network the stream is simply concatenated per-block
-programs: CFG / SET_BASE / LD_WGT prologue, then the pixel loops, with
-block i's output region becoming block i+1's input region. The stem / head
-/ classifier of ``models.mobilenetv2`` run on the scalar core in the
-paper's system and are not lowered here — the CFU accelerates the
-bottleneck (DSC) chain.
+``compile_network`` lowers a bare DSC chain (block i's output region is
+block i+1's input region). ``compile_vww_network`` lowers a COMPLETE
+MobileNetV2-VWW inference — the paper runs the stem/head on the scalar
+core, but nothing in the dataflow requires that, so this compiler folds
+them into the stream too:
+
+* stem     — 3x3 stride-2 standard conv on the expansion array: per output
+  pixel LD_WIN (halo-aware on-the-fly zp padding, identical gather to the
+  depthwise windows) -> CONV_MAC -> REQUANT F1 -> ST_PX;
+* DSC bottleneck chain — exactly ``compile_network``'s lowering, under any
+  of the three schedules;
+* head 1x1 — EXP_MAC in VEC mode per pixel (a 1x1 conv IS the expansion
+  engine's layer-by-layer mode);
+* global average pool + FC — GAP_RST / per-pixel LD_VEC + GAP_ACC /
+  GAP_FIN, whose pooled vector lands on the projection port, then one
+  PROJ_MAC + REQUANT OUT + ST_PX for the logits.
+
+Weight binding convention for the VWW stream: params[0] = stem,
+params[1..N] = DSC blocks, params[N+1] = head, params[N+2] = FC (built by
+``cfu.network.vww_cfu_params``).
+
+Every program opens with CFG_PE carrying the engine counts
+(``timing.PEConfig``) so a compiled stream is a *complete* description of
+the simulated hardware point — the cycles-vs-PE sweeps of
+``benchmarks/bench_scaling.py`` recompile only this one leading word.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.cfu import isa
 from repro.cfu.isa import Instr, Program
+from repro.cfu.timing import PEConfig
 from repro.core.dsc import DSCBlockSpec
 
 
@@ -76,10 +97,162 @@ def _block_chain_hw(specs: Sequence[Tuple[str, DSCBlockSpec]],
     return out
 
 
+class _Emitter:
+    """Instruction-stream builder shared by the chain and network entry
+    points: owns the stream, the scratch arena, and the BAR phase counter."""
+
+    def __init__(self, schedule: CFUSchedule, layout: Layout,
+                 scratch_space: int, scratch_base: int):
+        self.schedule = schedule
+        self.layout = layout
+        self.scratch_space = scratch_space
+        self.scratch_base = scratch_base
+        self.scratch_peak = 0
+        self.instrs: List[Instr] = []
+        self.phase = 0
+
+    def emit(self, op: str, *args):
+        self.instrs.append(Instr(op, tuple(args)))
+
+    def bar(self):
+        self.emit("BAR", self.phase % 256)
+        self.phase += 1
+
+    def dsc_block(self, name: str, spec: DSCBlockSpec, bh: int, bw: int,
+                  r_x: Region, r_y: Region, block_idx: int):
+        """One inverted-residual block under the emitter's schedule."""
+        assert spec.kernel == isa.KERNEL, "the CFU's depthwise is 3x3"
+        h2, w2 = spec.out_hw(bh, bw)
+        self.emit("CFG", spec.cin, spec.cmid, spec.cout, spec.stride, bh, bw)
+        self.emit("SET_BASE", isa.REG_IN, r_x.space, r_x.base)
+        self.emit("SET_BASE", isa.REG_OUT, r_y.space, r_y.base)
+        for which in (isa.WGT_EXP, isa.WGT_DW, isa.WGT_PROJ):
+            self.emit("LD_WGT", which, block_idx)
+
+        if self.schedule is CFUSchedule.FUSED:
+            self.bar()
+            for oy in range(h2):
+                for ox in range(w2):
+                    self.emit("LD_WIN", oy, ox)
+                    self.emit("EXP_MAC", isa.MODE_WIN)
+                    self.emit("REQUANT", isa.STAGE_F1)
+                    self.emit("DW_MAC")
+                    self.emit("REQUANT", isa.STAGE_F2)
+                    self.emit("PROJ_MAC")
+                    self.emit("REQUANT", isa.STAGE_OUT)
+                    if spec.has_residual:
+                        self.emit("RES_ADD", oy, ox)
+                    self.emit("ST_PX", oy, ox)
+            return
+
+        r_f1 = self.layout.add(f"f1@{name}", self.scratch_space,
+                               self.scratch_base, bh * bw * spec.cmid)
+        r_f2 = self.layout.add(f"f2@{name}", self.scratch_space,
+                               self.scratch_base + r_f1.size,
+                               h2 * w2 * spec.cmid)
+        self.scratch_peak = max(self.scratch_peak, r_f1.size + r_f2.size)
+        self.emit("SET_BASE", isa.REG_F1, r_f1.space, r_f1.base)
+        self.emit("SET_BASE", isa.REG_F2, r_f2.space, r_f2.base)
+        # pass 1: expansion at input resolution, F1 materialized
+        self.bar()
+        for y in range(bh):
+            for x in range(bw):
+                self.emit("LD_VEC", isa.REG_IN, y, x)
+                self.emit("EXP_MAC", isa.MODE_VEC)
+                self.emit("REQUANT", isa.STAGE_F1)
+                self.emit("ST_VEC", isa.REG_F1, y, x)
+        # pass 2: depthwise over the materialized F1, F2 materialized
+        self.bar()
+        for oy in range(h2):
+            for ox in range(w2):
+                self.emit("LD_TILE", isa.REG_F1, oy, ox)
+                self.emit("DW_MAC")
+                self.emit("REQUANT", isa.STAGE_F2)
+                self.emit("ST_VEC", isa.REG_F2, oy, ox)
+        # pass 3: projection (+ residual) to the block output
+        self.bar()
+        for oy in range(h2):
+            for ox in range(w2):
+                self.emit("LD_VEC", isa.REG_F2, oy, ox)
+                self.emit("PROJ_MAC")
+                self.emit("REQUANT", isa.STAGE_OUT)
+                if spec.has_residual:
+                    self.emit("RES_ADD", oy, ox)
+                self.emit("ST_PX", oy, ox)
+
+    def stem(self, cin: int, c0: int, h: int, w: int,
+             r_x: Region, r_y: Region, block_idx: int):
+        """3x3 stride-2 standard conv (the VWW stem) on the expansion
+        array: same halo-aware LD_WIN gather as the depthwise windows."""
+        h2, w2 = -(-h // 2), -(-w // 2)
+        self.emit("CFG", cin, c0, c0, 2, h, w)
+        self.emit("SET_BASE", isa.REG_IN, r_x.space, r_x.base)
+        self.emit("SET_BASE", isa.REG_OUT, r_y.space, r_y.base)
+        self.emit("LD_WGT", isa.WGT_CONV, block_idx)
+        self.bar()
+        for oy in range(h2):
+            for ox in range(w2):
+                self.emit("LD_WIN", oy, ox)
+                self.emit("CONV_MAC")
+                self.emit("REQUANT", isa.STAGE_F1)
+                self.emit("ST_PX", oy, ox)
+
+    def head(self, c_in: int, c_head: int, h: int, w: int,
+             r_x: Region, r_y: Region, block_idx: int):
+        """1x1 conv + ReLU6 (the classifier head) = EXP_MAC in VEC mode."""
+        self.emit("CFG", c_in, c_head, c_head, 1, h, w)
+        self.emit("SET_BASE", isa.REG_IN, r_x.space, r_x.base)
+        self.emit("SET_BASE", isa.REG_OUT, r_y.space, r_y.base)
+        self.emit("LD_WGT", isa.WGT_EXP, block_idx)
+        self.bar()
+        for y in range(h):
+            for x in range(w):
+                self.emit("LD_VEC", isa.REG_IN, y, x)
+                self.emit("EXP_MAC", isa.MODE_VEC)
+                self.emit("REQUANT", isa.STAGE_F1)
+                self.emit("ST_PX", y, x)
+
+    def gap_fc(self, c_head: int, n_classes: int, h: int, w: int,
+               r_x: Region, r_y: Region, block_idx: int):
+        """Global average pool + fully-connected logits."""
+        self.emit("CFG", c_head, c_head, n_classes, 1, h, w)
+        self.emit("SET_BASE", isa.REG_IN, r_x.space, r_x.base)
+        self.emit("SET_BASE", isa.REG_OUT, r_y.space, r_y.base)
+        self.emit("LD_WGT", isa.WGT_PROJ, block_idx)
+        self.bar()
+        self.emit("GAP_RST")
+        for y in range(h):
+            for x in range(w):
+                self.emit("LD_VEC", isa.REG_IN, y, x)
+                self.emit("GAP_ACC")
+        self.emit("GAP_FIN", h * w)
+        self.emit("PROJ_MAC")
+        self.emit("REQUANT", isa.STAGE_OUT)
+        self.emit("ST_PX", 0, 0)
+
+    def finish(self, layout: Layout, dram_top: int):
+        self.emit("HALT")
+        if self.scratch_space == isa.SPACE_DRAM:
+            layout.dram_size = dram_top + self.scratch_peak
+            layout.sram_size = 0
+        else:
+            layout.dram_size = dram_top
+            layout.sram_size = self.scratch_peak
+
+
+def _scratch_placement(schedule: CFUSchedule, dram_top: int
+                       ) -> Tuple[int, int]:
+    space = (isa.SPACE_SRAM if schedule is CFUSchedule.LAYER_SRAM
+             else isa.SPACE_DRAM)
+    return space, (dram_top if space == isa.SPACE_DRAM else 0)
+
+
 def compile_network(specs: Sequence[Tuple[str, DSCBlockSpec]],
                     h: int, w: int,
-                    schedule: CFUSchedule) -> Program:
+                    schedule: CFUSchedule,
+                    pe: Optional[PEConfig] = None) -> Program:
     """Lower a chain of DSC blocks into one CFU instruction stream."""
+    pe = pe or PEConfig()
     chain = _block_chain_hw(specs, h, w)
     layout = Layout()
     dram_top = 0
@@ -99,92 +272,21 @@ def compile_network(specs: Sequence[Tuple[str, DSCBlockSpec]],
         io_regions.append((prev, r_out))
         prev = r_out
 
-    # --- scratch arena for layer-by-layer intermediates (reused per block) --
-    scratch_space = (isa.SPACE_SRAM if schedule is CFUSchedule.LAYER_SRAM
-                     else isa.SPACE_DRAM)
-    scratch_base = dram_top if scratch_space == isa.SPACE_DRAM else 0
-    scratch_peak = 0
-
-    instrs: List[Instr] = []
-    phase = 0
+    scratch_space, scratch_base = _scratch_placement(schedule, dram_top)
+    em = _Emitter(schedule, layout, scratch_space, scratch_base)
+    em.emit("CFG_PE", pe.exp_pes, pe.dw_lanes, pe.proj_engines)
     for bi, ((name, spec, bh, bw), (r_x, r_y)) in enumerate(
             zip(chain, io_regions)):
-        assert spec.kernel == isa.KERNEL, "the CFU's depthwise is 3x3"
-        h2, w2 = spec.out_hw(bh, bw)
-        instrs.append(Instr("CFG", (spec.cin, spec.cmid, spec.cout,
-                                    spec.stride, bh, bw)))
-        instrs.append(Instr("SET_BASE", (isa.REG_IN, r_x.space, r_x.base)))
-        instrs.append(Instr("SET_BASE", (isa.REG_OUT, r_y.space, r_y.base)))
-        for which in (isa.WGT_EXP, isa.WGT_DW, isa.WGT_PROJ):
-            instrs.append(Instr("LD_WGT", (which, bi)))
-
-        if schedule is CFUSchedule.FUSED:
-            instrs.append(Instr("BAR", (phase % 256,))); phase += 1
-            for oy in range(h2):
-                for ox in range(w2):
-                    instrs.append(Instr("LD_WIN", (oy, ox)))
-                    instrs.append(Instr("EXP_MAC", (isa.MODE_WIN,)))
-                    instrs.append(Instr("REQUANT", (isa.STAGE_F1,)))
-                    instrs.append(Instr("DW_MAC", ()))
-                    instrs.append(Instr("REQUANT", (isa.STAGE_F2,)))
-                    instrs.append(Instr("PROJ_MAC", ()))
-                    instrs.append(Instr("REQUANT", (isa.STAGE_OUT,)))
-                    if spec.has_residual:
-                        instrs.append(Instr("RES_ADD", (oy, ox)))
-                    instrs.append(Instr("ST_PX", (oy, ox)))
-        else:
-            r_f1 = layout.add(f"f1@{name}", scratch_space, scratch_base,
-                              bh * bw * spec.cmid)
-            r_f2 = layout.add(f"f2@{name}", scratch_space,
-                              scratch_base + r_f1.size,
-                              h2 * w2 * spec.cmid)
-            scratch_peak = max(scratch_peak, r_f1.size + r_f2.size)
-            instrs.append(Instr("SET_BASE", (isa.REG_F1, r_f1.space,
-                                             r_f1.base)))
-            instrs.append(Instr("SET_BASE", (isa.REG_F2, r_f2.space,
-                                             r_f2.base)))
-            # pass 1: expansion at input resolution, F1 materialized
-            instrs.append(Instr("BAR", (phase % 256,))); phase += 1
-            for y in range(bh):
-                for x in range(bw):
-                    instrs.append(Instr("LD_VEC", (isa.REG_IN, y, x)))
-                    instrs.append(Instr("EXP_MAC", (isa.MODE_VEC,)))
-                    instrs.append(Instr("REQUANT", (isa.STAGE_F1,)))
-                    instrs.append(Instr("ST_VEC", (isa.REG_F1, y, x)))
-            # pass 2: depthwise over the materialized F1, F2 materialized
-            instrs.append(Instr("BAR", (phase % 256,))); phase += 1
-            for oy in range(h2):
-                for ox in range(w2):
-                    instrs.append(Instr("LD_TILE", (isa.REG_F1, oy, ox)))
-                    instrs.append(Instr("DW_MAC", ()))
-                    instrs.append(Instr("REQUANT", (isa.STAGE_F2,)))
-                    instrs.append(Instr("ST_VEC", (isa.REG_F2, oy, ox)))
-            # pass 3: projection (+ residual) to the block output
-            instrs.append(Instr("BAR", (phase % 256,))); phase += 1
-            for oy in range(h2):
-                for ox in range(w2):
-                    instrs.append(Instr("LD_VEC", (isa.REG_F2, oy, ox)))
-                    instrs.append(Instr("PROJ_MAC", ()))
-                    instrs.append(Instr("REQUANT", (isa.STAGE_OUT,)))
-                    if spec.has_residual:
-                        instrs.append(Instr("RES_ADD", (oy, ox)))
-                    instrs.append(Instr("ST_PX", (oy, ox)))
-
-    instrs.append(Instr("HALT", ()))
-
-    if scratch_space == isa.SPACE_DRAM:
-        layout.dram_size = dram_top + scratch_peak
-        layout.sram_size = 0
-    else:
-        layout.dram_size = dram_top
-        layout.sram_size = scratch_peak
+        em.dsc_block(name, spec, bh, bw, r_x, r_y, bi)
+    em.finish(layout, dram_top)
 
     last_name, last_spec, lh, lw = chain[-1]
     lh2, lw2 = last_spec.out_hw(lh, lw)
-    return Program(instrs, meta={
+    return Program(em.instrs, meta={
         "schedule": schedule.value,
         "layout": layout,
         "blocks": [(name, spec, bh, bw) for name, spec, bh, bw in chain],
+        "pe": pe,
         "in_region": "x0",
         "in_shape": (chain[0][2], chain[0][3], chain[0][1].cin),
         "out_region": f"y@{last_name}",
@@ -193,6 +295,78 @@ def compile_network(specs: Sequence[Tuple[str, DSCBlockSpec]],
 
 
 def compile_block(spec: DSCBlockSpec, h: int, w: int,
-                  schedule: CFUSchedule, name: str = "b0") -> Program:
+                  schedule: CFUSchedule, name: str = "b0",
+                  pe: Optional[PEConfig] = None) -> Program:
     """Lower a single block (convenience wrapper over compile_network)."""
-    return compile_network([(name, spec)], h, w, schedule)
+    return compile_network([(name, spec)], h, w, schedule, pe=pe)
+
+
+def compile_vww_network(specs: Sequence[Tuple[str, DSCBlockSpec]],
+                        img_hw: int,
+                        schedule: CFUSchedule,
+                        *,
+                        img_ch: int = 3,
+                        head_ch: int = 128,
+                        n_classes: int = 2,
+                        pe: Optional[PEConfig] = None) -> Program:
+    """Lower a COMPLETE VWW inference: stem -> DSC chain -> head -> GAP+FC.
+
+    ``specs`` is the bottleneck chain (``models.mobilenetv2.block_specs``);
+    the stem downsamples the (img_hw, img_hw, img_ch) image by 2 into the
+    chain's cin channels. Weight binding: params[0]=stem, params[1..N]=
+    blocks, params[N+1]=head, params[N+2]=FC.
+    """
+    pe = pe or PEConfig()
+    c0 = specs[0][1].cin
+    sh = sw = -(-img_hw // 2)                  # stem output resolution
+    chain = _block_chain_hw(specs, sh, sw)
+    last_name, last_spec, lh, lw = chain[-1]
+    lh2, lw2 = last_spec.out_hw(lh, lw)
+
+    layout = Layout()
+    dram_top = 0
+
+    def dram(name: str, size: int) -> Region:
+        nonlocal dram_top
+        r = layout.add(name, isa.SPACE_DRAM, dram_top, size)
+        dram_top += size
+        return r
+
+    r_img = dram("img", img_hw * img_hw * img_ch)
+    r_stem = dram("y@stem", sh * sw * c0)
+    io_regions: List[Tuple[Region, Region]] = []
+    prev = r_stem
+    for name, spec, bh, bw in chain:
+        h2, w2 = spec.out_hw(bh, bw)
+        r_out = dram(f"y@{name}", h2 * w2 * spec.cout)
+        io_regions.append((prev, r_out))
+        prev = r_out
+    r_head = dram("y@head", lh2 * lw2 * head_ch)
+    r_logits = dram("logits", n_classes)
+
+    scratch_space, scratch_base = _scratch_placement(schedule, dram_top)
+    em = _Emitter(schedule, layout, scratch_space, scratch_base)
+    em.emit("CFG_PE", pe.exp_pes, pe.dw_lanes, pe.proj_engines)
+    em.stem(img_ch, c0, img_hw, img_hw, r_img, r_stem, 0)
+    for bi, ((name, spec, bh, bw), (r_x, r_y)) in enumerate(
+            zip(chain, io_regions)):
+        em.dsc_block(name, spec, bh, bw, r_x, r_y, bi + 1)
+    em.head(last_spec.cout, head_ch, lh2, lw2, prev, r_head,
+            len(chain) + 1)
+    em.gap_fc(head_ch, n_classes, lh2, lw2, r_head, r_logits,
+              len(chain) + 2)
+    em.finish(layout, dram_top)
+
+    return Program(em.instrs, meta={
+        "schedule": schedule.value,
+        "layout": layout,
+        "blocks": [(name, spec, bh, bw) for name, spec, bh, bw in chain],
+        "pe": pe,
+        "network": "vww",
+        "head_ch": head_ch,
+        "n_classes": n_classes,
+        "in_region": "img",
+        "in_shape": (img_hw, img_hw, img_ch),
+        "out_region": "logits",
+        "out_shape": (n_classes,),
+    })

@@ -1,43 +1,62 @@
-"""Golden-model CFU executor: bit-exact, vectorized, pure numpy.
+"""Golden-model CFU executor: bit-exact, vectorized, batched, pure numpy.
 
 The interpreter executes the *encoded* 64-bit words (``run_words``), so the
 binary ISA provably carries the whole program; ``run_program`` is sugar that
 encodes first. Per instruction the datapath is one vectorized numpy op
-(an einsum for EXP/PROJ, an elementwise-multiply-reduce for DW) — the
+(an einsum for EXP/PROJ/CONV, an elementwise-multiply-reduce for DW) — the
 "vectorization" is across the channel/tile dimension, exactly the
 parallelism of the paper's engine arrays (9x8 expansion MACs, 9-way
 depthwise, 56 output-stationary projection engines).
 
+Batched simulation: every memory space carries a leading batch axis
+(``(B, bytes)``) and every datapath register broadcasts over it, so ONE
+instruction stream drives N images in lockstep — the multi-stream serving
+scenario. The instruction count is batch-independent (the stream is the
+same program); only the data plane widens. ``run_words`` accepts either a
+single image (H, W, C) or a batch (B, H, W, C) and is bit-exact per image
+either way (asserted in tests/test_cfu_differential.py).
+
 Bit-exactness contract: the int8 outputs equal
-``core.dsc.dsc_block_reference`` / ``dsc_block_fused_pixelwise`` with EXACT
-integer equality (tests/test_cfu.py), because every arithmetic step mirrors
-``core.quant`` operation-for-operation in IEEE float32 / int32:
+``core.dsc.dsc_block_reference`` / ``dsc_block_fused_pixelwise`` (and the
+full-network stream equals ``models.mobilenetv2.forward_int8``) with EXACT
+integer equality, because every arithmetic step mirrors ``core.quant``
+operation-for-operation in IEEE float32 / int32:
 
 * MAC loops accumulate raw int8 operands in int32 with the zero-point
   correction folded into the bias (``quant.fold_zero_point_correction``);
 * ``_requantize_np`` mirrors ``quant.requantize``: float32 multiply by the
   effective scale, round-half-to-even, int32 add of the zero point, clip;
 * ``_residual_add_np`` mirrors ``quant.residual_add_q``'s TFLite ADD;
+* ``GAP_FIN`` divides the int32 pooling accumulator in float32 and rounds
+  half-to-even — the exact arithmetic of the scalar-core reference's
+  global average pool;
 * on-the-fly padding (LD_WIN/LD_TILE) returns the destination domain's
   zero point for out-of-bounds taps — numerically identical to the
   reference's explicitly padded tensors (see the NOTE in
   ``dsc_block_reference``).
 
+Weight binding: ``LD_WGT.block`` indexes the host-side ``params`` sequence.
+Entries are ``QuantizedDSCParams`` for DSC blocks or the duck-typed aux
+parameter records of ``cfu.network`` (stem conv / head 1x1 / FC) — the
+machine only touches the attributes each instruction actually needs, so a
+stem entry carries conv weights and F1-domain requant constants and nothing
+else.
+
 Machine state (see package docstring): WIN (3x3xC + validity mask), VEC,
-F1T (3x3xM), F2V (M), the pending int32 accumulator ACC, the requant
-result RES, four base registers, and one int8 array per memory space.
+F1T (3x3xM), F2V (M), the GAP int32 pooling accumulator, the pending int32
+accumulator ACC, the requant result RES, four base registers, and one
+(B, bytes) int8 array per memory space.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.cfu import isa
 from repro.cfu.isa import Instr
-from repro.core.dsc import QuantizedDSCParams
 
 INT8_MIN, INT8_MAX = -128, 127
 
@@ -56,8 +75,7 @@ def _requantize_np(acc_i32: np.ndarray, eff_scale, zp_out: int,
     return np.clip(y, lo, hi).astype(np.int8)
 
 
-def _residual_add_np(y_q: np.ndarray, x_q: np.ndarray,
-                     p: QuantizedDSCParams) -> np.ndarray:
+def _residual_add_np(y_q: np.ndarray, x_q: np.ndarray, p) -> np.ndarray:
     s_y = np.float32(np.asarray(p.qp_out.scale))
     s_x = np.float32(np.asarray(p.qp_in.scale))
     acc = (s_y * (y_q.astype(np.float32) - p.qp_out.zero_point)
@@ -68,52 +86,60 @@ def _residual_add_np(y_q: np.ndarray, x_q: np.ndarray,
 
 @dataclasses.dataclass
 class _BlockWeights:
-    """Numpy views of one block's tensors + requant constants."""
+    """Numpy views of one weight-set's tensors + requant constants.
 
-    p: QuantizedDSCParams
-    w_exp: np.ndarray
-    w_dw: np.ndarray
-    w_proj: np.ndarray
-    b_exp: np.ndarray
-    b_dw: np.ndarray
-    b_proj: np.ndarray
-    m_exp: np.ndarray
-    m_dw: np.ndarray
-    m_proj: np.ndarray
+    ``p`` may be a ``QuantizedDSCParams`` or one of ``cfu.network``'s aux
+    records (stem/head/FC); fields an entry doesn't define stay ``None``
+    and the corresponding engines simply must not be used by the stream.
+    """
+
+    p: object
+    w_exp: Optional[np.ndarray]
+    w_dw: Optional[np.ndarray]
+    w_proj: Optional[np.ndarray]
+    w_conv: Optional[np.ndarray]
+    b_exp: Optional[np.ndarray]
+    b_dw: Optional[np.ndarray]
+    b_proj: Optional[np.ndarray]
+    b_conv: Optional[np.ndarray]
+    m_exp: Optional[np.ndarray]
+    m_dw: Optional[np.ndarray]
+    m_proj: Optional[np.ndarray]
 
     @classmethod
-    def of(cls, p: QuantizedDSCParams) -> "_BlockWeights":
+    def of(cls, p) -> "_BlockWeights":
+        def arr(name, dtype):
+            v = getattr(p, name, None)
+            return None if v is None else np.asarray(v, dtype)
         return cls(
             p=p,
-            w_exp=np.asarray(p.w_exp, np.int32),
-            w_dw=np.asarray(p.w_dw, np.int32),
-            w_proj=np.asarray(p.w_proj, np.int32),
-            b_exp=np.asarray(p.b_exp, np.int32),
-            b_dw=np.asarray(p.b_dw, np.int32),
-            b_proj=np.asarray(p.b_proj, np.int32),
-            m_exp=np.asarray(p.m_exp, np.float32),
-            m_dw=np.asarray(p.m_dw, np.float32),
-            m_proj=np.asarray(p.m_proj, np.float32),
+            w_exp=arr("w_exp", np.int32), w_dw=arr("w_dw", np.int32),
+            w_proj=arr("w_proj", np.int32), w_conv=arr("w_conv", np.int32),
+            b_exp=arr("b_exp", np.int32), b_dw=arr("b_dw", np.int32),
+            b_proj=arr("b_proj", np.int32), b_conv=arr("b_conv", np.int32),
+            m_exp=arr("m_exp", np.float32), m_dw=arr("m_dw", np.float32),
+            m_proj=arr("m_proj", np.float32),
         )
 
 
 @dataclasses.dataclass
 class ExecStats:
     n_instr: int = 0
-    n_macs: int = 0
+    n_macs: int = 0          # executed MACs, summed over the whole batch
     counts: Dict[str, int] = dataclasses.field(default_factory=dict)
 
 
 class CFUMachine:
-    """Architectural state + instruction dispatch."""
+    """Architectural state + instruction dispatch (batch axis throughout)."""
 
-    def __init__(self, params: Sequence[QuantizedDSCParams],
-                 dram_size: int, sram_size: int):
+    def __init__(self, params: Sequence, dram_size: int, sram_size: int,
+                 batch: int = 1):
         self.params = list(params)
         self._wcache: Dict[int, _BlockWeights] = {}
+        self.batch = batch
         self.mem = {
-            isa.SPACE_DRAM: np.zeros(max(dram_size, 1), np.int8),
-            isa.SPACE_SRAM: np.zeros(max(sram_size, 1), np.int8),
+            isa.SPACE_DRAM: np.zeros((batch, max(dram_size, 1)), np.int8),
+            isa.SPACE_SRAM: np.zeros((batch, max(sram_size, 1)), np.int8),
         }
         # CFG state
         self.cin = self.cmid = self.cout = 0
@@ -124,15 +150,16 @@ class CFUMachine:
         self.cur: Optional[_BlockWeights] = None
         self.cur_block: Optional[int] = None
         self.wgt_loaded: set = set()     # which engines LD_WGT streamed
-        # datapath registers
-        self.win = None          # (3,3,C) int8 input window
-        self.win_valid = None    # (3,3) bool
-        self.vec = None          # (C,) or (M,) int8
+        # datapath registers (all carry the leading batch axis)
+        self.win = None          # (B,3,3,C) int8 input window
+        self.win_valid = None    # (3,3) bool — shared across the batch
+        self.vec = None          # (B,C) or (B,M) int8
         self.acc = None          # pending int32 accumulator
         self.acc_src = None      # which MAC produced it ("exp_win"|...)
-        self.f1t = None          # (3,3,M) int8
-        self.f2v = None          # (M,) int8
-        self.res = None          # last requant result (int8 vector)
+        self.f1t = None          # (B,3,3,M) int8
+        self.f2v = None          # (B,M) int8
+        self.gap = None          # (B,M) int32 pooling accumulator
+        self.res = None          # last requant result (int8, (B,ch))
         self.stats = ExecStats()
 
     # --- address helpers ----------------------------------------------------
@@ -152,14 +179,15 @@ class CFUMachine:
         space, base = self.base[reg]
         _, w, ch = self._map_shape(reg)
         off = base + (y * w + x) * ch
-        return self.mem[space][off:off + ch]
+        return self.mem[space][:, off:off + ch]
 
     def _zp_of(self, reg: int) -> int:
+        # Lazy per-register lookup: aux weight records (stem/head/FC) only
+        # define the domains their instructions touch.
         p = self.cur.p
-        return {isa.REG_IN: p.qp_in.zero_point,
-                isa.REG_F1: p.qp_f1.zero_point,
-                isa.REG_F2: p.qp_f2.zero_point,
-                isa.REG_OUT: p.qp_out.zero_point}[reg]
+        attr = {isa.REG_IN: "qp_in", isa.REG_F1: "qp_f1",
+                isa.REG_F2: "qp_f2", isa.REG_OUT: "qp_out"}[reg]
+        return getattr(p, attr).zero_point
 
     def _gather_window(self, reg: int, oy: int, ox: int
                        ) -> Tuple[np.ndarray, np.ndarray]:
@@ -170,7 +198,7 @@ class CFUMachine:
         """
         hm, wm, ch = self._map_shape(reg)
         k, s = isa.KERNEL, self.stride
-        win = np.empty((k, k, ch), np.int8)
+        win = np.empty((self.batch, k, k, ch), np.int8)
         valid = np.zeros((k, k), bool)
         zp = np.int8(self._zp_of(reg))
         for dy in range(k):
@@ -178,10 +206,10 @@ class CFUMachine:
             for dx in range(k):
                 ix = ox * s + dx - 1
                 if 0 <= iy < hm and 0 <= ix < wm:
-                    win[dy, dx] = self._vec_slice(reg, iy, ix)
+                    win[:, dy, dx] = self._vec_slice(reg, iy, ix)
                     valid[dy, dx] = True
                 else:
-                    win[dy, dx] = zp
+                    win[:, dy, dx] = zp
         return win, valid
 
     # --- dispatch -----------------------------------------------------------
@@ -203,6 +231,9 @@ class CFUMachine:
         self.cin, self.cmid, self.cout = cin, cmid, cout
         self.stride, self.h, self.w = stride, h, w
         self.h2, self.w2 = -(-h // stride), -(-w // stride)
+
+    def _op_cfg_pe(self, exp_pes, dw_lanes, proj_engines):
+        pass  # engine counts shape time, never values (timing model only)
 
     def _op_set_base(self, reg, space, addr):
         self.base[reg] = (space, addr)
@@ -246,28 +277,36 @@ class CFUMachine:
         self.acc_src = "exp_win" if mode == isa.MODE_WIN else "exp_vec"
         self.stats.n_macs += src.size * self.cmid
 
+    def _op_conv_mac(self):
+        self._need_wgt(isa.WGT_CONV, "stem conv")
+        cw = self.cur
+        self.acc = (np.einsum("byxc,yxcm->bm", self.win.astype(np.int32),
+                              cw.w_conv) + cw.b_conv)
+        self.acc_src = "conv"
+        self.stats.n_macs += self.win.size * self.cmid
+
     def _op_dw_mac(self):
         self._need_wgt(isa.WGT_DW, "depthwise")
         cw = self.cur
         prod = self.f1t.astype(np.int32) * cw.w_dw
         self.acc = prod.sum(axis=(-3, -2)) + cw.b_dw
         self.acc_src = "dw"
-        self.stats.n_macs += isa.KERNEL * isa.KERNEL * self.cmid
+        self.stats.n_macs += self.f1t.size
 
     def _op_proj_mac(self):
         self._need_wgt(isa.WGT_PROJ, "projection")
         cw = self.cur
-        self.acc = (np.einsum("m,mn->n", self.f2v.astype(np.int32),
+        self.acc = (np.einsum("...m,mn->...n", self.f2v.astype(np.int32),
                               cw.w_proj) + cw.b_proj)
         self.acc_src = "proj"
-        self.stats.n_macs += self.cmid * self.cout
+        self.stats.n_macs += self.f2v.size * self.cout
 
     def _op_requant(self, stage):
         cw, p = self.cur, self.cur.p
         if stage == isa.STAGE_F1:
             y = _requantize_np(self.acc, cw.m_exp, p.qp_f1.zero_point,
                                relu=True, relu6_max_q=p.q6_f1)
-            if y.ndim == 3:
+            if self.acc_src == "exp_win":
                 # Fused path: taps whose SOURCE pixel was padding must read
                 # as zp_f1 downstream (the hardware's address check gates
                 # the expansion engines) — same masking as
@@ -285,6 +324,20 @@ class CFUMachine:
             self.res = _requantize_np(self.acc, cw.m_proj,
                                       p.qp_out.zero_point, relu=False)
 
+    def _op_gap_rst(self):
+        self.gap = np.zeros((self.batch, self.cmid), np.int32)
+
+    def _op_gap_acc(self):
+        self.gap += self.vec.astype(np.int32)
+
+    def _op_gap_fin(self, n):
+        # int32 sum -> float32 divide -> round-half-to-even: the exact
+        # arithmetic of forward_int8's global average pool.
+        g = np.round(self.gap.astype(np.float32) / np.float32(n))
+        g = np.clip(g.astype(np.int32), INT8_MIN, INT8_MAX).astype(np.int8)
+        self.f2v = g            # pooled vector feeds the projection port
+        self.res = g
+
     def _op_res_add(self, oy, ox):
         x_px = self._vec_slice(isa.REG_IN, oy, ox)
         self.res = _residual_add_np(self.res, x_px, self.cur.p)
@@ -299,31 +352,44 @@ class CFUMachine:
 # --- host-side entry points --------------------------------------------------
 
 
-def run_words(words: Sequence[int], x_q, params: Sequence[QuantizedDSCParams],
+def run_words(words: Sequence[int], x_q, params: Sequence,
               meta: Dict[str, object],
               return_stats: bool = False):
-    """Execute an encoded program on input ``x_q`` (H, W, C) int8.
+    """Execute an encoded program on ``x_q``: (H, W, C) int8 or a batch
+    (B, H, W, C) — one instruction stream drives the whole batch.
 
     ``meta`` is the Program.meta of the compiled stream (memory layout +
     input/output binding); the architectural behaviour is fully determined
     by the words themselves.
     """
     layout = meta["layout"]
-    m = CFUMachine(params, layout.dram_size, layout.sram_size)
     x_q = np.asarray(x_q, np.int8)
+    in_ndim = len(meta["in_shape"])
+    if x_q.ndim == in_ndim:
+        batched, x_q = False, x_q[None]
+    elif x_q.ndim == in_ndim + 1:
+        batched = True
+    else:
+        raise ValueError(f"input ndim {x_q.ndim}, expected {in_ndim} "
+                         f"or {in_ndim + 1} (batched)")
+    m = CFUMachine(params, layout.dram_size, layout.sram_size,
+                   batch=x_q.shape[0])
     r_in = layout.regions[meta["in_region"]]
-    if x_q.size != r_in.size:
-        raise ValueError(f"input has {x_q.size} bytes, region "
+    if x_q[0].size != r_in.size:
+        raise ValueError(f"input has {x_q[0].size} bytes, region "
                          f"{r_in.name} holds {r_in.size}")
-    m.mem[r_in.space][r_in.base:r_in.base + r_in.size] = x_q.reshape(-1)
+    m.mem[r_in.space][:, r_in.base:r_in.base + r_in.size] = \
+        x_q.reshape(x_q.shape[0], -1)
     stats = m.execute(isa.decode_words(words))
     r_out = layout.regions[meta["out_region"]]
-    y = m.mem[r_out.space][r_out.base:r_out.base + r_out.size]
-    y = y.reshape(meta["out_shape"]).copy()
+    y = m.mem[r_out.space][:, r_out.base:r_out.base + r_out.size]
+    y = y.reshape((x_q.shape[0],) + tuple(meta["out_shape"])).copy()
+    if not batched:
+        y = y[0]
     return (y, stats) if return_stats else y
 
 
-def run_program(program, x_q, params: Sequence[QuantizedDSCParams],
+def run_program(program, x_q, params: Sequence,
                 return_stats: bool = False):
     """Encode then execute — every run exercises the binary format."""
     return run_words(isa.encode_program(program), x_q, params, program.meta,

@@ -16,12 +16,30 @@ Operand value tables
 --------------------
 base registers : IN=0  OUT=1  F1=2  F2=3
 memory spaces  : DRAM=0  SRAM=1
-LD_WGT.which   : EXP=0  DW=1  PROJ=2
+LD_WGT.which   : EXP=0  DW=1  PROJ=2  CONV=3 (stem 3x3 standard conv)
 EXP_MAC.mode   : WIN=0 (3x3 window)  VEC=1 (single pixel, layer-by-layer)
 REQUANT.stage  : F1=0  F2=1  OUT=2
 
 The depthwise kernel is fixed at 3x3 (the paper's engines); ``CFG`` carries
 no kernel field.
+
+Full-network extension (PR 2)
+-----------------------------
+Four opcodes lift the stream from DSC-chain-only to a whole VWW inference:
+
+* ``CONV_MAC``  — standard 3x3 convolution over the loaded window using the
+  CONV weight set (the network stem); all taps and input channels reduce
+  into one length-``cmid`` accumulator.
+* ``GAP_RST`` / ``GAP_ACC`` / ``GAP_FIN`` — global average pooling: reset
+  the int32 pooling accumulator, add the last-loaded channel vector, and
+  finalize (``round(acc / n)`` in float32, clip to int8 — bit-identical to
+  the scalar-core reference). ``GAP_FIN`` leaves the pooled vector on the
+  projection input port, so the FC head is ``GAP_FIN`` -> ``PROJ_MAC`` ->
+  ``REQUANT OUT``.
+* ``CFG_PE``    — latch the engine counts (expansion window engines,
+  depthwise lanes, projection engines). Architecturally a no-op (the golden
+  executor ignores it); the timing model uses it to scale per-stage costs,
+  which is how cycles-vs-PE-count sweeps are carried *in the program*.
 """
 
 from __future__ import annotations
@@ -39,7 +57,7 @@ REG_NAMES = {REG_IN: "IN", REG_OUT: "OUT", REG_F1: "F1", REG_F2: "F2"}
 SPACE_DRAM, SPACE_SRAM = 0, 1
 SPACE_NAMES = {SPACE_DRAM: "DRAM", SPACE_SRAM: "SRAM"}
 
-WGT_EXP, WGT_DW, WGT_PROJ = 0, 1, 2
+WGT_EXP, WGT_DW, WGT_PROJ, WGT_CONV = 0, 1, 2, 3
 MODE_WIN, MODE_VEC = 0, 1
 STAGE_F1, STAGE_F2, STAGE_OUT = 0, 1, 2
 
@@ -63,6 +81,11 @@ OPCODES: Dict[str, int] = {
     "ST_PX": 0x0C,
     "ST_VEC": 0x0D,
     "BAR": 0x0E,
+    "CONV_MAC": 0x0F,
+    "GAP_RST": 0x10,
+    "GAP_ACC": 0x11,
+    "GAP_FIN": 0x12,
+    "CFG_PE": 0x13,
 }
 MNEMONICS = {v: k for k, v in OPCODES.items()}
 
@@ -83,6 +106,11 @@ FIELD_SPECS: Dict[str, List[Tuple[str, int]]] = {
     "ST_PX": [("oy", 12), ("ox", 12)],
     "ST_VEC": [("reg", 2), ("y", 12), ("x", 12)],
     "BAR": [("phase", 8)],
+    "CONV_MAC": [],
+    "GAP_RST": [],
+    "GAP_ACC": [],
+    "GAP_FIN": [("n", 12)],        # pooled pixel count (divisor)
+    "CFG_PE": [("exp_pes", 8), ("dw_lanes", 8), ("proj_engines", 8)],
 }
 
 

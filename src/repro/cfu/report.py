@@ -22,7 +22,9 @@ from repro.cfu import timing as cfu_timing
 from repro.cfu.compiler import CFUSchedule, compile_block
 from repro.cfu.timing import TimingReport
 from repro.core.dsc import DSCBlockSpec
-from repro.core.fusion import Schedule, modeled_cycles
+from repro.core.fusion import (SW_CYCLES_PER_LOOP_B, SW_CYCLES_PER_MAC_A,
+                               SW_CYCLES_PER_XFER_BYTE, Schedule,
+                               modeled_cycles)
 from repro.core.traffic import block_traffic
 
 # The four bottleneck layers the paper benchmarks (Fig. 14 / Tables III-VI).
@@ -35,6 +37,38 @@ PAPER_LAYERS: Tuple[Tuple[str, DSCBlockSpec, int], ...] = (
 
 PAPER_V3_CYCLES = {"3rd": 1.8e6, "5th": 1.4e6, "8th": 0.76e6, "15th": 1.0e6}
 PAPER_SPEEDUP_3RD = {"v1": 27.4, "v2": 46.3, "v3": 59.3}
+
+
+def modeled_network_sw_cycles(specs, img_hw: int, *, img_ch: int = 3,
+                              head_ch: int = 128, n_classes: int = 2) -> float:
+    """Software-v0 (scalar RISC-V, TFLite int8) cycles for a WHOLE VWW
+    inference: stem conv + the DSC chain + head 1x1 + GAP + FC.
+
+    The DSC chain uses ``core.fusion.modeled_cycles`` (calibrated to Table
+    III(A)); stem/head/FC use the same per-MAC cost model
+    ``a + b / inner_loop_len`` with their TFLite inner-loop lengths
+    (k*k*cin for the standard conv, cin for the 1x1s), plus the Table VI
+    transfer cost for their off-chip IO. This is the baseline the
+    full-network CFU speedups are quoted against.
+    """
+    def sw_mac(macs: float, inner: int) -> float:
+        return macs * (SW_CYCLES_PER_MAC_A + SW_CYCLES_PER_LOOP_B / inner)
+
+    c0 = specs[0][1].cin
+    sh = sw = -(-img_hw // 2)
+    total = sw_mac(sh * sw * 9 * img_ch * c0, 9 * img_ch)      # stem 3x3 s2
+    total += (img_hw * img_hw * img_ch
+              + sh * sw * c0) * SW_CYCLES_PER_XFER_BYTE
+    h = w = sh
+    for _, spec in specs:
+        total += modeled_cycles(spec, h, w, Schedule.V0_LAYER_BY_LAYER)
+        h, w = spec.out_hw(h, w)
+    c_last = specs[-1][1].cout
+    total += sw_mac(h * w * c_last * head_ch, c_last)           # head 1x1
+    total += (h * w * c_last                                    # head read
+              + h * w * head_ch) * SW_CYCLES_PER_XFER_BYTE      # head write
+    total += sw_mac(head_ch * n_classes, head_ch)               # FC
+    return total
 
 
 def build_layer_reports(

@@ -55,6 +55,27 @@ constants are defined here and imported there): every MAC and every byte
 at its hierarchy level. Unlike the analytic table, the MAC count here is
 the *executed* count, so the FUSED schedule honestly pays its 9x expansion
 recompute (the paper's No-Local-Reuse trade).
+
+Multi-PE model
+--------------
+``PEConfig`` parameterizes the engine counts whose paper values the
+calibrated constants embody: 9 expansion window engines (one per 3x3 tap,
+each an 8-way MAC tree), 9 depthwise lanes, 56 output-stationary
+projection engines. MAC-stage latencies scale inversely with the engine
+count relative to that baseline (half the engines -> twice the stage
+time; PE-array sizing as the first-order area/throughput knob, cf. Bai et
+al., arXiv:1809.01536); the projection stage keeps its exact
+``ceil(cout / proj_engines)`` group count. Requantize-stage costs do NOT
+scale — the quantize units are per-pipeline, not per-engine — so v3
+speedup saturates once a MAC stage drops below its requant stage:
+over-provisioned arrays buy nothing, which is exactly the knee the
+``benchmarks/bench_scaling.py`` sweep measures. The engine counts ride in
+the stream itself (the CFG_PE word); ``analyze(pe=...)`` can override
+them without recompiling.
+
+Full-network opcodes: CONV_MAC (the stem's 3x3 standard conv) runs on the
+expansion array at WIN-mode cost; GAP_ACC/GAP_FIN run on the vector
+post-processing path (8-lane adds, then one per-channel divide).
 """
 
 from __future__ import annotations
@@ -84,6 +105,26 @@ E_DRAM_BYTE = 160.0       # pJ per byte, off-chip DRAM
 PIPELINES = ("v1", "v2", "v3")
 _FILL_ITERS = {"v1": 0, "v2": 2, "v3": 4}
 
+GAP_LANES = 8.0           # vector adder lanes of the pooling accumulator
+
+
+@dataclasses.dataclass(frozen=True)
+class PEConfig:
+    """Engine counts of the simulated CFU (defaults = the paper's arrays).
+
+    Encodable in the CFG_PE instruction (8-bit fields, so 1..255 each).
+    """
+
+    exp_pes: int = 9          # expansion window engines (one per 3x3 tap)
+    dw_lanes: int = 9         # depthwise MAC lanes
+    proj_engines: int = PROJECTION_ENGINES    # output-stationary PEs (56)
+
+    def __post_init__(self):
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            if not 1 <= int(v) <= 255:
+                raise ValueError(f"PEConfig.{f.name}={v} outside [1, 255]")
+
 
 @dataclasses.dataclass
 class PhaseStats:
@@ -111,10 +152,13 @@ class TimingReport:
 
 
 class _Walker:
-    def __init__(self, pipeline: str):
+    def __init__(self, pipeline: str, pe: Optional[PEConfig] = None):
         if pipeline not in PIPELINES:
             raise ValueError(f"pipeline must be one of {PIPELINES}")
         self.pipeline = pipeline
+        self.pe = pe or PEConfig()
+        self.pe_locked = pe is not None      # analyze() override wins
+        # the stream may override via CFG_PE unless the caller pinned it
         # CFG / base state
         self.cin = self.cmid = self.cout = 0
         self.stride = 1
@@ -172,7 +216,7 @@ class _Walker:
             return
         st = self.iter_stages
         groups = {"ex_mac": "ex", "ex_q": "ex", "dw_mac": "dw",
-                  "dw_q": "dw", "pr_mac": "pr"}
+                  "dw_q": "dw", "pr_mac": "pr", "gap": "gap"}
         n_groups = len({groups[k] for k in st})
         # Pipelining (v2/v3) is a property of the FUSED pipeline, where one
         # iteration spans all three engines. Layer-by-layer iterations
@@ -183,7 +227,8 @@ class _Walker:
         elif self.pipeline == "v2":
             body = max(st.get("ex_mac", 0.0) + st.get("ex_q", 0.0),
                        st.get("dw_mac", 0.0) + st.get("dw_q", 0.0),
-                       st.get("pr_mac", 0.0))
+                       st.get("pr_mac", 0.0),
+                       st.get("gap", 0.0))
         else:
             body = max(st.values())
         cyc = body + C_PX_FIXED
@@ -221,6 +266,9 @@ class _Walker:
                 self.cin, self.cmid, self.cout = cin, cmid, cout
                 self.stride, self.h, self.w = stride, h, w
                 self.h2, self.w2 = -(-h // stride), -(-w // stride)
+            elif op == "CFG_PE":
+                if not self.pe_locked:
+                    self.pe = PEConfig(*ins.args)
             elif op == "SET_BASE":
                 reg, space, addr = ins.args
                 self.base[reg] = (space, addr)
@@ -228,7 +276,8 @@ class _Walker:
                 which = ins.args[0]
                 nbytes = {isa.WGT_EXP: self.cin * self.cmid,
                           isa.WGT_DW: k2 * self.cmid,
-                          isa.WGT_PROJ: self.cmid * self.cout}[which]
+                          isa.WGT_PROJ: self.cmid * self.cout,
+                          isa.WGT_CONV: k2 * self.cin * self.cmid}[which]
                 self.weight_bytes += nbytes
                 self.bytes_rw[isa.SPACE_DRAM] += nbytes
                 # boot-resident: no per-frame transfer cycles
@@ -259,13 +308,24 @@ class _Walker:
                 pixels = k2 if mode == isa.MODE_WIN else 1
                 self.macs += pixels * self.cin * self.cmid
                 self.iter_stages["ex_mac"] = (
-                    C_EX_PER_IN_CH * self.cin * self.cmid * pixels / k2)
+                    C_EX_PER_IN_CH * self.cin * self.cmid * pixels / k2
+                    * (k2 / self.pe.exp_pes))
+            elif op == "CONV_MAC":
+                # Standard 3x3 conv on the expansion array: k2*cin*cmid
+                # MACs, one tap per window engine — WIN-mode expansion cost,
+                # but only ONE output vector to requantize (VEC-mode quant).
+                self.macs += k2 * self.cin * self.cmid
+                self.iter_stages["ex_mac"] = (
+                    C_EX_PER_IN_CH * self.cin * self.cmid
+                    * (k2 / self.pe.exp_pes))
+                self.last_exp_mode = isa.MODE_VEC
             elif op == "DW_MAC":
                 self.macs += k2 * self.cmid
-                self.iter_stages["dw_mac"] = C_DW * self.cmid
+                self.iter_stages["dw_mac"] = (C_DW * self.cmid
+                                              * (k2 / self.pe.dw_lanes))
             elif op == "PROJ_MAC":
                 self.macs += self.cmid * self.cout
-                groups = -(-self.cout // PROJECTION_ENGINES)
+                groups = -(-self.cout // self.pe.proj_engines)
                 self.iter_stages["pr_mac"] = C_PR * self.cmid * groups
             elif op == "REQUANT":
                 stage = ins.args[0]
@@ -278,6 +338,14 @@ class _Walker:
             elif op == "RES_ADD":
                 oy, ox = ins.args
                 self._read(isa.REG_IN, oy, ox, "res")
+            elif op == "GAP_RST":
+                pass
+            elif op == "GAP_ACC":
+                self.iter_stages["gap"] = self.cmid / GAP_LANES
+            elif op == "GAP_FIN":
+                # one rounding divide per channel on the post-processing path
+                self.iter_stages["gap"] = (self.iter_stages.get("gap", 0.0)
+                                           + self.cmid)
             elif op == "ST_PX":
                 self._write(isa.REG_OUT, self.cout)
             elif op == "ST_VEC":
@@ -296,9 +364,14 @@ def _cyc_per_byte(space: int) -> float:
             else CYC_PER_SRAM_BYTE)
 
 
-def analyze(program: Program, pipeline: str = "v3") -> TimingReport:
-    """Walk one compiled program and report cycles/traffic/energy."""
-    w = _Walker(pipeline)
+def analyze(program: Program, pipeline: str = "v3",
+            pe: Optional[PEConfig] = None) -> TimingReport:
+    """Walk one compiled program and report cycles/traffic/energy.
+
+    ``pe`` overrides the stream's CFG_PE engine counts (what-if analysis
+    without recompiling); by default the stream's own word governs.
+    """
+    w = _Walker(pipeline, pe=pe)
     w.walk(program)
     compute = sum(p.compute_cycles for p in w.phases)
     transfer = sum(p.transfer_cycles for p in w.phases)

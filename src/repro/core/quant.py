@@ -89,6 +89,12 @@ def effective_scale(s_in, s_w, s_out) -> np.ndarray:
             / np.asarray(s_out, np.float64)).astype(np.float32)
 
 
+def relu6_max_q(qp: QParams) -> int:
+    """The quantized value of 6.0 in ``qp``'s domain (ReLU6 clamp), <= 127."""
+    return int(min(INT8_MAX,
+                   qp.zero_point + round(6.0 / float(np.asarray(qp.scale)))))
+
+
 def requantize(acc_i32, eff_scale, zp_out: int, *, relu: bool = False,
                relu6_max_q: Optional[int] = None):
     """int32 accumulator -> int8 output (bias must already be added).

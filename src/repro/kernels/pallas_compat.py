@@ -1,0 +1,14 @@
+"""Version compatibility for the Pallas TPU API surface the kernels use.
+
+The kernels target the current Pallas name ``pltpu.CompilerParams``; older
+jax releases (0.4.x) ship the same dataclass as ``pltpu.TPUCompilerParams``.
+Resolve the name once here so every kernel works under either release
+without sprinkling getattr at the call sites.
+"""
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams
+
+__all__ = ["CompilerParams"]

@@ -1,19 +1,27 @@
 """CFU simulator launcher: compile, execute, and time a network on the CFU.
 
+    python -m repro.launch.cfu --network vww                  # full inference
+    python -m repro.launch.cfu --network vww --batch 8 --pe 18,18,112
     python -m repro.launch.cfu --net mobilenetv2 --schedule fused
     python -m repro.launch.cfu --block 3rd --schedule all --pipeline v3
-    python -m repro.launch.cfu --net mobilenetv2 --asm /tmp/net.asm
+    python -m repro.launch.cfu --network vww --asm /tmp/vww.asm
 
-``--net mobilenetv2`` lowers the bottleneck (DSC) chain of
-``models.mobilenetv2`` — the stem/head run on the scalar core in the
-paper's system — at the stem-output resolution (40x40 for the paper's
-80x80 input). ``--block`` targets one of the paper's four benchmarked
+``--network vww`` lowers a COMPLETE MobileNetV2-VWW inference — stem conv,
+bottleneck chain, head 1x1, global average pool, FC — into one instruction
+stream (``compile_vww_network``) and, unless ``--no-verify`` is given,
+executes the encoded words through the golden executor for batch size 1
+AND ``--batch`` images at once (the batched executor runs one stream over
+all images in lockstep), checking bit-exactly against
+``models.mobilenetv2.forward_int8(..., return_quantized=True)`` per image.
+
+``--net mobilenetv2`` lowers only the bottleneck (DSC) chain, as the
+paper's system does (stem/head on the scalar core), at the stem-output
+resolution. ``--block`` targets one of the paper's four benchmarked
 bottleneck layers at its published feature-map size.
 
-Unless ``--no-verify`` is given, the encoded instruction stream is executed
-by the golden model and checked bit-exactly (exact integer equality)
-against the ``core.dsc`` reference chain. ``--json`` writes the timing
-reports to a file (``results/cfu/`` by convention, like launch.dryrun).
+``--pe`` sets the engine counts baked into the stream's CFG_PE word
+(default: the paper's 9,9,56); ``--json`` writes the timing reports to a
+file (``results/cfu/`` by convention, like launch.dryrun).
 """
 
 from __future__ import annotations
@@ -28,10 +36,13 @@ import jax
 import numpy as np
 
 from repro.cfu import isa
-from repro.cfu.compiler import CFUSchedule, compile_network
+from repro.cfu.compiler import (CFUSchedule, compile_network,
+                                compile_vww_network)
 from repro.cfu.executor import run_program
-from repro.cfu.report import PAPER_LAYERS
-from repro.cfu.timing import analyze
+from repro.cfu.network import vww_cfu_params
+from repro.cfu.report import PAPER_LAYERS, modeled_network_sw_cycles
+from repro.cfu.timing import PEConfig, analyze
+from repro.configs.vww import VWW
 from repro.core import dsc, quant
 from repro.core.fusion import Schedule, modeled_cycles, run_block
 
@@ -60,26 +71,82 @@ def _single_block(key, name: str):
     return [(name, spec)], [qp], hw
 
 
-def main():
-    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    tgt = ap.add_mutually_exclusive_group()
-    tgt.add_argument("--net", choices=["mobilenetv2"], default=None)
-    tgt.add_argument("--block", choices=[n for n, _, _ in PAPER_LAYERS])
-    ap.add_argument("--schedule", default="fused",
-                    choices=[s.value for s in CFUSchedule] + ["all"])
-    ap.add_argument("--pipeline", default="v3", choices=["v1", "v2", "v3"])
-    ap.add_argument("--hw", type=int, default=40,
-                    help="input feature-map size for --net (stem output)")
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--no-verify", action="store_true",
-                    help="skip the bit-exact golden-model execution")
-    ap.add_argument("--asm", default=None,
-                    help="dump the text assembly of the stream to this path")
-    ap.add_argument("--json", default=None,
-                    help="write timing reports as JSON to this path")
-    args = ap.parse_args()
+def _parse_pe(text) -> PEConfig:
+    if text is None:
+        return PEConfig()
+    parts = [int(t) for t in text.split(",")]
+    if len(parts) != 3:
+        raise SystemExit("--pe wants exp_pes,dw_lanes,proj_engines")
+    return PEConfig(*parts)
 
-    key = jax.random.PRNGKey(args.seed)
+
+def _dump_asm(prog, path: str):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        f.write(isa.program_to_asm(prog))
+    print(f"# assembly ({len(prog)} instrs) -> {path}")
+
+
+def _run_vww(args, key, pe: PEConfig, schedules):
+    """Full-network mode: compile, time, and batch-verify a VWW inference."""
+    from repro.models import mobilenetv2 as mnv2
+    hw, batch = args.img_hw, args.batch
+    net = mnv2.init_and_quantize(key, img_hw=hw, head_ch=VWW.head_ch,
+                                 n_classes=VWW.n_classes)
+    specs = mnv2.block_specs()
+    params = vww_cfu_params(net)
+    sw_cycles = modeled_network_sw_cycles(
+        specs, hw, img_ch=VWW.img_ch, head_ch=VWW.head_ch,
+        n_classes=VWW.n_classes)
+
+    print(f"# CFU simulation: full VWW inference ({hw}x{hw}x{VWW.img_ch}, "
+          f"stem+{len(specs)} blocks+head+GAP+FC), batch={batch}, "
+          f"pe=({pe.exp_pes},{pe.dw_lanes},{pe.proj_engines}), "
+          f"pipeline={args.pipeline}")
+    print("schedule,n_instr,cycles,speedup_vs_sw_v0,dram_bytes,sram_bytes,"
+          "sram_buffer_bytes,energy_uJ,verified_b1,verified_bN,exec_s")
+    results = {"target": f"vww {hw}x{hw}", "pipeline": args.pipeline,
+               "batch": batch, "pe": dataclasses.asdict(pe),
+               "sw_v0_cycles": sw_cycles, "schedules": {}}
+    imgs_q = ref = None
+    if not args.no_verify:
+        # schedule-independent: quantize once, reference-infer once
+        rng = np.random.default_rng(args.seed)
+        imgs = rng.standard_normal(
+            (batch, hw, hw, VWW.img_ch)).astype(np.float32)
+        imgs_q = np.asarray(quant.quantize(imgs, net.qp_img))
+        ref = np.asarray(mnv2.forward_batch(imgs, net,
+                                            return_quantized=True))
+    for sched in schedules:
+        prog = compile_vww_network(specs, hw, sched, img_ch=VWW.img_ch,
+                                   head_ch=VWW.head_ch,
+                                   n_classes=VWW.n_classes, pe=pe)
+        if args.asm:
+            _dump_asm(prog, args.asm)
+        rep = analyze(prog, args.pipeline)
+        v1 = vn = "-"
+        exec_s = 0.0
+        if not args.no_verify:
+            t0 = time.time()
+            y1 = run_program(prog, imgs_q[0], params)
+            yb = run_program(prog, imgs_q, params)
+            exec_s = time.time() - t0
+            v1 = bool(np.array_equal(y1, ref[0]))
+            vn = bool(np.array_equal(yb, ref))
+            if not (v1 and vn):
+                raise SystemExit(
+                    f"BIT-EXACTNESS FAILURE under {sched.value} "
+                    f"(batch1={v1}, batch{batch}={vn})")
+        print(f"{sched.value},{len(prog)},{rep.total_cycles:.3e},"
+              f"{sw_cycles / rep.total_cycles:.1f},{rep.dram_bytes},"
+              f"{rep.sram_bytes},{rep.sram_buffer_bytes},"
+              f"{rep.energy_pj['total'] / 1e6:.2f},{v1},{vn},{exec_s:.2f}")
+        results["schedules"][sched.value] = dataclasses.asdict(rep)
+    return results
+
+
+def _run_chain(args, key, pe: PEConfig, schedules):
+    """DSC-chain / single-block modes (the paper's CFU partitioning)."""
     if args.block:
         specs, params, hw = _single_block(key, args.block)
         target = f"block {args.block} ({hw}x{hw})"
@@ -87,9 +154,6 @@ def main():
         hw = args.hw
         specs, params = _net_blocks(key, hw)
         target = f"mobilenetv2 DSC chain ({hw}x{hw} stem output)"
-
-    schedules = (list(CFUSchedule) if args.schedule == "all"
-                 else [CFUSchedule(args.schedule)])
 
     # v0 software baseline over the same chain (calibrated cycle model)
     h = w = hw
@@ -103,14 +167,12 @@ def main():
     print("schedule,n_instr,cycles,speedup_vs_sw_v0,dram_bytes,sram_bytes,"
           "sram_buffer_bytes,energy_uJ,verified,exec_s")
     results = {"target": target, "pipeline": args.pipeline,
+               "pe": dataclasses.asdict(pe),
                "sw_v0_cycles": sw_cycles, "schedules": {}}
     for sched in schedules:
-        prog = compile_network(specs, hw, hw, sched)
+        prog = compile_network(specs, hw, hw, sched, pe=pe)
         if args.asm:
-            os.makedirs(os.path.dirname(args.asm) or ".", exist_ok=True)
-            with open(args.asm, "w") as f:
-                f.write(isa.program_to_asm(prog))
-            print(f"# assembly ({len(prog)} instrs) -> {args.asm}")
+            _dump_asm(prog, args.asm)
         rep = analyze(prog, args.pipeline)
         verified, exec_s = "-", 0.0
         if not args.no_verify:
@@ -133,6 +195,47 @@ def main():
               f"{rep.sram_bytes},{rep.sram_buffer_bytes},"
               f"{rep.energy_pj['total'] / 1e6:.2f},{verified},{exec_s:.2f}")
         results["schedules"][sched.value] = dataclasses.asdict(rep)
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    tgt = ap.add_mutually_exclusive_group()
+    tgt.add_argument("--network", choices=["vww"], default=None,
+                     help="full inference: stem + blocks + head + GAP + FC")
+    tgt.add_argument("--net", choices=["mobilenetv2"], default=None,
+                     help="DSC bottleneck chain only (paper partitioning)")
+    tgt.add_argument("--block", choices=[n for n, _, _ in PAPER_LAYERS])
+    ap.add_argument("--schedule", default="fused",
+                    choices=[s.value for s in CFUSchedule] + ["all"])
+    ap.add_argument("--pipeline", default="v3", choices=["v1", "v2", "v3"])
+    ap.add_argument("--hw", type=int, default=40,
+                    help="input feature-map size for --net (stem output)")
+    ap.add_argument("--img-hw", type=int, default=VWW.img_hw,
+                    help="image size for --network vww")
+    ap.add_argument("--batch", type=int, default=VWW.batch,
+                    help="batched-executor image count for --network vww")
+    ap.add_argument("--pe", default=None, metavar="E,D,P",
+                    help="engine counts exp_pes,dw_lanes,proj_engines "
+                         "(default 9,9,56 — the paper's arrays)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-verify", action="store_true",
+                    help="skip the bit-exact golden-model execution")
+    ap.add_argument("--asm", default=None,
+                    help="dump the text assembly of the stream to this path")
+    ap.add_argument("--json", default=None,
+                    help="write timing reports as JSON to this path")
+    args = ap.parse_args()
+
+    key = jax.random.PRNGKey(args.seed)
+    pe = _parse_pe(args.pe)
+    schedules = (list(CFUSchedule) if args.schedule == "all"
+                 else [CFUSchedule(args.schedule)])
+
+    if args.network:
+        results = _run_vww(args, key, pe, schedules)
+    else:
+        results = _run_chain(args, key, pe, schedules)
 
     if args.json:
         os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)

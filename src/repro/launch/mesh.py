@@ -17,19 +17,33 @@ data parallelism (one gradient all-reduce per step over DCN).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+try:  # jax >= 0.5: explicit axis types on every mesh
+    from jax.sharding import AxisType
+except (ImportError, AttributeError):  # jax 0.4.x: implicit (Auto) axes only
+    AxisType = None
+
+
+def make_mesh(shape, names) -> Mesh:
+    """``jax.make_mesh`` with Auto axis types where the release supports
+    them. Older jax (0.4.x) has neither ``AxisType`` nor the ``axis_types``
+    kwarg — every axis is implicitly Auto there, so plain make_mesh is the
+    same mesh."""
+    if AxisType is None:
+        return jax.make_mesh(tuple(shape), tuple(names))
+    return jax.make_mesh(tuple(shape), tuple(names),
+                         axis_types=(AxisType.Auto,) * len(names))
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(*, model: int = 1) -> Mesh:
     """Single-host mesh for smoke tests/examples (1 device by default)."""
     n = len(jax.devices())
     assert n % model == 0
-    return jax.make_mesh((n // model, model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return make_mesh((n // model, model), ("data", "model"))

@@ -141,39 +141,35 @@ def _conv2d_f32(x, w, stride=1):
 
 
 def _stem_int8(img_q, p: MobileNetV2Params):
-    """int8 3x3 s2 conv with on-the-fly padding + requant + ReLU6."""
+    """int8 3x3 s2 conv: zero-point padding (pad_top = pad_left = 1, the
+    convention of ``core.dsc._window_indices`` and the CFU's LD_WIN gather)
+    + zp-folded bias on raw int8 taps + requant + ReLU6."""
+    img_p = jnp.pad(img_q, ((1, 1), (1, 1), (0, 0)),
+                    constant_values=p.qp_img.zero_point)
     acc = jax.lax.conv_general_dilated(
-        img_q.astype(jnp.int32)[None],
+        img_p.astype(jnp.int32)[None],
         p.stem_w.astype(jnp.int32),
-        window_strides=(2, 2), padding="SAME",
+        window_strides=(2, 2), padding="VALID",
         dimension_numbers=("NHWC", "HWIO", "NHWC"))[0]
-    # conv with raw int8 + zp folding: padding zeros contribute 0*w; the
-    # zp-correction term assumes zp_in per tap, so correct pad taps back.
-    # For simplicity the stem pads with zero_point via explicit pad:
+    # stem_b carries the -zp_img * sum(w) fold, so raw-int8 taps with
+    # zp_img padding are exact (pad taps contribute zero, see dsc.py NOTE).
     acc = acc + p.stem_b
-    q6 = int(min(127, p.qp_stem.zero_point
-                 + round(6.0 / float(np.asarray(p.qp_stem.scale)))))
     return quant.requantize(acc, p.stem_m, p.qp_stem.zero_point, relu=True,
-                            relu6_max_q=q6)
+                            relu6_max_q=quant.relu6_max_q(p.qp_stem))
 
 
 def forward_int8(img, p: MobileNetV2Params,
                  schedule: Schedule = Schedule.V3_INTRA_STAGE,
-                 use_pallas: bool = False):
-    """Full int8 inference for one image (H, W, 3) float32 -> logits."""
+                 use_pallas: bool = False,
+                 return_quantized: bool = False):
+    """Full int8 inference for one image (H, W, 3) float32 -> logits.
+
+    ``return_quantized`` returns the raw int8 logits instead of their
+    dequantized floats — the exact words a hardware CFU would hand back,
+    and what the CFU simulator's differential tests compare against.
+    """
     img_q = quant.quantize(img, p.qp_img)
-    # stem expects zp-padded input; conv_general pads with 0, so shift:
-    shifted = img_q.astype(jnp.int32) - p.qp_img.zero_point
-    acc = jax.lax.conv_general_dilated(
-        shifted[None], p.stem_w.astype(jnp.int32), window_strides=(2, 2),
-        padding="SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))[0]
-    # undo the zp-folding inside stem_b (it assumed raw int8 inputs):
-    acc = acc + p.stem_b - quant.fold_zero_point_correction(
-        np.asarray(p.stem_w), p.qp_img.zero_point, (0, 1, 2))
-    q6 = int(min(127, p.qp_stem.zero_point
-                 + round(6.0 / float(np.asarray(p.qp_stem.scale)))))
-    x = quant.requantize(acc, p.stem_m, p.qp_stem.zero_point, relu=True,
-                         relu6_max_q=q6)
+    x = _stem_int8(img_q, p)
 
     for qp in p.blocks:
         if use_pallas:
@@ -193,10 +189,8 @@ def forward_int8(img, p: MobileNetV2Params,
     # head 1x1 + ReLU6
     acc = jnp.einsum("hwc,cm->hwm", x.astype(jnp.int32),
                      p.head_w.astype(jnp.int32)) + p.head_b
-    q6h = int(min(127, p.qp_head.zero_point
-                  + round(6.0 / float(np.asarray(p.qp_head.scale)))))
     h = quant.requantize(acc, p.head_m, p.qp_head.zero_point, relu=True,
-                         relu6_max_q=q6h)
+                         relu6_max_q=quant.relu6_max_q(p.qp_head))
     # global average pool (int32 mean, rounded)
     hw = h.shape[0] * h.shape[1]
     g = jnp.round(h.astype(jnp.int32).sum(axis=(0, 1)) / hw).astype(jnp.int32)
@@ -204,6 +198,8 @@ def forward_int8(img, p: MobileNetV2Params,
     # fc
     acc = (g.astype(jnp.int32) @ p.fc_w.astype(jnp.int32)) + p.fc_b
     logits_q = quant.requantize(acc, p.fc_m, p.qp_logits.zero_point)
+    if return_quantized:
+        return logits_q
     return quant.dequantize(logits_q, p.qp_logits)
 
 

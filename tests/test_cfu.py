@@ -4,15 +4,19 @@ binary ISA must round-trip, and the timing model's measured bytes must
 equal core/traffic's analytic Eq. 1/2 counts exactly."""
 
 import functools
+import json
+import os
 
 import jax
 import numpy as np
 import pytest
 
 from repro.cfu import isa
-from repro.cfu.compiler import CFUSchedule, compile_block, compile_network
+from repro.cfu.compiler import (CFUSchedule, compile_block, compile_network,
+                                compile_vww_network)
 from repro.cfu.executor import run_program, run_words
-from repro.cfu.timing import analyze
+from repro.cfu.network import vww_cfu_params
+from repro.cfu.timing import PEConfig, analyze
 from repro.core import dsc, quant
 from repro.core.dsc import DSCBlockSpec
 from repro.core.fusion import Schedule, modeled_cycles
@@ -201,3 +205,115 @@ def test_fused_energy_accounts_for_recompute():
     assert f.macs > d.macs                      # No-Local-Reuse trade
     # ... and still wins on total energy: movement dominates MACs.
     assert f.energy_pj["total"] < d.energy_pj["total"]
+
+
+# --- multi-PE timing ---------------------------------------------------------
+
+
+def test_pe_scaling_monotone_and_default_exact():
+    """Default PEConfig reproduces the calibrated model exactly; fewer
+    engines never get faster, more never get slower, and the gain
+    saturates (requant units don't scale — the sweep's knee)."""
+    spec, hw = DSCBlockSpec(cin=8, cmid=48, cout=8, stride=1), 12
+    prog = compile_block(spec, hw, hw, CFUSchedule.FUSED)
+    base = analyze(prog, "v3").total_cycles
+    assert base == analyze(prog, "v3", pe=PEConfig(9, 9, 56)).total_cycles
+    cyc = [analyze(prog, "v3", pe=PEConfig(e, e, p)).total_cycles
+           for e, p in ((3, 14), (6, 28), (9, 56), (18, 112), (36, 224))]
+    assert all(a >= b for a, b in zip(cyc, cyc[1:]))      # monotone
+    assert cyc[0] > base                                  # fewer PEs: slower
+    # diminishing returns: the last doubling buys less than the first
+    assert (cyc[0] - cyc[1]) > (cyc[3] - cyc[4])
+
+
+def test_cfg_pe_rides_in_the_stream():
+    """The engine counts are program state: a stream compiled for a bigger
+    array times differently with NO analyze() override, and the word
+    round-trips like any other."""
+    spec, hw = DSCBlockSpec(cin=8, cmid=48, cout=8, stride=1), 10
+    small = compile_block(spec, hw, hw, CFUSchedule.FUSED,
+                          pe=PEConfig(3, 3, 14))
+    big = compile_block(spec, hw, hw, CFUSchedule.FUSED,
+                        pe=PEConfig(18, 18, 112))
+    assert small.instrs[0].op == "CFG_PE"
+    assert analyze(small, "v3").total_cycles > analyze(big, "v3").total_cycles
+    # ...and the executor's results are unaffected by engine counts.
+    x_q, qp, ref = _block(spec, hw)
+    np.testing.assert_array_equal(run_program(small, x_q, [qp]),
+                                  run_program(big, x_q, [qp]))
+
+
+# --- golden-vector regression (full VWW inference) ---------------------------
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden",
+                           "cfu_vww.json")
+
+
+def _vww_golden_actual():
+    """Recompute every golden quantity for the canonical VWW inference
+    (seed-0 network, seed-0 image, 80x80)."""
+    from repro.models import mobilenetv2 as mnv2
+    net = mnv2.init_and_quantize(jax.random.PRNGKey(0), img_hw=80)
+    net_specs = mnv2.block_specs()
+    params = vww_cfu_params(net)
+    progs = {s: compile_vww_network(net_specs, 80, s) for s in CFUSchedule}
+    fused = progs[CFUSchedule.FUSED]
+    reps = {pl: analyze(fused, pl) for pl in ("v1", "v2", "v3")}
+    ld = analyze(progs[CFUSchedule.LAYER_DRAM], "v1")
+    ls = analyze(progs[CFUSchedule.LAYER_SRAM], "v1")
+    rng = np.random.default_rng(0)
+    img = rng.standard_normal((80, 80, 3)).astype(np.float32)
+    img_q = np.asarray(quant.quantize(img, net.qp_img))
+    logits = run_program(fused, img_q, params)
+    return {
+        "img_hw": 80,
+        "fused": {
+            "n_instr": len(fused),
+            "cycles": {pl: reps[pl].total_cycles for pl in reps},
+            "dram_bytes": reps["v3"].dram_bytes,
+            "sram_bytes": reps["v3"].sram_bytes,
+            "weight_bytes": reps["v3"].weight_bytes,
+            "macs": reps["v3"].macs,
+        },
+        "layer_dram": {"n_instr": len(progs[CFUSchedule.LAYER_DRAM]),
+                       "cycles": ld.total_cycles,
+                       "dram_bytes": ld.dram_bytes},
+        "layer_sram": {"cycles": ls.total_cycles,
+                       "dram_bytes": ls.dram_bytes,
+                       "sram_bytes": ls.sram_bytes,
+                       "sram_buffer_bytes": ls.sram_buffer_bytes},
+        "logits_q": np.asarray(logits).astype(int).tolist(),
+    }
+
+
+def test_vww_golden_vectors():
+    """Byte/cycle/logit totals of one full VWW inference are pinned to
+    checked-in golden values, so timing-model or executor refactors cannot
+    silently drift from the Table III/VI-calibrated behaviour.
+
+    Regenerate (after an INTENTIONAL model change, with the diff reviewed):
+        REGEN_GOLDEN=1 PYTHONPATH=src python -m pytest \
+            tests/test_cfu.py -k golden
+    """
+    got = _vww_golden_actual()
+    if os.environ.get("REGEN_GOLDEN"):
+        os.makedirs(os.path.dirname(GOLDEN_PATH), exist_ok=True)
+        with open(GOLDEN_PATH, "w") as f:
+            json.dump(got, f, indent=2, sort_keys=True)
+        pytest.skip(f"regenerated {GOLDEN_PATH}")
+    with open(GOLDEN_PATH) as f:
+        want = json.load(f)
+    # integer quantities: exact; cycles: floats summed in a fixed order,
+    # compared tight enough that any real model change trips the test.
+    assert got["logits_q"] == want["logits_q"]
+    for sched in ("fused", "layer_dram", "layer_sram"):
+        for key, val in want[sched].items():
+            if key == "cycles":
+                continue
+            assert got[sched][key] == val, (sched, key)
+    for pl, cyc in want["fused"]["cycles"].items():
+        assert got["fused"]["cycles"][pl] == pytest.approx(cyc, rel=1e-9), pl
+    assert got["layer_dram"]["cycles"] == pytest.approx(
+        want["layer_dram"]["cycles"], rel=1e-9)
+    assert got["layer_sram"]["cycles"] == pytest.approx(
+        want["layer_sram"]["cycles"], rel=1e-9)

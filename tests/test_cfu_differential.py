@@ -1,0 +1,113 @@
+"""Differential test harness for the CFU simulator (seeded-random layer).
+
+Randomly drawn block geometries (channels, stride, expansion factor,
+batch size) are compiled under ALL schedules and executed from the
+encoded words; outputs must equal ``core.dsc.dsc_block_reference`` with
+EXACT integer equality, per image, at every batch size. The full VWW
+network gets the same treatment against ``forward_int8``.
+
+Plain pytest, so it runs on every environment; the hypothesis-driven
+property layer over the same invariants lives in
+``tests/test_cfu_properties.py`` (own module because importorskip is
+module-granular — CI installs hypothesis and runs both).
+
+The bit-exactness discipline matches tests/test_dsc.py: assert_array_equal,
+never allclose — int8 inference has no tolerance budget.
+"""
+
+import functools
+
+import jax
+import numpy as np
+import pytest
+
+from repro.cfu.compiler import (CFUSchedule, compile_block,
+                                compile_vww_network)
+from repro.cfu.executor import run_program
+from repro.cfu.network import vww_cfu_params
+from repro.core import dsc, quant
+from repro.core.dsc import DSCBlockSpec
+
+
+def _random_spec(rng) -> DSCBlockSpec:
+    cin = int(rng.integers(1, 7))
+    t = int(rng.integers(1, 5))                   # expansion factor
+    cout = int(rng.integers(1, 9))
+    stride = int(rng.choice([1, 2]))
+    return DSCBlockSpec(cin=cin, cmid=cin * t, cout=cout, stride=stride)
+
+
+@functools.lru_cache(maxsize=None)
+def _quantized_block(spec: DSCBlockSpec, hw: int, seed: int):
+    key = jax.random.PRNGKey(seed)
+    p32 = dsc.init_dsc_block_f32(key, spec)
+    calib = np.asarray(jax.random.normal(jax.random.PRNGKey(seed + 1),
+                                         (hw, hw, spec.cin)))
+    return dsc.quantize_dsc_block(p32, spec, calib)
+
+
+def _check_block_all_schedules(spec: DSCBlockSpec, hw: int, batch: int,
+                               seed: int):
+    """The differential property: every schedule, every image of the batch,
+    exact integer equality between the executed words and the reference."""
+    qp = _quantized_block(spec, hw, seed)
+    rng = np.random.default_rng(seed)
+    x_f = rng.standard_normal((batch, hw, hw, spec.cin)).astype(np.float32)
+    x_q = np.asarray(quant.quantize(x_f, qp.qp_in))
+    ref = np.stack([np.asarray(dsc.dsc_block_reference(x, qp)) for x in x_q])
+    for sched in CFUSchedule:
+        prog = compile_block(spec, hw, hw, sched)
+        y_batch = run_program(prog, x_q, [qp])          # one stream, B images
+        np.testing.assert_array_equal(
+            y_batch, ref,
+            err_msg=f"{spec} hw={hw} batch={batch} {sched}")
+        y_single = run_program(prog, x_q[0], [qp])      # unbatched entry
+        np.testing.assert_array_equal(
+            y_single, ref[0], err_msg=f"{spec} hw={hw} single {sched}")
+
+
+# --- seeded-random sweep (runs without hypothesis) ---------------------------
+
+
+@pytest.mark.parametrize("draw", range(8))
+def test_random_blocks_bit_exact_all_schedules_batched(draw):
+    rng = np.random.default_rng(1000 + draw)
+    spec = _random_spec(rng)
+    hw = int(rng.integers(3, 8))
+    batch = int(rng.integers(1, 5))
+    _check_block_all_schedules(spec, hw, batch, seed=draw)
+
+
+@pytest.mark.parametrize("batch", [1, 4])
+def test_vww_network_bit_exact_vs_forward_int8(batch):
+    """Whole tiny VWW inference (stem+chain+head+GAP+FC) from encoded
+    words, per image of the batch, vs the int8 scalar-core reference."""
+    from repro.models import mobilenetv2 as mnv2
+    img_hw = 16
+    net = mnv2.init_and_quantize(jax.random.PRNGKey(2), img_hw=img_hw)
+    specs = mnv2.block_specs()
+    params = vww_cfu_params(net)
+    rng = np.random.default_rng(5)
+    imgs = rng.standard_normal((batch, img_hw, img_hw, 3)).astype(np.float32)
+    imgs_q = np.asarray(quant.quantize(imgs, net.qp_img))
+    ref = np.asarray(mnv2.forward_batch(imgs, net, return_quantized=True))
+    for sched in CFUSchedule:
+        prog = compile_vww_network(specs, img_hw, sched)
+        y = run_program(prog, imgs_q if batch > 1 else imgs_q[0], params)
+        np.testing.assert_array_equal(y, ref if batch > 1 else ref[0],
+                                      err_msg=str(sched))
+
+
+def test_batched_equals_per_image_execution():
+    """Multi-stream serving invariant: ONE stream over a batch produces
+    exactly what N independent single-image runs produce."""
+    spec = DSCBlockSpec(cin=4, cmid=16, cout=6, stride=2)
+    hw, batch = 6, 3
+    qp = _quantized_block(spec, hw, seed=77)
+    rng = np.random.default_rng(77)
+    x_q = rng.integers(-128, 128, (batch, hw, hw, spec.cin)).astype(np.int8)
+    prog = compile_block(spec, hw, hw, CFUSchedule.FUSED)
+    y_batch = run_program(prog, x_q, [qp])
+    for b in range(batch):
+        np.testing.assert_array_equal(y_batch[b],
+                                      run_program(prog, x_q[b], [qp]))

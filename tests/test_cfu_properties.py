@@ -1,0 +1,79 @@
+"""Hypothesis property layer of the CFU differential harness.
+
+Separate module from tests/test_cfu_differential.py because importorskip
+is module-granular: environments without hypothesis (it's an optional
+dev dependency; CI installs it) still run the seeded-random differential
+sweeps there, and only this property layer is skipped.
+
+Properties:
+* the differential invariant over the generated spec space — any
+  (channels, stride, expansion, batch) geometry, compiled under all
+  schedules, executes bit-exactly vs ``core.dsc.dsc_block_reference``;
+* ISA totality — assemble/disassemble and text round-trips hold for every
+  opcode with arbitrary in-range operands, and arbitrary 64-bit words
+  either decode canonically or raise (never mis-parse silently);
+* compiled programs of any geometry round-trip through binary and text.
+"""
+
+import pytest
+
+from repro.cfu import isa
+from repro.cfu.compiler import CFUSchedule, compile_block
+from repro.core.dsc import DSCBlockSpec
+from tests.test_cfu_differential import _check_block_all_schedules
+
+pytest.importorskip(
+    "hypothesis", reason="property layer needs hypothesis (CI installs it)")
+from hypothesis import HealthCheck, given, settings, strategies as st  # noqa: E402
+
+_SLOW = settings(max_examples=12, deadline=None,
+                 suppress_health_check=[HealthCheck.too_slow,
+                                        HealthCheck.data_too_large])
+
+
+@_SLOW
+@given(cin=st.integers(1, 5), t=st.integers(1, 4), cout=st.integers(1, 7),
+       stride=st.sampled_from([1, 2]), hw=st.integers(3, 6),
+       batch=st.integers(1, 3), seed=st.integers(0, 3))
+def test_property_block_bit_exact(cin, t, cout, stride, hw, batch, seed):
+    spec = DSCBlockSpec(cin=cin, cmid=cin * t, cout=cout, stride=stride)
+    _check_block_all_schedules(spec, hw, batch, seed)
+
+
+@settings(max_examples=300, deadline=None)
+@given(data=st.data())
+def test_property_isa_roundtrip(data):
+    """decode(encode(i)) == i and asm(instr) parses back, for EVERY opcode
+    and arbitrary in-range operand values — the encoding is total."""
+    op = data.draw(st.sampled_from(sorted(isa.FIELD_SPECS)))
+    args = tuple(data.draw(st.integers(0, (1 << bits) - 1))
+                 for _, bits in isa.FIELD_SPECS[op])
+    ins = isa.Instr(op, args)
+    assert isa.disassemble(isa.assemble(ins)) == ins
+    assert isa.asm_to_instr(isa.instr_to_asm(ins)) == ins
+
+
+@settings(max_examples=200, deadline=None)
+@given(word=st.integers(0, (1 << 64) - 1))
+def test_property_decode_canonical_or_raises(word):
+    """Any 64-bit word either decodes to a legal Instr whose canonical
+    re-encoding decodes back to the same Instr, or raises ValueError
+    (unknown opcode) — the disassembler never mis-parses silently."""
+    try:
+        ins = isa.disassemble(word)
+    except ValueError:
+        return
+    assert isa.disassemble(isa.assemble(ins)) == ins
+
+
+@_SLOW
+@given(cin=st.integers(1, 4), t=st.integers(1, 3), cout=st.integers(1, 5),
+       stride=st.sampled_from([1, 2]), hw=st.integers(3, 5),
+       sched=st.sampled_from(list(CFUSchedule)))
+def test_property_compiled_program_roundtrips(cin, t, cout, stride, hw,
+                                              sched):
+    spec = DSCBlockSpec(cin=cin, cmid=cin * t, cout=cout, stride=stride)
+    prog = compile_block(spec, hw, hw, sched)
+    assert isa.decode_words(isa.encode_program(prog)) == prog.instrs
+    assert (isa.program_from_asm(isa.program_to_asm(prog)).instrs
+            == prog.instrs)

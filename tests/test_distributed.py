@@ -16,7 +16,7 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import json, tempfile
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType
+from repro.launch.mesh import make_mesh
 from repro.configs import registry
 from repro.configs.base import InputShape
 from repro.data import SyntheticLMData
@@ -30,8 +30,7 @@ data = SyntheticLMData(cfg, shape, seed=5)
 out = {}
 
 def run(mesh_shape, names, n):
-    mesh = jax.make_mesh(mesh_shape, names,
-                         axis_types=(AxisType.Auto,) * len(names))
+    mesh = make_mesh(mesh_shape, names)
     step = steps_mod.build_train_step(cfg, mesh, train, shape, donate=False)
     state = steps_mod.init_train_state(cfg, jax.random.PRNGKey(0), train)
     losses = []
@@ -49,8 +48,7 @@ out["shard_vs_single_max_err"] = max(abs(a - b) for a, b in zip(l_shard, l_singl
 with tempfile.TemporaryDirectory() as d:
     ck = CheckpointManager(d, period=1, keep=2)
     ck.maybe_save(4, state, force=True); ck.wait()
-    mesh2 = jax.make_mesh((2, 4), ("data", "model"),
-                          axis_types=(AxisType.Auto,) * 2)
+    mesh2 = make_mesh((2, 4), ("data", "model"))
     sh2 = steps_mod.train_state_shardings(cfg, mesh2, train)
     abstract = steps_mod.abstract_train_state(cfg, train)
     state2 = ck.restore_latest(abstract, sh2)

@@ -9,6 +9,7 @@ from repro.configs import registry
 from repro.configs.base import InputShape
 from repro.data import SyntheticLMData
 from repro.runtime import steps as steps_mod
+from repro.launch.mesh import make_mesh
 from repro.runtime.fault import (DriverReport, FailureInjector, TrainDriver,
                                  Watchdog)
 
@@ -35,8 +36,7 @@ def test_injector_fires_once():
 def setup():
     cfg = registry.get_smoke("glm4-9b")
     shape = InputShape("train_4k", 16, 4, "train")
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     train = steps_mod.TrainSpec(peak_lr=1e-3, warmup_steps=2,
                                 total_steps=50)
     step = steps_mod.build_train_step(cfg, mesh, train, shape, donate=False)

@@ -140,8 +140,8 @@ def test_train_step_loss_decreases(key):
     from repro.data import SyntheticLMData
     cfg = registry.get_smoke("qwen2-72b")
     shape = InputShape("train_4k", 32, 4, "train")
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1, 1), ("data", "model"))
     train = steps_mod.TrainSpec(peak_lr=1e-3, warmup_steps=5,
                                 total_steps=100)
     step = steps_mod.build_train_step(cfg, mesh, train, shape)
