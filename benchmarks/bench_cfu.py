@@ -1,14 +1,30 @@
 """CFU instruction-level simulation: Table III(A) / V / VI analogues.
 
+    python -m benchmarks.bench_cfu                       # all tables
+    python -m benchmarks.bench_cfu --schedules-json results/schedules.json
+    python -m benchmarks.bench_cfu --schedules-json s.json --tiny \
+        --gate-rowtile-dram                              # CI artifact+gate
+
 Unlike the analytic benches (bench_speedup / bench_energy / bench_traffic),
 every number here is *measured from an instruction stream*: the paper's
-four bottleneck layers are compiled to the CFU ISA under the three
+four bottleneck layers are compiled to the CFU ISA under the four
 schedules (layer-by-layer via DRAM, layer-by-layer via SRAM, fused
-pixel-wise) and walked by the timing model. The byte counts are asserted
-to match core.traffic's Eq. 1/2 exactly, and a bit-exactness smoke check
-runs the encoded binary through the golden executor against
-core.dsc.dsc_block_reference.
+pixel-wise, fused row-tile) and walked by the timing model. The byte
+counts are asserted to match core.traffic's Eq. 1/2 exactly, and a
+bit-exactness smoke check runs the encoded binary through the golden
+executor against core.dsc.dsc_block_reference.
+
+``--schedules-json`` writes ``cfu.report.schedule_comparison`` (bytes
+moved / SRAM peak / cycles / energy per schedule over the VWW bottleneck
+chain — the README table's data) to a file; ``--gate-rowtile-dram`` then
+fails the run if fused-rowtile moves MORE DRAM bytes than fused — halo
+reuse across row tiles is supposed to make them exactly equal, so any
+regression in the strip addressing or the tile loop shows up here.
 """
+
+import argparse
+import json
+import os
 
 import jax
 import numpy as np
@@ -16,8 +32,10 @@ import numpy as np
 from repro.cfu.compiler import (CFUSchedule, compile_block,
                                 compile_vww_network)
 from repro.cfu.executor import run_program
+from repro.cfu.ir import MULTI_STAGE_SCHEDULES
 from repro.cfu.network import vww_cfu_params
 from repro.cfu.report import (build_layer_reports, modeled_network_sw_cycles,
+                              schedule_comparison, schedule_comparison_md,
                               table_iii_lines, table_v_lines, table_vi_lines)
 from repro.cfu.timing import analyze
 from repro.core import dsc, quant
@@ -72,12 +90,12 @@ def _network_lines(img_hw: int = 80):
     out.append(f"sw_v0,{sw:.3e},1.0")
     for sched in CFUSchedule:
         prog = compile_vww_network(specs, img_hw, sched)
-        pipelines = ("v1", "v2", "v3") if sched is CFUSchedule.FUSED \
-            else ("v1",)
+        multi_stage = sched in MULTI_STAGE_SCHEDULES
+        pipelines = ("v1", "v2", "v3") if multi_stage else ("v1",)
         for pl in pipelines:
             rep = analyze(prog, pl)
             label = (f"cfu_{sched.value.replace('-', '_')}"
-                     + (f"_{pl}" if sched is CFUSchedule.FUSED else ""))
+                     + (f"_{pl}" if multi_stage else ""))
             out.append(f"{label},{rep.total_cycles:.3e},"
                        f"{sw / rep.total_cycles:.1f}")
     return out
@@ -97,5 +115,55 @@ def run(report):
         report(line)
 
 
+def gate_rowtile_dram(rows) -> None:
+    """CI gate: halo reuse keeps rowtile's DRAM bytes exactly fused's.
+
+    Checked as equality, not <=: an undercount (e.g. strip addressing
+    wrongly dedups boundary reads) is just as much a model regression as
+    extra traffic.
+    """
+    by_sched = {r["schedule"]: r for r in rows}
+    rowtile = by_sched["fused-rowtile"]["dram_bytes"]
+    fused = by_sched["fused"]["dram_bytes"]
+    if rowtile != fused:
+        how = "more" if rowtile > fused else "FEWER (model undercount)"
+        raise SystemExit(
+            f"ROWTILE DRAM REGRESSION: fused-rowtile moves {rowtile} DRAM "
+            f"bytes, {how} than fused's {fused} on the VWW chain — halo "
+            f"reuse accounting broken")
+    print(f"# rowtile DRAM gate OK: {rowtile} == {fused} bytes")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--schedules-json", default=None, metavar="PATH",
+                    help="write the per-schedule comparison of the VWW "
+                         "chain (bytes/SRAM peak/cycles/energy) as JSON")
+    ap.add_argument("--tiny", action="store_true",
+                    help="16x16 chain input for the comparison (CI smoke)")
+    ap.add_argument("--gate-rowtile-dram", action="store_true",
+                    help="fail if fused-rowtile moves more DRAM bytes "
+                         "than fused on the VWW chain")
+    ap.add_argument("--tables", action="store_true",
+                    help="also print the full Table III/V/VI analogues "
+                         "(the benchmarks.run harness default)")
+    args = ap.parse_args()
+
+    if not (args.schedules_json or args.gate_rowtile_dram) or args.tables:
+        run(print)
+    if args.schedules_json or args.gate_rowtile_dram:
+        rows = schedule_comparison(hw=16 if args.tiny else None)
+        for line in schedule_comparison_md(rows):
+            print(line)
+        if args.schedules_json:
+            os.makedirs(os.path.dirname(args.schedules_json) or ".",
+                        exist_ok=True)
+            with open(args.schedules_json, "w") as f:
+                json.dump(rows, f, indent=2)
+            print(f"# wrote {args.schedules_json}")
+        if args.gate_rowtile_dram:
+            gate_rowtile_dram(rows)
+
+
 if __name__ == "__main__":
-    run(print)
+    main()

@@ -15,6 +15,18 @@ latencies scale with engine count but the per-pipeline quantize units do
 not, so past ~2x the paper's arrays the v3 initiation interval is
 requant-bound and more PEs buy nothing.
 
+Each sweep point also carries ENERGY (uJ per inference): the dynamic
+MAC/byte energy is PE-count-independent, but the static term
+(``timing.E_LEAK_PER_PE_CYCLE`` — every engine leaks every cycle) is not,
+so energy-vs-PE is U-shaped: small arrays run long (narrow but long
+leak), big arrays saturate on the non-scaling requant units (wide leak
+for no speedup), and the minimum sits near the balanced point. The
+``axis_sweep`` section expands ONE engine axis at a time (expansion /
+depthwise / projection) with the other two at the paper point — the
+per-axis cost-model refinement ROADMAP calls for: it shows which stage is
+actually the v3 bottleneck per axis rather than scaling everything
+jointly.
+
 ``--check-speedup MIN`` exits nonzero if the fused-v3 speedup on the
 paper's 3rd bottleneck layer (40x40, paper PE point) falls below MIN — the
 CI regression gate for the seed's modeled 59.3x. That gate geometry is
@@ -39,6 +51,10 @@ from repro.models.mobilenetv2 import block_specs
 
 PIPELINES = ("v1", "v2", "v3")
 
+# One-axis expansion factors for the per-axis sweeps (others at paper 1x).
+AXIS_SCALES = (1 / 3, 2 / 3, 1, 2, 4)
+AXES = ("exp_pes", "dw_lanes", "proj_engines")
+
 
 def sweep(img_hw: int = VWW.img_hw, pipelines=PIPELINES):
     """Compile the VWW network + DSC chain, walk every PE design point."""
@@ -58,19 +74,31 @@ def sweep(img_hw: int = VWW.img_hw, pipelines=PIPELINES):
                                    n_classes=VWW.n_classes)
     prog_chain = compile_network(specs, sh, sh, CFUSchedule.FUSED)
 
-    points = []
-    for pe in PE_SWEEP:
-        for pl in pipelines:
-            rep_n = analyze(prog_net, pl, pe=pe)
-            rep_c = analyze(prog_chain, pl, pe=pe)
-            points.append({
-                **dataclasses.asdict(pe),
-                "pipeline": pl,
-                "network_cycles": rep_n.total_cycles,
-                "network_speedup_vs_sw_v0": sw_net / rep_n.total_cycles,
-                "chain_cycles": rep_c.total_cycles,
-                "chain_speedup_vs_sw_v0": sw_chain / rep_c.total_cycles,
-            })
+    def point(pe, pl):
+        rep_n = analyze(prog_net, pl, pe=pe)
+        rep_c = analyze(prog_chain, pl, pe=pe)
+        return {
+            **dataclasses.asdict(pe),
+            "pipeline": pl,
+            "network_cycles": rep_n.total_cycles,
+            "network_speedup_vs_sw_v0": sw_net / rep_n.total_cycles,
+            "network_energy_uj": rep_n.energy_pj["total"] / 1e6,
+            "network_leak_uj": rep_n.energy_pj["leak"] / 1e6,
+            "chain_cycles": rep_c.total_cycles,
+            "chain_speedup_vs_sw_v0": sw_chain / rep_c.total_cycles,
+            "chain_energy_uj": rep_c.energy_pj["total"] / 1e6,
+        }
+
+    points = [point(pe, pl) for pe in PE_SWEEP for pl in pipelines]
+    # per-axis expansion: scale ONE engine array, others at the paper point
+    axis_points = []
+    for axis in AXES:
+        for scale in AXIS_SCALES:
+            pe = dataclasses.replace(
+                PAPER_PE,
+                **{axis: max(1, round(getattr(PAPER_PE, axis) * scale))})
+            axis_points.append({"axis": axis, "scale": scale,
+                                **point(pe, "v3")})
     return {
         "img_hw": img_hw,
         "schedule": "fused",
@@ -79,6 +107,7 @@ def sweep(img_hw: int = VWW.img_hw, pipelines=PIPELINES):
         "n_instr_network": len(prog_net),
         "n_instr_chain": len(prog_chain),
         "sweep": points,
+        "axis_sweep": axis_points,
     }
 
 
@@ -100,13 +129,23 @@ def run(report, img_hw: int = VWW.img_hw):
            f"({result['n_instr_network']} instrs) + DSC chain "
            f"({result['n_instr_chain']} instrs)")
     report("exp_pes,dw_lanes,proj_engines,pipeline,network_cycles,"
-           "network_speedup,chain_cycles,chain_speedup")
+           "network_speedup,network_energy_uJ,chain_cycles,chain_speedup")
     for pt in result["sweep"]:
         report(f"{pt['exp_pes']},{pt['dw_lanes']},{pt['proj_engines']},"
                f"{pt['pipeline']},{pt['network_cycles']:.3e},"
                f"{pt['network_speedup_vs_sw_v0']:.1f},"
+               f"{pt['network_energy_uj']:.2f},"
                f"{pt['chain_cycles']:.3e},"
                f"{pt['chain_speedup_vs_sw_v0']:.1f}")
+    report("# per-axis expansion (v3): one engine array scaled, others at "
+           "the paper point; energy includes the per-PE static term")
+    report("axis,scale,exp_pes,dw_lanes,proj_engines,network_cycles,"
+           "network_energy_uJ,network_leak_uJ")
+    for pt in result["axis_sweep"]:
+        report(f"{pt['axis']},{pt['scale']:.2f},{pt['exp_pes']},"
+               f"{pt['dw_lanes']},{pt['proj_engines']},"
+               f"{pt['network_cycles']:.3e},{pt['network_energy_uj']:.2f},"
+               f"{pt['network_leak_uj']:.3f}")
     gate = block3_paper_speedup()
     result["block3_paper_pe_v3_speedup"] = gate
     report(f"# block-3 fused-v3 speedup at the paper PE point: "

@@ -50,6 +50,8 @@ GAP_ACC   add the last-loaded channel vector to the pooling accumulator
 GAP_FIN   round(acc / n) -> int8 pooled vector on the projection port
 CFG_PE    latch engine counts (expansion PEs, depthwise lanes, projection
           engines) — timing-only; the golden executor ignores it
+CFG_STRIP put the F1 map into rolling-strip addressing (row mod depth) —
+          the fused-rowtile schedule's circular line buffer; 0 = off
 ======== ====================================================================
 
 Full-network simulation (PR 2)
@@ -64,16 +66,37 @@ every memory space, so one stream drives N images in lockstep
 ``timing.PEConfig`` parameterizes the engine counts for
 cycles-vs-PE-count sweeps (``benchmarks/bench_scaling.py``).
 
-Schedules (``compiler.CFUSchedule``)
-------------------------------------
-* ``LAYER_DRAM``  — layer-by-layer, F1/F2 materialized in DRAM (paper Eq. 1
-  baseline traffic).
-* ``LAYER_SRAM``  — layer-by-layer, F1/F2 in on-chip SRAM (paper Eq. 2:
-  needs a >= H*W*M-byte buffer).
-* ``FUSED``       — the paper's fused pixel-wise dataflow: one output pixel
-  to completion, intermediates only in the tile/vector registers.
+Pass-based compiler (PR 3)
+--------------------------
+``compiler`` is a pass pipeline over the program IR of ``ir``:
 
-All three produce **bit-identical** int8 outputs, equal to
+    build IR -> schedule -> memory-plan -> instruction-select
+
+Both entry points (bare DSC chain / full VWW network) build typed ops
+(``Conv3x3``/``DSCBlock``/``Head1x1``/``GAP``/``FC``) and share one
+lowering path. Scheduling is per block (uniform, per-block mapping, or
+``"auto"`` — a cost-model pick via ``timing.analyze``); memory planning
+is a liveness-driven first-fit allocator with buffer reuse that raises on
+any live overlap (``ir.MemoryPlanError``). ``streams=N`` partitions the
+op chain across N CFU cores sharing the DRAM port
+(``compiler.MultiStreamProgram``; run with ``executor.run_multistream``,
+time with ``timing.analyze_multistream`` — steady-state interval with
+port contention).
+
+Schedules (``ir.CFUSchedule``, registry ``ir.SCHEDULES``)
+---------------------------------------------------------
+* ``LAYER_DRAM``    — layer-by-layer, F1/F2 materialized in DRAM (paper
+  Eq. 1 baseline traffic).
+* ``LAYER_SRAM``    — layer-by-layer, F1/F2 in on-chip SRAM (paper Eq. 2:
+  needs a >= H*W*M-byte buffer).
+* ``FUSED``         — the paper's fused pixel-wise dataflow: one output
+  pixel to completion, intermediates only in the tile/vector registers.
+* ``FUSED_ROWTILE`` — row-tile fusion over a rolling SRAM F1 strip
+  (CFG_STRIP) with halo *reuse* across tiles (two rows at stride 1, one
+  at stride 2): expansion runs exactly once per input row, DRAM traffic
+  equals FUSED's exactly (``dsc_block_fused_rowtile``/Pallas granularity).
+
+All four produce **bit-identical** int8 outputs, equal to
 ``core.dsc.dsc_block_reference`` (asserted with exact integer equality in
 ``tests/test_cfu.py``, the same discipline ``tests/test_dsc.py`` applies to
 the JAX paths).
@@ -94,17 +117,28 @@ Paper-table mapping (``benchmarks/bench_cfu.py``)
 from repro.cfu.isa import (Instr, Program, assemble, disassemble,
                            encode_program, decode_words, program_to_asm,
                            program_from_asm)
-from repro.cfu.compiler import (CFUSchedule, compile_block, compile_network,
-                                compile_vww_network)
-from repro.cfu.executor import run_program, run_words
+from repro.cfu.ir import (CFUSchedule, Layout, MemoryPlanError, SCHEDULES,
+                          build_chain_ir, build_vww_ir, plan_memory)
+from repro.cfu.compiler import (AUTO_SCHEDULE, MultiStreamProgram,
+                                assign_schedules, auto_schedule,
+                                compile_block, compile_network,
+                                compile_vww_network, schedule_names,
+                                select_instructions)
+from repro.cfu.executor import run_multistream, run_program, run_words
 from repro.cfu.network import (CFUFCParams, CFUHeadParams, CFUStemParams,
                                vww_cfu_params)
-from repro.cfu.timing import PEConfig, TimingReport, analyze
+from repro.cfu.timing import (MultiStreamReport, PEConfig, TimingReport,
+                              analyze, analyze_multistream)
 
 __all__ = [
     "Instr", "Program", "assemble", "disassemble", "encode_program",
     "decode_words", "program_to_asm", "program_from_asm",
-    "CFUSchedule", "compile_block", "compile_network", "compile_vww_network",
-    "run_program", "run_words", "TimingReport", "analyze", "PEConfig",
-    "CFUStemParams", "CFUHeadParams", "CFUFCParams", "vww_cfu_params",
+    "CFUSchedule", "SCHEDULES", "AUTO_SCHEDULE", "Layout", "MemoryPlanError",
+    "build_chain_ir", "build_vww_ir", "plan_memory", "assign_schedules",
+    "auto_schedule", "schedule_names", "select_instructions",
+    "compile_block", "compile_network", "compile_vww_network",
+    "MultiStreamProgram", "run_program", "run_words", "run_multistream",
+    "TimingReport", "MultiStreamReport", "analyze", "analyze_multistream",
+    "PEConfig", "CFUStemParams", "CFUHeadParams", "CFUFCParams",
+    "vww_cfu_params",
 ]

@@ -1,113 +1,236 @@
-"""Block/network compiler: lower DSC chains and whole VWW networks to CFU
+"""Pass-based compiler: lower DSC chains and whole VWW networks to CFU
 instruction streams.
 
-Three schedules, matching the execution disciplines of ``core.dsc`` /
-``core.traffic``:
+The compiler is a pipeline of four passes over the program IR of
+``cfu.ir`` (both entry points build IR and share every pass — the two
+copy-pasted lowering paths of the old monolithic emitter are gone):
 
-* ``LAYER_DRAM`` — layer-by-layer with F1/F2 materialized off-chip: three
-  full passes (expansion at input resolution, depthwise, projection), every
-  intermediate written to and read back from DRAM (paper Eq. 1 traffic).
-* ``LAYER_SRAM`` — same passes, intermediates in the on-chip SRAM scratch
-  (paper Eq. 2: requires an H*W*M-byte F1 buffer).
-* ``FUSED``      — the paper's pixel-wise dataflow: per output pixel
+    build IR  ->  schedule  ->  memory-plan  ->  instruction-select
+
+* **build** — ``ir.build_chain_ir`` (bare DSC chain) /
+  ``ir.build_vww_ir`` (complete inference: stem 3x3 s2, bottleneck chain,
+  head 1x1, GAP, FC) produce typed ops over named tensor values.
+* **schedule** — ``assign_schedules`` annotates every ``DSCBlock`` with
+  one of the four schedules (see ``ir.SCHEDULES``), accepting a uniform
+  schedule, a per-block mapping, or ``AUTO_SCHEDULE`` (= ``"auto"``): a
+  cost-model pick per block, driven by ``timing.analyze`` on a
+  single-block compile of each candidate — the winning loop structure
+  varies with layer geometry (cf. Daghero et al.), so the pick is per
+  block, not per network. ``materialize_scratch`` then creates the
+  schedule's buffers (F1/F2 maps for the layer schedules, the rolling F1
+  strip for fused-rowtile) as IR values with single-op lifetimes.
+* **memory-plan** — ``ir.plan_memory``: liveness-driven first-fit
+  placement with buffer reuse and overlap checking (raises
+  ``ir.MemoryPlanError`` on any live collision).
+* **isel** — ``select_instructions`` emits the existing ISA per op; the
+  GAP+FC pair is pattern-matched into the fused pooling->projection
+  sequence (the pooled vector stays on the projection port and never
+  touches memory).
+
+Schedule lowering (per ``DSCBlock``):
+
+* ``layer-dram`` / ``layer-sram`` — three full passes (expansion at input
+  resolution, depthwise, projection), F1/F2 materialized in the planned
+  scratch regions (paper Eq. 1 / Eq. 2 traffic).
+* ``fused``      — the paper's pixel-wise dataflow: per output pixel
   LD_WIN -> EXP_MAC -> REQUANT F1 -> DW_MAC -> REQUANT F2 -> PROJ_MAC ->
   REQUANT OUT [-> RES_ADD] -> ST_PX; F1/F2 never reach a memory space.
+* ``fused-rowtile`` — per tile of ``tile_rows`` output rows, the *new*
+  strip rows are expanded once (LD_VEC -> EXP_MAC VEC -> REQUANT F1 ->
+  ST_VEC into the CFG_STRIP rolling SRAM buffer), then depthwise +
+  projection consume the strip per pixel (LD_TILE -> DW_MAC -> REQUANT F2
+  -> PROJ_MAC -> REQUANT OUT [-> RES_ADD] -> ST_PX). Halo rows shared
+  with the previous tile (two at stride 1, ONE at stride 2) are still
+  resident in the strip and are reused, not recomputed — expansion runs
+  exactly once per input row, and DRAM traffic equals the fused
+  dataflow's exactly.
 
-Memory layout: a bump allocator per space. Block inputs/outputs always live
-in DRAM (the paper streams block IO off-chip; the CFU owns no persistent
-feature-map storage). Layer-by-layer scratch (F1/F2) has single-block
-lifetime, so the scratch arena is reused across blocks and the reported
-SRAM footprint is the maximum over blocks, which is what a real allocator
-would provision.
+Multi-stream compilation (``streams=N``): the op chain is partitioned
+into N contiguous segments balanced by the timing cost model, one CFU
+core per segment, sharing the DRAM port (boundary maps are pinned in
+DRAM for the whole frame — each core owns a different pipeline stage of
+consecutive frames). Each segment compiles to its own ``Program``;
+``executor.run_multistream`` runs them against one shared DRAM image and
+``timing.analyze_multistream`` models the steady-state interval with
+DRAM port contention.
 
-``compile_network`` lowers a bare DSC chain (block i's output region is
-block i+1's input region). ``compile_vww_network`` lowers a COMPLETE
-MobileNetV2-VWW inference — the paper runs the stem/head on the scalar
-core, but nothing in the dataflow requires that, so this compiler folds
-them into the stream too:
-
-* stem     — 3x3 stride-2 standard conv on the expansion array: per output
-  pixel LD_WIN (halo-aware on-the-fly zp padding, identical gather to the
-  depthwise windows) -> CONV_MAC -> REQUANT F1 -> ST_PX;
-* DSC bottleneck chain — exactly ``compile_network``'s lowering, under any
-  of the three schedules;
-* head 1x1 — EXP_MAC in VEC mode per pixel (a 1x1 conv IS the expansion
-  engine's layer-by-layer mode);
-* global average pool + FC — GAP_RST / per-pixel LD_VEC + GAP_ACC /
-  GAP_FIN, whose pooled vector lands on the projection port, then one
-  PROJ_MAC + REQUANT OUT + ST_PX for the logits.
-
-Weight binding convention for the VWW stream: params[0] = stem,
-params[1..N] = DSC blocks, params[N+1] = head, params[N+2] = FC (built by
-``cfu.network.vww_cfu_params``).
-
-Every program opens with CFG_PE carrying the engine counts
+Every stream opens with CFG_PE carrying the engine counts
 (``timing.PEConfig``) so a compiled stream is a *complete* description of
-the simulated hardware point — the cycles-vs-PE sweeps of
-``benchmarks/bench_scaling.py`` recompile only this one leading word.
+the simulated hardware point.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import enum
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
+from repro.cfu import ir as ir_mod
 from repro.cfu import isa
+from repro.cfu.ir import (CFUSchedule, Conv3x3, DSCBlock, FC, GAP, Head1x1,
+                          IRProgram, Layout, MemoryPlanError, Region,
+                          SCHEDULES, build_chain_ir, build_vww_ir,
+                          plan_memory)
 from repro.cfu.isa import Instr, Program
 from repro.cfu.timing import PEConfig
-from repro.core.dsc import DSCBlockSpec
+
+__all__ = [
+    "CFUSchedule", "SCHEDULES", "AUTO_SCHEDULE", "Layout", "Region",
+    "MemoryPlanError", "MultiStreamProgram", "ScheduleSpec",
+    "compile_block", "compile_network", "compile_vww_network",
+    "assign_schedules", "auto_schedule", "materialize_scratch",
+    "select_instructions", "estimate_block_cycles", "schedule_names",
+]
+
+#: Compiler policy (not a schedule): pick the cheapest schedule per block.
+AUTO_SCHEDULE = "auto"
+
+ScheduleSpec = Union[CFUSchedule, str, Mapping[str, Union[CFUSchedule, str]]]
 
 
-class CFUSchedule(enum.Enum):
-    LAYER_DRAM = "layer-dram"
-    LAYER_SRAM = "layer-sram"
-    FUSED = "fused"
+def schedule_names(include_auto: bool = False) -> List[str]:
+    """Every schedule name, from the one registry (CLI choice lists)."""
+    names = list(SCHEDULES)
+    return names + [AUTO_SCHEDULE] if include_auto else names
 
 
-@dataclasses.dataclass(frozen=True)
-class Region:
-    name: str
-    space: int          # isa.SPACE_DRAM | isa.SPACE_SRAM
-    base: int
-    size: int
+def _resolve_one(s: Union[CFUSchedule, str]) -> CFUSchedule:
+    if isinstance(s, CFUSchedule):
+        return s
+    try:
+        return SCHEDULES[s][0]
+    except KeyError:
+        raise ValueError(f"unknown schedule {s!r}; known: "
+                         f"{schedule_names(include_auto=True)}") from None
 
 
 @dataclasses.dataclass
-class Layout:
-    """Where the compiler placed every feature map."""
+class MultiStreamProgram:
+    """N per-core instruction streams sharing one DRAM plan.
 
-    regions: Dict[str, Region] = dataclasses.field(default_factory=dict)
-    dram_size: int = 0
-    sram_size: int = 0          # high-water mark of the reused scratch arena
+    ``streams[i]`` is a complete ``Program`` for core *i* (its own CFG_PE,
+    its own SRAM scratch, SET_BASEs into the shared DRAM layout).
+    ``meta`` carries the shared layout and the program-level IO binding;
+    per-segment bindings live in each stream's own meta.
+    """
 
-    def add(self, name: str, space: int, base: int, size: int) -> Region:
-        r = Region(name, space, base, size)
-        self.regions[name] = r
-        return r
+    streams: List[Program]
+    meta: Dict[str, object] = dataclasses.field(default_factory=dict)
 
-
-def _block_chain_hw(specs: Sequence[Tuple[str, DSCBlockSpec]],
-                    h: int, w: int) -> List[Tuple[str, DSCBlockSpec, int, int]]:
-    """Input (h, w) of every block when chained from an (h, w) input."""
-    out = []
-    for name, spec in specs:
-        out.append((name, spec, h, w))
-        h, w = spec.out_hw(h, w)
-    return out
+    def __len__(self) -> int:
+        return sum(len(s) for s in self.streams)
 
 
-class _Emitter:
-    """Instruction-stream builder shared by the chain and network entry
-    points: owns the stream, the scratch arena, and the BAR phase counter."""
+# ---------------------------------------------------------------------------
+# Pass 1: scheduling
+# ---------------------------------------------------------------------------
 
-    def __init__(self, schedule: CFUSchedule, layout: Layout,
-                 scratch_space: int, scratch_base: int):
-        self.schedule = schedule
+
+def estimate_block_cycles(spec, h: int, w: int, schedule: CFUSchedule,
+                          pipeline: str = "v3",
+                          pe: Optional[PEConfig] = None,
+                          tile_rows: int = 4) -> float:
+    """Cost model for the auto pass: cycles of one block compiled alone.
+
+    A single-block compile under a *fixed* schedule, walked by
+    ``timing.analyze`` — the exact machinery that times the final stream,
+    so the pick can never disagree with the model it optimizes.
+    """
+    from repro.cfu.timing import analyze
+    prog = compile_block(spec, h, w, schedule, pe=pe, tile_rows=tile_rows)
+    return analyze(prog, pipeline, pe=pe).total_cycles
+
+
+def auto_schedule(ir: IRProgram, *, pipeline: str = "v3",
+                  pe: Optional[PEConfig] = None,
+                  tile_rows: int = 4) -> Dict[str, CFUSchedule]:
+    """Cost-model schedule pick, independently per block."""
+    picks: Dict[str, CFUSchedule] = {}
+    for op in ir.dsc_blocks():
+        costs: Dict[CFUSchedule, float] = {}
+        for s in CFUSchedule:
+            try:
+                costs[s] = estimate_block_cycles(
+                    op.spec, op.h, op.w, s, pipeline=pipeline, pe=pe,
+                    tile_rows=tile_rows)
+            except ValueError:
+                continue   # infeasible candidate (e.g. strip > 255 rows)
+        picks[op.name] = min(costs, key=costs.get)
+    return picks
+
+
+def assign_schedules(ir: IRProgram, schedule: ScheduleSpec, *,
+                     tile_rows: int = 4, pipeline: str = "v3",
+                     pe: Optional[PEConfig] = None) -> None:
+    """Annotate every DSCBlock op with its schedule (pass, mutates IR)."""
+    if isinstance(schedule, str) and schedule == AUTO_SCHEDULE:
+        mapping: Mapping[str, CFUSchedule] = auto_schedule(
+            ir, pipeline=pipeline, pe=pe, tile_rows=tile_rows)
+        for op in ir.dsc_blocks():
+            op.schedule, op.tile_rows = mapping[op.name], tile_rows
+        return
+    if isinstance(schedule, Mapping):
+        for op in ir.dsc_blocks():
+            if op.name not in schedule:
+                raise ValueError(f"no schedule given for block {op.name!r}")
+            op.schedule = _resolve_one(schedule[op.name])
+            op.tile_rows = tile_rows
+        return
+    uniform = _resolve_one(schedule)
+    for op in ir.dsc_blocks():
+        op.schedule, op.tile_rows = uniform, tile_rows
+
+
+def _strip_rows(spec, tile_rows: int) -> int:
+    """Rolling-strip depth: one tile's full input halo, (T-1)*s + 3 rows."""
+    if tile_rows < 1:
+        raise ValueError(f"tile_rows must be >= 1, got {tile_rows}")
+    rows = (tile_rows - 1) * spec.stride + isa.KERNEL
+    if rows > 255:
+        raise ValueError(f"tile_rows={tile_rows} needs a {rows}-row strip; "
+                         "CFG_STRIP encodes at most 255")
+    return rows
+
+
+def materialize_scratch(ir: IRProgram) -> None:
+    """Create each scheduled block's buffers as single-op-lifetime values."""
+    for oi, op in enumerate(ir.ops):
+        if not isinstance(op, DSCBlock):
+            continue
+        if op.schedule is None:
+            raise ValueError(f"block {op.name!r} not scheduled; run "
+                             "assign_schedules first")
+        spec, bh, bw = op.spec, op.h, op.w
+        h2, w2 = spec.out_hw(bh, bw)
+        op.scratch = []
+        if op.schedule in (CFUSchedule.LAYER_DRAM, CFUSchedule.LAYER_SRAM):
+            space = (isa.SPACE_SRAM if op.schedule is CFUSchedule.LAYER_SRAM
+                     else isa.SPACE_DRAM)
+            for nm, shape in ((f"f1@{op.name}", (bh, bw, spec.cmid)),
+                              (f"f2@{op.name}", (h2, w2, spec.cmid))):
+                ir.add_value(ir_mod.Value(nm, shape, space=space,
+                                          def_idx=oi, last_use=oi,
+                                          scratch=True))
+                op.scratch.append(nm)
+        elif op.schedule is CFUSchedule.FUSED_ROWTILE:
+            nm = f"f1strip@{op.name}"
+            ir.add_value(ir_mod.Value(
+                nm, (_strip_rows(spec, op.tile_rows), bw, spec.cmid),
+                space=isa.SPACE_SRAM, def_idx=oi, last_use=oi,
+                scratch=True))
+            op.scratch.append(nm)
+        # FUSED: intermediates live only in the tile/vector registers.
+
+
+# ---------------------------------------------------------------------------
+# Pass 3: instruction selection
+# ---------------------------------------------------------------------------
+
+
+class _InstrSel:
+    """Emit the ISA for a (scheduled, memory-planned) op sequence."""
+
+    def __init__(self, layout: Layout):
         self.layout = layout
-        self.scratch_space = scratch_space
-        self.scratch_base = scratch_base
-        self.scratch_peak = 0
         self.instrs: List[Instr] = []
         self.phase = 0
 
@@ -118,39 +241,108 @@ class _Emitter:
         self.emit("BAR", self.phase % 256)
         self.phase += 1
 
-    def dsc_block(self, name: str, spec: DSCBlockSpec, bh: int, bw: int,
-                  r_x: Region, r_y: Region, block_idx: int):
-        """One inverted-residual block under the emitter's schedule."""
-        assert spec.kernel == isa.KERNEL, "the CFU's depthwise is 3x3"
-        h2, w2 = spec.out_hw(bh, bw)
-        self.emit("CFG", spec.cin, spec.cmid, spec.cout, spec.stride, bh, bw)
+    def region(self, name: str) -> Region:
+        return self.layout.regions[name]
+
+    # --- op lowering --------------------------------------------------------
+
+    def op_conv3x3(self, op: Conv3x3):
+        """3x3 stride-2 standard conv (the VWW stem) on the expansion
+        array: same halo-aware LD_WIN gather as the depthwise windows."""
+        r_x, r_y = self.region(op.inputs[0]), self.region(op.outputs[0])
+        h2, w2 = -(-op.h // op.stride), -(-op.w // op.stride)
+        self.emit("CFG", op.cin, op.cout, op.cout, op.stride, op.h, op.w)
         self.emit("SET_BASE", isa.REG_IN, r_x.space, r_x.base)
         self.emit("SET_BASE", isa.REG_OUT, r_y.space, r_y.base)
+        self.emit("LD_WGT", isa.WGT_CONV, op.param_idx)
+        self.bar()
+        for oy in range(h2):
+            for ox in range(w2):
+                self.emit("LD_WIN", oy, ox)
+                self.emit("CONV_MAC")
+                self.emit("REQUANT", isa.STAGE_F1)
+                self.emit("ST_PX", oy, ox)
+
+    def op_head1x1(self, op: Head1x1):
+        """1x1 conv + ReLU6 (the classifier head) = EXP_MAC in VEC mode."""
+        r_x, r_y = self.region(op.inputs[0]), self.region(op.outputs[0])
+        self.emit("CFG", op.cin, op.cout, op.cout, 1, op.h, op.w)
+        self.emit("SET_BASE", isa.REG_IN, r_x.space, r_x.base)
+        self.emit("SET_BASE", isa.REG_OUT, r_y.space, r_y.base)
+        self.emit("LD_WGT", isa.WGT_EXP, op.param_idx)
+        self.bar()
+        for y in range(op.h):
+            for x in range(op.w):
+                self.emit("LD_VEC", isa.REG_IN, y, x)
+                self.emit("EXP_MAC", isa.MODE_VEC)
+                self.emit("REQUANT", isa.STAGE_F1)
+                self.emit("ST_PX", y, x)
+
+    def op_gap_fc(self, gap: GAP, fc: FC):
+        """GAP + FC pattern-matched into one unit: the pooled vector lands
+        on the projection port (GAP_FIN) and is consumed in place."""
+        r_x = self.region(gap.inputs[0])
+        r_y = self.region(fc.outputs[0])
+        self.emit("CFG", gap.ch, gap.ch, fc.cout, 1, gap.h, gap.w)
+        self.emit("SET_BASE", isa.REG_IN, r_x.space, r_x.base)
+        self.emit("SET_BASE", isa.REG_OUT, r_y.space, r_y.base)
+        self.emit("LD_WGT", isa.WGT_PROJ, fc.param_idx)
+        self.bar()
+        self.emit("GAP_RST")
+        for y in range(gap.h):
+            for x in range(gap.w):
+                self.emit("LD_VEC", isa.REG_IN, y, x)
+                self.emit("GAP_ACC")
+        self.emit("GAP_FIN", gap.h * gap.w)
+        self.emit("PROJ_MAC")
+        self.emit("REQUANT", isa.STAGE_OUT)
+        self.emit("ST_PX", 0, 0)
+
+    def op_dsc_block(self, op: DSCBlock):
+        assert op.spec.kernel == isa.KERNEL, "the CFU's depthwise is 3x3"
+        r_x, r_y = self.region(op.inputs[0]), self.region(op.outputs[0])
+        spec, bh, bw = op.spec, op.h, op.w
+        self.emit("CFG", spec.cin, spec.cmid, spec.cout, spec.stride, bh, bw)
+        if op.schedule is CFUSchedule.FUSED_ROWTILE:
+            self.emit("CFG_STRIP", _strip_rows(spec, op.tile_rows))
+        self.emit("SET_BASE", isa.REG_IN, r_x.space, r_x.base)
+        self.emit("SET_BASE", isa.REG_OUT, r_y.space, r_y.base)
+        if op.schedule is CFUSchedule.FUSED_ROWTILE:
+            r_strip = self.region(op.scratch[0])
+            self.emit("SET_BASE", isa.REG_F1, r_strip.space, r_strip.base)
         for which in (isa.WGT_EXP, isa.WGT_DW, isa.WGT_PROJ):
-            self.emit("LD_WGT", which, block_idx)
+            self.emit("LD_WGT", which, op.param_idx)
+        if op.schedule is CFUSchedule.FUSED:
+            self._dsc_fused(op)
+        elif op.schedule is CFUSchedule.FUSED_ROWTILE:
+            self._dsc_rowtile(op)
+        else:
+            self._dsc_layer(op)
 
-        if self.schedule is CFUSchedule.FUSED:
-            self.bar()
-            for oy in range(h2):
-                for ox in range(w2):
-                    self.emit("LD_WIN", oy, ox)
-                    self.emit("EXP_MAC", isa.MODE_WIN)
-                    self.emit("REQUANT", isa.STAGE_F1)
-                    self.emit("DW_MAC")
-                    self.emit("REQUANT", isa.STAGE_F2)
-                    self.emit("PROJ_MAC")
-                    self.emit("REQUANT", isa.STAGE_OUT)
-                    if spec.has_residual:
-                        self.emit("RES_ADD", oy, ox)
-                    self.emit("ST_PX", oy, ox)
-            return
+    def _dsc_fused(self, op: DSCBlock):
+        """The paper's pixel-wise dataflow: one output pixel to completion;
+        F1/F2 never reach a memory space."""
+        spec = op.spec
+        h2, w2 = spec.out_hw(op.h, op.w)
+        self.bar()
+        for oy in range(h2):
+            for ox in range(w2):
+                self.emit("LD_WIN", oy, ox)
+                self.emit("EXP_MAC", isa.MODE_WIN)
+                self.emit("REQUANT", isa.STAGE_F1)
+                self.emit("DW_MAC")
+                self.emit("REQUANT", isa.STAGE_F2)
+                self.emit("PROJ_MAC")
+                self.emit("REQUANT", isa.STAGE_OUT)
+                if spec.has_residual:
+                    self.emit("RES_ADD", oy, ox)
+                self.emit("ST_PX", oy, ox)
 
-        r_f1 = self.layout.add(f"f1@{name}", self.scratch_space,
-                               self.scratch_base, bh * bw * spec.cmid)
-        r_f2 = self.layout.add(f"f2@{name}", self.scratch_space,
-                               self.scratch_base + r_f1.size,
-                               h2 * w2 * spec.cmid)
-        self.scratch_peak = max(self.scratch_peak, r_f1.size + r_f2.size)
+    def _dsc_layer(self, op: DSCBlock):
+        """Layer-by-layer: three passes over planned F1/F2 regions."""
+        spec, bh, bw = op.spec, op.h, op.w
+        h2, w2 = spec.out_hw(bh, bw)
+        r_f1, r_f2 = self.region(op.scratch[0]), self.region(op.scratch[1])
         self.emit("SET_BASE", isa.REG_F1, r_f1.space, r_f1.base)
         self.emit("SET_BASE", isa.REG_F2, r_f2.space, r_f2.base)
         # pass 1: expansion at input resolution, F1 materialized
@@ -180,193 +372,236 @@ class _Emitter:
                     self.emit("RES_ADD", oy, ox)
                 self.emit("ST_PX", oy, ox)
 
-    def stem(self, cin: int, c0: int, h: int, w: int,
-             r_x: Region, r_y: Region, block_idx: int):
-        """3x3 stride-2 standard conv (the VWW stem) on the expansion
-        array: same halo-aware LD_WIN gather as the depthwise windows."""
-        h2, w2 = -(-h // 2), -(-w // 2)
-        self.emit("CFG", cin, c0, c0, 2, h, w)
-        self.emit("SET_BASE", isa.REG_IN, r_x.space, r_x.base)
-        self.emit("SET_BASE", isa.REG_OUT, r_y.space, r_y.base)
-        self.emit("LD_WGT", isa.WGT_CONV, block_idx)
-        self.bar()
-        for oy in range(h2):
-            for ox in range(w2):
-                self.emit("LD_WIN", oy, ox)
-                self.emit("CONV_MAC")
-                self.emit("REQUANT", isa.STAGE_F1)
-                self.emit("ST_PX", oy, ox)
-
-    def head(self, c_in: int, c_head: int, h: int, w: int,
-             r_x: Region, r_y: Region, block_idx: int):
-        """1x1 conv + ReLU6 (the classifier head) = EXP_MAC in VEC mode."""
-        self.emit("CFG", c_in, c_head, c_head, 1, h, w)
-        self.emit("SET_BASE", isa.REG_IN, r_x.space, r_x.base)
-        self.emit("SET_BASE", isa.REG_OUT, r_y.space, r_y.base)
-        self.emit("LD_WGT", isa.WGT_EXP, block_idx)
-        self.bar()
-        for y in range(h):
-            for x in range(w):
-                self.emit("LD_VEC", isa.REG_IN, y, x)
-                self.emit("EXP_MAC", isa.MODE_VEC)
-                self.emit("REQUANT", isa.STAGE_F1)
-                self.emit("ST_PX", y, x)
-
-    def gap_fc(self, c_head: int, n_classes: int, h: int, w: int,
-               r_x: Region, r_y: Region, block_idx: int):
-        """Global average pool + fully-connected logits."""
-        self.emit("CFG", c_head, c_head, n_classes, 1, h, w)
-        self.emit("SET_BASE", isa.REG_IN, r_x.space, r_x.base)
-        self.emit("SET_BASE", isa.REG_OUT, r_y.space, r_y.base)
-        self.emit("LD_WGT", isa.WGT_PROJ, block_idx)
-        self.bar()
-        self.emit("GAP_RST")
-        for y in range(h):
-            for x in range(w):
-                self.emit("LD_VEC", isa.REG_IN, y, x)
-                self.emit("GAP_ACC")
-        self.emit("GAP_FIN", h * w)
-        self.emit("PROJ_MAC")
-        self.emit("REQUANT", isa.STAGE_OUT)
-        self.emit("ST_PX", 0, 0)
-
-    def finish(self, layout: Layout, dram_top: int):
-        self.emit("HALT")
-        if self.scratch_space == isa.SPACE_DRAM:
-            layout.dram_size = dram_top + self.scratch_peak
-            layout.sram_size = 0
-        else:
-            layout.dram_size = dram_top
-            layout.sram_size = self.scratch_peak
-
-
-def _scratch_placement(schedule: CFUSchedule, dram_top: int
-                       ) -> Tuple[int, int]:
-    space = (isa.SPACE_SRAM if schedule is CFUSchedule.LAYER_SRAM
-             else isa.SPACE_DRAM)
-    return space, (dram_top if space == isa.SPACE_DRAM else 0)
-
-
-def compile_network(specs: Sequence[Tuple[str, DSCBlockSpec]],
-                    h: int, w: int,
-                    schedule: CFUSchedule,
-                    pe: Optional[PEConfig] = None) -> Program:
-    """Lower a chain of DSC blocks into one CFU instruction stream."""
-    pe = pe or PEConfig()
-    chain = _block_chain_hw(specs, h, w)
-    layout = Layout()
-    dram_top = 0
-
-    # --- allocate the block-IO chain in DRAM --------------------------------
-    io_regions: List[Tuple[Region, Region]] = []
-    first = chain[0]
-    r_in = layout.add("x0", isa.SPACE_DRAM, dram_top,
-                      first[2] * first[3] * first[1].cin)
-    dram_top += r_in.size
-    prev = r_in
-    for name, spec, bh, bw in chain:
+    def _dsc_rowtile(self, op: DSCBlock):
+        """Row-tile fusion with halo reuse: per tile, expand only the strip
+        rows not already resident (each input row exactly once), then
+        depthwise+projection consume the rolling strip per pixel."""
+        spec, bh, bw = op.spec, op.h, op.w
         h2, w2 = spec.out_hw(bh, bw)
-        r_out = layout.add(f"y@{name}", isa.SPACE_DRAM, dram_top,
-                           h2 * w2 * spec.cout)
-        dram_top += r_out.size
-        io_regions.append((prev, r_out))
-        prev = r_out
-
-    scratch_space, scratch_base = _scratch_placement(schedule, dram_top)
-    em = _Emitter(schedule, layout, scratch_space, scratch_base)
-    em.emit("CFG_PE", pe.exp_pes, pe.dw_lanes, pe.proj_engines)
-    for bi, ((name, spec, bh, bw), (r_x, r_y)) in enumerate(
-            zip(chain, io_regions)):
-        em.dsc_block(name, spec, bh, bw, r_x, r_y, bi)
-    em.finish(layout, dram_top)
-
-    last_name, last_spec, lh, lw = chain[-1]
-    lh2, lw2 = last_spec.out_hw(lh, lw)
-    return Program(em.instrs, meta={
-        "schedule": schedule.value,
-        "layout": layout,
-        "blocks": [(name, spec, bh, bw) for name, spec, bh, bw in chain],
-        "pe": pe,
-        "in_region": "x0",
-        "in_shape": (chain[0][2], chain[0][3], chain[0][1].cin),
-        "out_region": f"y@{last_name}",
-        "out_shape": (lh2, lw2, last_spec.cout),
-    })
+        s, t = spec.stride, op.tile_rows
+        rows_done = 0                    # input rows already expanded
+        for r0 in range(0, h2, t):
+            r1 = min(h2, r0 + t)
+            need_hi = min(bh - 1, (r1 - 1) * s + 1)   # last halo row needed
+            self.bar()
+            for y in range(rows_done, need_hi + 1):   # NEW rows only: the
+                for x in range(bw):                   # tile halo is reused
+                    self.emit("LD_VEC", isa.REG_IN, y, x)
+                    self.emit("EXP_MAC", isa.MODE_VEC)
+                    self.emit("REQUANT", isa.STAGE_F1)
+                    self.emit("ST_VEC", isa.REG_F1, y, x)
+            rows_done = max(rows_done, need_hi + 1)
+            self.bar()
+            for oy in range(r0, r1):
+                for ox in range(w2):
+                    self.emit("LD_TILE", isa.REG_F1, oy, ox)
+                    self.emit("DW_MAC")
+                    self.emit("REQUANT", isa.STAGE_F2)
+                    self.emit("PROJ_MAC")
+                    self.emit("REQUANT", isa.STAGE_OUT)
+                    if spec.has_residual:
+                        self.emit("RES_ADD", oy, ox)
+                    self.emit("ST_PX", oy, ox)
 
 
-def compile_block(spec: DSCBlockSpec, h: int, w: int,
-                  schedule: CFUSchedule, name: str = "b0",
-                  pe: Optional[PEConfig] = None) -> Program:
+def select_instructions(ops: Sequence[ir_mod.Op], layout: Layout,
+                        pe: PEConfig) -> List[Instr]:
+    """Lower a (contiguous) op sequence to one instruction stream."""
+    sel = _InstrSel(layout)
+    sel.emit("CFG_PE", pe.exp_pes, pe.dw_lanes, pe.proj_engines)
+    i = 0
+    while i < len(ops):
+        op = ops[i]
+        if isinstance(op, GAP):
+            if not (i + 1 < len(ops) and isinstance(ops[i + 1], FC)):
+                raise NotImplementedError(
+                    "GAP must be immediately followed by FC (the pooled "
+                    "vector is port-resident)")
+            sel.op_gap_fc(op, ops[i + 1])
+            i += 2
+            continue
+        if isinstance(op, DSCBlock):
+            sel.op_dsc_block(op)
+        elif isinstance(op, Conv3x3):
+            sel.op_conv3x3(op)
+        elif isinstance(op, Head1x1):
+            sel.op_head1x1(op)
+        else:
+            raise NotImplementedError(f"no lowering for {type(op).__name__}")
+        i += 1
+    sel.emit("HALT")
+    return sel.instrs
+
+
+# ---------------------------------------------------------------------------
+# Pass 4: multi-stream partitioning
+# ---------------------------------------------------------------------------
+
+
+def _partition_units(ops: Sequence[ir_mod.Op]) -> List[List[ir_mod.Op]]:
+    """Indivisible scheduling units: every op alone, except GAP+FC."""
+    units: List[List[ir_mod.Op]] = []
+    i = 0
+    while i < len(ops):
+        if isinstance(ops[i], GAP) and i + 1 < len(ops) \
+                and isinstance(ops[i + 1], FC):
+            units.append([ops[i], ops[i + 1]])
+            i += 2
+        else:
+            units.append([ops[i]])
+            i += 1
+    return units
+
+
+def _unit_cost(unit: List[ir_mod.Op], layout: Layout, pe: PEConfig,
+               pipeline: str) -> float:
+    """Cycles of one unit compiled alone against the real layout."""
+    from repro.cfu.timing import analyze
+    prog = Program(select_instructions(unit, layout, pe),
+                   meta={"layout": layout})
+    return analyze(prog, pipeline, pe=pe).total_cycles
+
+
+def _balanced_partition(costs: List[float], n: int) -> List[int]:
+    """Contiguous min-max partition (DP); returns segment sizes."""
+    n_units = len(costs)
+    n = min(n, n_units)
+    prefix = [0.0]
+    for c in costs:
+        prefix.append(prefix[-1] + c)
+    INF = float("inf")
+    # best[k][i] = minimal max-segment-cost splitting units[:i] into k parts
+    best = [[INF] * (n_units + 1) for _ in range(n + 1)]
+    cut = [[0] * (n_units + 1) for _ in range(n + 1)]
+    best[0][0] = 0.0
+    for k in range(1, n + 1):
+        for i in range(k, n_units + 1):
+            for j in range(k - 1, i):
+                cand = max(best[k - 1][j], prefix[i] - prefix[j])
+                if cand < best[k][i]:
+                    best[k][i], cut[k][i] = cand, j
+    sizes: List[int] = []
+    i = n_units
+    for k in range(n, 0, -1):
+        j = cut[k][i]
+        sizes.append(i - j)
+        i = j
+    return sizes[::-1]
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+
+def _schedule_meta(ir: IRProgram, schedule: ScheduleSpec):
+    blocks = ir.dsc_blocks()
+    names = {op.schedule.value for op in blocks}
+    label = (AUTO_SCHEDULE
+             if isinstance(schedule, str) and schedule == AUTO_SCHEDULE
+             else (names.pop() if len(names) == 1 else "mixed"))
+    return label, {op.name: op.schedule.value for op in blocks}
+
+
+def _compile_ir(ir: IRProgram, schedule: ScheduleSpec,
+                pe: Optional[PEConfig], *, streams: int = 1,
+                tile_rows: int = 4, pipeline: str = "v3"):
+    pe = pe or PEConfig()
+    assign_schedules(ir, schedule, tile_rows=tile_rows,
+                     pipeline=pipeline, pe=pe)
+    materialize_scratch(ir)
+    layout = plan_memory(ir, pin_io=streams > 1)
+    label, block_schedules = _schedule_meta(ir, schedule)
+
+    def meta_for(ops_seg, extra):
+        first, last = ops_seg[0], ops_seg[-1]
+        v_in, v_out = (ir.value_of(first.inputs[0]),
+                       ir.value_of(last.outputs[0]))
+        m = {
+            "schedule": label,
+            "block_schedules": block_schedules,
+            "layout": layout,
+            "blocks": [(op.name, op.spec, op.h, op.w)
+                       for op in ops_seg if isinstance(op, DSCBlock)],
+            "pe": pe,
+            "in_region": v_in.name, "in_shape": v_in.shape,
+            "out_region": v_out.name, "out_shape": v_out.shape,
+        }
+        if ir.network:
+            m["network"] = ir.network
+            m.update(ir.extra_meta)
+        m.update(extra)
+        return m
+
+    if streams <= 1:
+        instrs = select_instructions(ir.ops, layout, pe)
+        return Program(instrs, meta=meta_for(ir.ops, {}))
+
+    units = _partition_units(ir.ops)
+    costs = [_unit_cost(u, layout, pe, pipeline) for u in units]
+    sizes = _balanced_partition(costs, streams)
+    progs: List[Program] = []
+    partition: List[List[str]] = []
+    at = 0
+    for si, size in enumerate(sizes):
+        seg_ops = [op for u in units[at:at + size] for op in u]
+        progs.append(Program(
+            select_instructions(seg_ops, layout, pe),
+            meta=meta_for(seg_ops, {"stream": si,
+                                    "est_cycles": sum(costs[at:at + size])})))
+        partition.append([op.name for op in seg_ops])
+        at += size
+    return MultiStreamProgram(progs, meta=meta_for(ir.ops, {
+        "streams": len(progs),             # actual core count (may clamp:
+        "streams_requested": streams,      # at most one unit per core)
+        "partition": partition}))
+
+
+def compile_network(specs: Sequence[Tuple[str, "DSCBlockSpec"]],
+                    h: int, w: int,
+                    schedule: ScheduleSpec,
+                    pe: Optional[PEConfig] = None, *,
+                    streams: int = 1, tile_rows: int = 4,
+                    pipeline: str = "v3"):
+    """Lower a chain of DSC blocks into CFU instruction stream(s).
+
+    ``schedule`` is a uniform schedule (enum or registry name), a
+    per-block ``{name: schedule}`` mapping, or ``"auto"`` (cost-model pick
+    per block). ``streams=N`` partitions the chain across N CFU cores
+    sharing the DRAM port and returns a :class:`MultiStreamProgram`.
+    """
+    ir = build_chain_ir(specs, h, w)
+    return _compile_ir(ir, schedule, pe, streams=streams,
+                       tile_rows=tile_rows, pipeline=pipeline)
+
+
+def compile_block(spec, h: int, w: int, schedule: ScheduleSpec,
+                  name: str = "b0", pe: Optional[PEConfig] = None, *,
+                  tile_rows: int = 4) -> Program:
     """Lower a single block (convenience wrapper over compile_network)."""
-    return compile_network([(name, spec)], h, w, schedule, pe=pe)
+    return compile_network([(name, spec)], h, w, schedule, pe=pe,
+                           tile_rows=tile_rows)
 
 
-def compile_vww_network(specs: Sequence[Tuple[str, DSCBlockSpec]],
+def compile_vww_network(specs: Sequence[Tuple[str, "DSCBlockSpec"]],
                         img_hw: int,
-                        schedule: CFUSchedule,
+                        schedule: ScheduleSpec,
                         *,
                         img_ch: int = 3,
                         head_ch: int = 128,
                         n_classes: int = 2,
-                        pe: Optional[PEConfig] = None) -> Program:
+                        pe: Optional[PEConfig] = None,
+                        streams: int = 1, tile_rows: int = 4,
+                        pipeline: str = "v3"):
     """Lower a COMPLETE VWW inference: stem -> DSC chain -> head -> GAP+FC.
 
     ``specs`` is the bottleneck chain (``models.mobilenetv2.block_specs``);
     the stem downsamples the (img_hw, img_hw, img_ch) image by 2 into the
     chain's cin channels. Weight binding: params[0]=stem, params[1..N]=
-    blocks, params[N+1]=head, params[N+2]=FC.
+    blocks, params[N+1]=head, params[N+2]=FC. Accepts the same
+    ``schedule``/``streams`` forms as :func:`compile_network`.
     """
-    pe = pe or PEConfig()
-    c0 = specs[0][1].cin
-    sh = sw = -(-img_hw // 2)                  # stem output resolution
-    chain = _block_chain_hw(specs, sh, sw)
-    last_name, last_spec, lh, lw = chain[-1]
-    lh2, lw2 = last_spec.out_hw(lh, lw)
-
-    layout = Layout()
-    dram_top = 0
-
-    def dram(name: str, size: int) -> Region:
-        nonlocal dram_top
-        r = layout.add(name, isa.SPACE_DRAM, dram_top, size)
-        dram_top += size
-        return r
-
-    r_img = dram("img", img_hw * img_hw * img_ch)
-    r_stem = dram("y@stem", sh * sw * c0)
-    io_regions: List[Tuple[Region, Region]] = []
-    prev = r_stem
-    for name, spec, bh, bw in chain:
-        h2, w2 = spec.out_hw(bh, bw)
-        r_out = dram(f"y@{name}", h2 * w2 * spec.cout)
-        io_regions.append((prev, r_out))
-        prev = r_out
-    r_head = dram("y@head", lh2 * lw2 * head_ch)
-    r_logits = dram("logits", n_classes)
-
-    scratch_space, scratch_base = _scratch_placement(schedule, dram_top)
-    em = _Emitter(schedule, layout, scratch_space, scratch_base)
-    em.emit("CFG_PE", pe.exp_pes, pe.dw_lanes, pe.proj_engines)
-    em.stem(img_ch, c0, img_hw, img_hw, r_img, r_stem, 0)
-    for bi, ((name, spec, bh, bw), (r_x, r_y)) in enumerate(
-            zip(chain, io_regions)):
-        em.dsc_block(name, spec, bh, bw, r_x, r_y, bi + 1)
-    em.head(last_spec.cout, head_ch, lh2, lw2, prev, r_head,
-            len(chain) + 1)
-    em.gap_fc(head_ch, n_classes, lh2, lw2, r_head, r_logits,
-              len(chain) + 2)
-    em.finish(layout, dram_top)
-
-    return Program(em.instrs, meta={
-        "schedule": schedule.value,
-        "layout": layout,
-        "blocks": [(name, spec, bh, bw) for name, spec, bh, bw in chain],
-        "pe": pe,
-        "network": "vww",
-        "head_ch": head_ch,
-        "n_classes": n_classes,
-        "in_region": "img",
-        "in_shape": (img_hw, img_hw, img_ch),
-        "out_region": "logits",
-        "out_shape": (n_classes,),
-    })
+    ir = build_vww_ir(specs, img_hw, img_ch=img_ch, head_ch=head_ch,
+                      n_classes=n_classes)
+    return _compile_ir(ir, schedule, pe, streams=streams,
+                       tile_rows=tile_rows, pipeline=pipeline)

@@ -16,6 +16,12 @@ same program); only the data plane widens. ``run_words`` accepts either a
 single image (H, W, C) or a batch (B, H, W, C) and is bit-exact per image
 either way (asserted in tests/test_cfu_differential.py).
 
+Multi-core simulation (PR 3): ``run_multistream`` executes a
+``compiler.MultiStreamProgram`` as a frame-pipelined machine — N cores
+over one shared DRAM image, interleaved round by round (core *i* runs
+frame *r - i* in round *r*), each core re-running its own encoded stream
+per frame with a private SRAM scratch.
+
 Bit-exactness contract: the int8 outputs equal
 ``core.dsc.dsc_block_reference`` / ``dsc_block_fused_pixelwise`` (and the
 full-network stream equals ``models.mobilenetv2.forward_int8``) with EXACT
@@ -133,18 +139,24 @@ class CFUMachine:
     """Architectural state + instruction dispatch (batch axis throughout)."""
 
     def __init__(self, params: Sequence, dram_size: int, sram_size: int,
-                 batch: int = 1):
+                 batch: int = 1,
+                 dram_mem: Optional[np.ndarray] = None):
         self.params = list(params)
         self._wcache: Dict[int, _BlockWeights] = {}
         self.batch = batch
+        # ``dram_mem`` shares one off-chip image between machines — the
+        # multi-stream runner's common DRAM port (each core keeps its own
+        # SRAM scratch).
         self.mem = {
-            isa.SPACE_DRAM: np.zeros((batch, max(dram_size, 1)), np.int8),
+            isa.SPACE_DRAM: (dram_mem if dram_mem is not None else
+                             np.zeros((batch, max(dram_size, 1)), np.int8)),
             isa.SPACE_SRAM: np.zeros((batch, max(sram_size, 1)), np.int8),
         }
         # CFG state
         self.cin = self.cmid = self.cout = 0
         self.stride = 1
         self.h = self.w = self.h2 = self.w2 = 0
+        self.strip_rows = 0      # CFG_STRIP: F1 rolling-buffer depth (0=off)
         # base registers: reg -> (space, addr)
         self.base: Dict[int, Tuple[int, int]] = {}
         self.cur: Optional[_BlockWeights] = None
@@ -178,6 +190,11 @@ class CFUMachine:
     def _vec_slice(self, reg: int, y: int, x: int) -> np.ndarray:
         space, base = self.base[reg]
         _, w, ch = self._map_shape(reg)
+        if reg == isa.REG_F1 and self.strip_rows:
+            # Strip mode: F1 rows live in a rolling buffer, row coordinate
+            # modulo the strip depth (the circular line buffer of the
+            # fused-rowtile schedule; bounds were checked by the caller).
+            y = y % self.strip_rows
         off = base + (y * w + x) * ch
         return self.mem[space][:, off:off + ch]
 
@@ -231,9 +248,13 @@ class CFUMachine:
         self.cin, self.cmid, self.cout = cin, cmid, cout
         self.stride, self.h, self.w = stride, h, w
         self.h2, self.w2 = -(-h // stride), -(-w // stride)
+        self.strip_rows = 0      # each block opts back in via CFG_STRIP
 
     def _op_cfg_pe(self, exp_pes, dw_lanes, proj_engines):
         pass  # engine counts shape time, never values (timing model only)
+
+    def _op_cfg_strip(self, rows):
+        self.strip_rows = rows
 
     def _op_set_base(self, reg, space, addr):
         self.base[reg] = (space, addr)
@@ -352,6 +373,40 @@ class CFUMachine:
 # --- host-side entry points --------------------------------------------------
 
 
+def _bind_input(x_q, meta: Dict[str, object]) -> Tuple[np.ndarray, bool]:
+    """Normalize to a batch and validate against the bound input region."""
+    layout = meta["layout"]
+    x_q = np.asarray(x_q, np.int8)
+    in_ndim = len(meta["in_shape"])
+    if x_q.ndim == in_ndim:
+        batched, x_q = False, x_q[None]
+    elif x_q.ndim == in_ndim + 1:
+        batched = True
+    else:
+        raise ValueError(f"input ndim {x_q.ndim}, expected {in_ndim} "
+                         f"or {in_ndim + 1} (batched)")
+    r_in = layout.regions[meta["in_region"]]
+    if x_q[0].size != r_in.size:
+        raise ValueError(f"input has {x_q[0].size} bytes, region "
+                         f"{r_in.name} holds {r_in.size}")
+    return x_q, batched
+
+
+def _read_output(dram_mem: np.ndarray, sram_mem: Optional[np.ndarray],
+                 meta: Dict[str, object], batched: bool) -> np.ndarray:
+    layout = meta["layout"]
+    r_out = layout.regions[meta["out_region"]]
+    if r_out.space != isa.SPACE_DRAM and sram_mem is None:
+        raise ValueError(
+            f"output region {r_out.name!r} is SRAM-resident but this "
+            "entry point only exposes the shared DRAM image (multi-stream "
+            "outputs must be planned into DRAM)")
+    mem = dram_mem if r_out.space == isa.SPACE_DRAM else sram_mem
+    y = mem[:, r_out.base:r_out.base + r_out.size]
+    y = y.reshape((mem.shape[0],) + tuple(meta["out_shape"])).copy()
+    return y if batched else y[0]
+
+
 def run_words(words: Sequence[int], x_q, params: Sequence,
               meta: Dict[str, object],
               return_stats: bool = False):
@@ -363,29 +418,15 @@ def run_words(words: Sequence[int], x_q, params: Sequence,
     by the words themselves.
     """
     layout = meta["layout"]
-    x_q = np.asarray(x_q, np.int8)
-    in_ndim = len(meta["in_shape"])
-    if x_q.ndim == in_ndim:
-        batched, x_q = False, x_q[None]
-    elif x_q.ndim == in_ndim + 1:
-        batched = True
-    else:
-        raise ValueError(f"input ndim {x_q.ndim}, expected {in_ndim} "
-                         f"or {in_ndim + 1} (batched)")
+    x_q, batched = _bind_input(x_q, meta)
     m = CFUMachine(params, layout.dram_size, layout.sram_size,
                    batch=x_q.shape[0])
     r_in = layout.regions[meta["in_region"]]
-    if x_q[0].size != r_in.size:
-        raise ValueError(f"input has {x_q[0].size} bytes, region "
-                         f"{r_in.name} holds {r_in.size}")
     m.mem[r_in.space][:, r_in.base:r_in.base + r_in.size] = \
         x_q.reshape(x_q.shape[0], -1)
     stats = m.execute(isa.decode_words(words))
-    r_out = layout.regions[meta["out_region"]]
-    y = m.mem[r_out.space][:, r_out.base:r_out.base + r_out.size]
-    y = y.reshape((x_q.shape[0],) + tuple(meta["out_shape"])).copy()
-    if not batched:
-        y = y[0]
+    y = _read_output(m.mem[isa.SPACE_DRAM], m.mem[isa.SPACE_SRAM],
+                     meta, batched)
     return (y, stats) if return_stats else y
 
 
@@ -394,3 +435,42 @@ def run_program(program, x_q, params: Sequence,
     """Encode then execute — every run exercises the binary format."""
     return run_words(isa.encode_program(program), x_q, params, program.meta,
                      return_stats=return_stats)
+
+
+def run_multistream(ms, x_q, params: Sequence, return_stats: bool = False):
+    """Execute a ``compiler.MultiStreamProgram`` as the frame-pipelined
+    multi-core machine it compiles for: N cores share ONE DRAM image (the
+    common off-chip port), each owns its SRAM scratch, and the runner
+    *interleaves* the streams round by round — in round *r*, core *i*
+    executes frame *r - i*, so all N cores are busy on N consecutive
+    frames of the batch at once (the steady state
+    ``timing.analyze_multistream`` prices).
+
+    Core *i*'s output regions are core *i+1*'s input regions in the shared
+    plan (boundary maps are pinned for the whole frame), so the schedule
+    respects the frame's data dependencies by construction and the result
+    is bit-exact vs the single-stream compile, per frame. Every stream
+    executes from its encoded words.
+    """
+    layout = ms.meta["layout"]
+    x_q, batched = _bind_input(x_q, ms.meta)
+    n_frames = x_q.shape[0]
+    dram = np.zeros((n_frames, max(layout.dram_size, 1)), np.int8)
+    r_in = layout.regions[ms.meta["in_region"]]
+    dram[:, r_in.base:r_in.base + r_in.size] = x_q.reshape(n_frames, -1)
+    words = [isa.decode_words(isa.encode_program(p)) for p in ms.streams]
+    # One persistent machine per core: the weight cache and SRAM scratch
+    # survive across frames (as in the real core — every stream writes its
+    # scratch before reading it, so stale frame state is never observed);
+    # only the DRAM window is re-pointed at the round's frame.
+    cores = [CFUMachine(params, layout.dram_size, layout.sram_size,
+                        batch=1, dram_mem=dram[0:1]) for _ in ms.streams]
+    for rnd in range(n_frames + len(ms.streams) - 1):
+        for core, (m, instrs) in enumerate(zip(cores, words)):
+            frame = rnd - core
+            if not 0 <= frame < n_frames:
+                continue  # core idle this round (pipeline fill/drain)
+            m.mem[isa.SPACE_DRAM] = dram[frame:frame + 1]
+            m.execute(instrs)
+    y = _read_output(dram, None, ms.meta, batched)
+    return (y, [m.stats for m in cores]) if return_stats else y

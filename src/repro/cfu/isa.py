@@ -40,6 +40,19 @@ Four opcodes lift the stream from DSC-chain-only to a whole VWW inference:
   depthwise lanes, projection engines). Architecturally a no-op (the golden
   executor ignores it); the timing model uses it to scale per-stage costs,
   which is how cycles-vs-PE-count sweeps are carried *in the program*.
+
+Row-tile fusion extension (PR 3)
+--------------------------------
+``CFG_STRIP rows`` puts the F1 base register into *strip mode*: the F1 map
+is backed by a rolling buffer of ``rows`` feature-map rows, and every F1
+row coordinate is addressed modulo ``rows`` (a circular line buffer — the
+standard windowing-engine structure, here applied to the expanded map).
+The fused-rowtile schedule sets ``rows = (tile_rows-1)*stride + 3`` so a
+tile's full depthwise halo is resident while expansion rows older than the
+halo are overwritten in place; halo rows carried between consecutive tiles
+(two rows at stride 1, one row at stride 2) are *reused*, never
+recomputed. ``rows = 0`` (and every ``CFG``) returns F1 to plain
+row-major addressing.
 """
 
 from __future__ import annotations
@@ -86,6 +99,7 @@ OPCODES: Dict[str, int] = {
     "GAP_ACC": 0x11,
     "GAP_FIN": 0x12,
     "CFG_PE": 0x13,
+    "CFG_STRIP": 0x14,
 }
 MNEMONICS = {v: k for k, v in OPCODES.items()}
 
@@ -111,6 +125,7 @@ FIELD_SPECS: Dict[str, List[Tuple[str, int]]] = {
     "GAP_ACC": [],
     "GAP_FIN": [("n", 12)],        # pooled pixel count (divisor)
     "CFG_PE": [("exp_pes", 8), ("dw_lanes", 8), ("proj_engines", 8)],
+    "CFG_STRIP": [("rows", 8)],    # F1 rolling-strip depth; 0 = row-major
 }
 
 

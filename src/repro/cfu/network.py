@@ -20,16 +20,23 @@ records below, which expose EXACTLY the attribute subset of
 the params list ``compile_vww_network`` expects (stem, blocks..., head,
 FC) — the biases are already zero-point-folded by ``init_and_quantize``,
 so the engines stream raw int8 exactly as for the DSC blocks.
+
+``random_chain_params`` builds a coherently-chained quantized parameter
+list for a bare DSC chain (block i+1 is calibrated on block i's float
+output, so the activation domains line up the way a really-trained
+network's would) — the weight set ``compile_network`` streams in chain
+mode, shared by the CLI and the tests.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import List
+from typing import List, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import quant
+from repro.core import dsc, quant
+from repro.core.dsc import DSCBlockSpec, QuantizedDSCParams
 from repro.core.quant import QParams
 
 
@@ -92,3 +99,22 @@ def vww_cfu_params(p) -> List[object]:
         m_proj=np.asarray(p.fc_m, np.float32),
         qp_out=p.qp_logits)
     return [stem] + list(p.blocks) + [head, fc]
+
+
+def random_chain_params(key, specs: Sequence[Tuple[str, DSCBlockSpec]],
+                        hw: int, seed: int = 0
+                        ) -> List[QuantizedDSCParams]:
+    """Random quantized weights for a bare DSC chain, calibrated in chain
+    order: each block's activation ranges come from the previous block's
+    float output, exactly the TinyML post-training-quantization workflow.
+    """
+    import jax
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((hw, hw, specs[0][1].cin)).astype(np.float32)
+    params = []
+    for i, (_, spec) in enumerate(specs):
+        p32 = dsc.init_dsc_block_f32(jax.random.fold_in(key, i), spec)
+        qp = dsc.quantize_dsc_block(p32, spec, x)
+        params.append(qp)
+        x = np.asarray(dsc.dsc_block_f32(x, p32, spec))
+    return params

@@ -12,14 +12,20 @@ the other ``benchmarks/bench_*`` modules):
 * ``table_vi_lines``  — Table VI analogue: DRAM/SRAM bytes measured from
   the instruction streams, cross-checked (exactly) against the analytic
   Eq. 1/2 model in ``core.traffic``, plus the aggregate up-to-87% claim.
+* ``schedule_comparison`` — one row per schedule of the VWW bottleneck
+  chain (bytes moved, SRAM peak, cycles per pipeline, energy), the data
+  behind the README table and the CI fused-rowtile-vs-fused DRAM gate;
+  ``schedule_comparison_md`` renders it as the README's markdown.
 """
 
 from __future__ import annotations
 
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.cfu import timing as cfu_timing
-from repro.cfu.compiler import CFUSchedule, compile_block
+from repro.cfu.compiler import (CFUSchedule, SCHEDULES, compile_block,
+                                compile_network)
+from repro.cfu.ir import MULTI_STAGE_SCHEDULES
 from repro.cfu.timing import TimingReport
 from repro.core.dsc import DSCBlockSpec
 from repro.core.fusion import (SW_CYCLES_PER_LOOP_B, SW_CYCLES_PER_MAC_A,
@@ -81,7 +87,8 @@ def build_layer_reports(
         reports: Dict[Tuple[str, str], TimingReport] = {}
         for sched in CFUSchedule:
             prog = compile_block(spec, hw, hw, sched, name=name)
-            if sched is CFUSchedule.FUSED:
+            if sched in MULTI_STAGE_SCHEDULES:
+                # multi-stage phases: the pipelining mode matters
                 for pl in pipelines:
                     reports[(sched.value, pl)] = cfu_timing.analyze(prog, pl)
             else:
@@ -108,7 +115,9 @@ def table_iii_lines(rows: List[Dict[str, object]]) -> List[str]:
                            (("layer-sram", "v1"), "cfu_layer_sram"),
                            (("fused", "v1"), "cfu_fused_v1"),
                            (("fused", "v2"), "cfu_fused_v2"),
-                           (("fused", "v3"), "cfu_fused_v3")):
+                           (("fused", "v3"), "cfu_fused_v3"),
+                           (("fused-rowtile", "v3"),
+                            "cfu_fused_rowtile_v3")):
             rep = r["reports"].get(key)
             if rep is None:
                 continue
@@ -123,16 +132,24 @@ def table_iii_lines(rows: List[Dict[str, object]]) -> List[str]:
     return out
 
 
+def _rep_any(r: Dict[str, object], sched: str) -> TimingReport:
+    """A schedule's report at v1 if analyzed, else any pipeline (byte and
+    MAC counts are pipeline-independent, so either serves the tables)."""
+    rep = r["reports"].get((sched, "v1"))
+    if rep is None:
+        rep = next(v for k, v in r["reports"].items() if k[0] == sched)
+    return rep
+
+
 def table_v_lines(rows: List[Dict[str, object]]) -> List[str]:
     out = ["# Table V analogue: energy per layer (uJ), executed-MAC counts "
            "(fused pays its 9x expansion recompute)",
            "layer,schedule,macs,uJ_mac,uJ_dram,uJ_sram,uJ_total"]
     for r in rows:
-        for key in (("layer-dram", "v1"), ("layer-sram", "v1"),
-                    ("fused", "v1")):
-            rep = r["reports"][key]
+        for sched in ("layer-dram", "layer-sram", "fused", "fused-rowtile"):
+            rep = _rep_any(r, sched)
             e = rep.energy_pj
-            out.append(f"{r['name']},{key[0]},{rep.macs},"
+            out.append(f"{r['name']},{sched},{rep.macs},"
                        f"{e['mac'] / 1e6:.2f},{e['dram'] / 1e6:.2f},"
                        f"{e['sram'] / 1e6:.2f},{e['total'] / 1e6:.2f}")
     return out
@@ -149,27 +166,77 @@ def table_vi_lines(rows: List[Dict[str, object]]) -> List[str]:
         t = r["analytic"]
         base = r["reports"][("layer-dram", "v1")].dram_bytes
         cells = (
-            (("layer-dram", "v1"), t.baseline_total),
-            (("layer-sram", "v1"),
-             t.baseline_total - t.intermediate_bytes),
-            (("fused", "v1"), t.fused_total),
+            ("layer-dram", t.baseline_total),
+            ("layer-sram", t.baseline_total - t.intermediate_bytes),
+            ("fused", t.fused_total),
+            # halo reuse: rowtile's DRAM bytes equal the fused dataflow's
+            ("fused-rowtile", t.fused_total),
         )
-        for key, analytic in cells:
-            rep = r["reports"][key]
+        for sched, analytic in cells:
+            rep = _rep_any(r, sched)
             ok = (rep.dram_bytes == analytic
-                  if key[0] != "layer-sram" else
+                  if sched != "layer-sram" else
                   (rep.dram_bytes == analytic
                    and rep.sram_bytes == t.intermediate_bytes))
             red = 100.0 * (1.0 - rep.dram_bytes / base)
-            out.append(f"{r['name']},{key[0]},{rep.dram_bytes},"
+            out.append(f"{r['name']},{sched},{rep.dram_bytes},"
                        f"{rep.sram_bytes},{analytic},{ok},"
                        f"{rep.sram_buffer_bytes},{red:.1f}")
-            if key[0] == "fused":
+            if sched == "fused":
                 max_red = max(max_red, red)
         base_sum += base
-        fused_sum += r["reports"][("fused", "v1")].dram_bytes
+        fused_sum += _rep_any(r, "fused").dram_bytes
     agg = 100.0 * (1.0 - fused_sum / base_sum)
     out.append(f"# DRAM reduction: up to {max_red:.1f}% per layer, "
                f"{agg:.1f}% aggregate over the four layers "
                f"(paper: 'up to 87%'; analytic: core.traffic)")
+    return out
+
+
+# --- schedule-comparison table (README + CI artifact/gate) -------------------
+
+
+def schedule_comparison(hw: Optional[int] = None,
+                        pipelines: Sequence[str] = ("v1", "v3"),
+                        ) -> List[Dict[str, object]]:
+    """One row per schedule of the VWW bottleneck chain: bytes moved,
+    SRAM peak, cycles per pipeline, energy — the schedule-space map the
+    pass pipeline opens up. ``hw`` is the chain input (stem-output)
+    resolution; default is the paper's 40.
+    """
+    from repro.models.mobilenetv2 import block_specs
+    specs = block_specs()
+    hw = 40 if hw is None else hw
+    rows: List[Dict[str, object]] = []
+    for name, (sched, desc) in SCHEDULES.items():
+        prog = compile_network(specs, hw, hw, sched)
+        reps = {pl: cfu_timing.analyze(prog, pl) for pl in pipelines}
+        r0 = reps[pipelines[0]]
+        best = reps.get("v3", r0)     # bytes are pipeline-independent;
+        rows.append({                 # energy's leak term is not
+            "schedule": name,
+            "description": desc,
+            "hw": hw,
+            "dram_bytes": r0.dram_bytes,
+            "sram_bytes": r0.sram_bytes,
+            "sram_peak_bytes": r0.sram_buffer_bytes,
+            "macs": r0.macs,
+            "cycles": {pl: reps[pl].total_cycles for pl in pipelines},
+            "energy_uj": best.energy_pj["total"] / 1e6,
+        })
+    return rows
+
+
+def schedule_comparison_md(rows: List[Dict[str, object]]) -> List[str]:
+    """Render ``schedule_comparison`` rows as the README's markdown table."""
+    cyc_pl = "v3" if all("v3" in r["cycles"] for r in rows) \
+        else next(iter(rows[0]["cycles"]))
+    out = ["| schedule | DRAM bytes | SRAM bytes | SRAM peak | "
+           f"cycles ({cyc_pl}) | energy (uJ) |",
+           "|---|---:|---:|---:|---:|---:|"]
+    for r in rows:
+        cyc = r["cycles"][cyc_pl]
+        out.append(f"| `{r['schedule']}` | {r['dram_bytes']:,} | "
+                   f"{r['sram_bytes']:,} | {r['sram_peak_bytes']:,} | "
+                   f"{cyc:.3g} | {r['energy_uj']:.2f} |")
     return out

@@ -76,6 +76,19 @@ them without recompiling.
 Full-network opcodes: CONV_MAC (the stem's 3x3 standard conv) runs on the
 expansion array at WIN-mode cost; GAP_ACC/GAP_FIN run on the vector
 post-processing path (8-lane adds, then one per-channel divide).
+
+Rowtile + multi-stream (PR 3)
+-----------------------------
+``CFG_STRIP`` puts F1 reads/writes into rolling-strip addressing (row mod
+strip depth), mirroring the executor, so the fused-rowtile schedule's
+SRAM strip traffic is metered against the strip buffer, not a full map.
+``analyze_multistream`` models N cores running the segments of a
+``compiler.MultiStreamProgram`` on *consecutive frames*: the steady-state
+per-frame interval is ``max(slowest core, total DRAM-port time)`` — the
+shared off-chip port serializes across cores, and
+``dram_transfer_cycles`` (tracked per phase) is what it arbitrates. The
+static-energy term ``E_LEAK_PER_PE_CYCLE`` charges every engine for every
+cycle, which is what gives the energy-vs-PE sweep its minimum.
 """
 
 from __future__ import annotations
@@ -101,6 +114,12 @@ E_MAC_INT8 = 0.2          # pJ per int8 MAC
 E_SRAM_BYTE = 1.25        # pJ per byte, large on-chip SRAM
 E_RF_BYTE = 0.1           # pJ per byte, register file / pipeline regs
 E_DRAM_BYTE = 160.0       # pJ per byte, off-chip DRAM
+# Static (leakage + clock-tree) power per engine: charged for every cycle
+# the array exists, whether or not it is busy. This is what bends the
+# energy-vs-PE curve: a bigger array finishes sooner but leaks wider, a
+# smaller one leaks narrower but longer — the minimum sits near the
+# balanced design point (benchmarks/bench_scaling.py sweeps it).
+E_LEAK_PER_PE_CYCLE = 0.01   # pJ per engine per cycle
 
 PIPELINES = ("v1", "v2", "v3")
 _FILL_ITERS = {"v1": 0, "v2": 2, "v3": 4}
@@ -131,6 +150,7 @@ class PhaseStats:
     n_iters: int = 0
     compute_cycles: float = 0.0
     transfer_cycles: float = 0.0
+    dram_transfer_cycles: float = 0.0   # DRAM-port share of transfer
     multi_stage: bool = False
     last_iter_cycles: float = 0.0
 
@@ -146,9 +166,10 @@ class TimingReport:
     sram_bytes: int
     weight_bytes: int
     macs: int
-    energy_pj: Dict[str, float]      # {"mac", "dram", "sram", "total"}
+    energy_pj: Dict[str, float]   # {"mac", "dram", "sram", "leak", "total"}
     sram_buffer_bytes: int            # scratch high-water (Eq. 2 analogue)
     n_phases: int
+    dram_transfer_cycles: float = 0.0  # DRAM-port busy time (contention in)
 
 
 class _Walker:
@@ -163,6 +184,7 @@ class _Walker:
         self.cin = self.cmid = self.cout = 0
         self.stride = 1
         self.h = self.w = self.h2 = self.w2 = 0
+        self.strip_rows = 0      # CFG_STRIP rolling-buffer depth (0 = off)
         self.base: Dict[int, Tuple[int, int]] = {}
         # traffic
         self.touched: Dict[Tuple[int, str], np.ndarray] = {}
@@ -192,6 +214,8 @@ class _Walker:
         hm, wm, ch = self._map_shape(reg)
         if not (0 <= y < hm and 0 <= x < wm):
             return  # on-the-fly padding: no memory access
+        if reg == isa.REG_F1 and self.strip_rows:
+            y = y % self.strip_rows      # rolling strip (executor mirror)
         key = (space, stream)
         t = self.touched.get(key)
         if t is None:
@@ -203,11 +227,15 @@ class _Walker:
             seg[:] = True
             self.bytes_rw[space] += new
             self.cur.transfer_cycles += new * _cyc_per_byte(space)
+            if space == isa.SPACE_DRAM:
+                self.cur.dram_transfer_cycles += new * _cyc_per_byte(space)
 
     def _write(self, reg: int, n: int):
         space, _ = self.base[reg]
         self.bytes_rw[space] += n
         self.cur.transfer_cycles += n * _cyc_per_byte(space)
+        if space == isa.SPACE_DRAM:
+            self.cur.dram_transfer_cycles += n * _cyc_per_byte(space)
 
     # --- cycle helpers ------------------------------------------------------
 
@@ -266,6 +294,9 @@ class _Walker:
                 self.cin, self.cmid, self.cout = cin, cmid, cout
                 self.stride, self.h, self.w = stride, h, w
                 self.h2, self.w2 = -(-h // stride), -(-w // stride)
+                self.strip_rows = 0
+            elif op == "CFG_STRIP":
+                self.strip_rows = ins.args[0]
             elif op == "CFG_PE":
                 if not self.pe_locked:
                     self.pe = PEConfig(*ins.args)
@@ -364,6 +395,71 @@ def _cyc_per_byte(space: int) -> float:
             else CYC_PER_SRAM_BYTE)
 
 
+@dataclasses.dataclass
+class MultiStreamReport:
+    """Timing of an N-core compile: per-core reports + pipelined totals.
+
+    ``latency_cycles`` is one frame end-to-end (cores run back-to-back for
+    a single frame). ``interval_cycles`` is the steady-state per-frame
+    initiation interval with all cores busy on consecutive frames:
+    ``max(max_i core_i, sum_i dram_port_i)`` — the second term is the
+    shared DRAM port serializing every core's off-chip transfers
+    (boundary maps are double-buffered, so only port *bandwidth* couples
+    the cores). ``dram_contention_cycles`` is the exposed excess.
+    """
+
+    pipeline: str
+    per_stream: List[TimingReport]
+    latency_cycles: float
+    interval_cycles: float
+    dram_contention_cycles: float
+    dram_bytes: int
+    sram_bytes: int
+    macs: int
+    energy_pj: Dict[str, float]
+
+    @property
+    def throughput_speedup_vs_single(self) -> float:
+        return self.latency_cycles / self.interval_cycles
+
+
+def analyze_multistream(ms, pipeline: str = "v3",
+                        pe: Optional[PEConfig] = None) -> MultiStreamReport:
+    """Walk every stream of a ``compiler.MultiStreamProgram``.
+
+    Energy: the dynamic terms (MAC/DRAM/SRAM) sum over the streams, but
+    the static term is re-priced for the steady state the report models —
+    EVERY core leaks for the whole per-frame interval, including its
+    idle/stall share, so extra cores are never energetically free.
+    """
+    reps = [analyze(p, pipeline, pe=pe) for p in ms.streams]
+    latency = sum(r.total_cycles for r in reps)
+    slowest = max(r.total_cycles for r in reps)
+    port = sum(r.dram_transfer_cycles for r in reps)
+    interval = max(slowest, port)
+    energy: Dict[str, float] = {}
+    for r in reps:
+        for k, v in r.energy_pj.items():
+            energy[k] = energy.get(k, 0.0) + v
+    # per-stream leak was n_pes_i * total_i * C; steady state charges
+    # n_pes_i * interval instead (leak_i / total_i recovers the rate).
+    leak = sum(r.energy_pj["leak"] / r.total_cycles
+               for r in reps if r.total_cycles) * interval
+    energy["total"] += leak - energy.get("leak", 0.0)
+    energy["leak"] = leak
+    return MultiStreamReport(
+        pipeline=pipeline,
+        per_stream=reps,
+        latency_cycles=latency,
+        interval_cycles=interval,
+        dram_contention_cycles=max(0.0, interval - slowest),
+        dram_bytes=sum(r.dram_bytes for r in reps),
+        sram_bytes=sum(r.sram_bytes for r in reps),
+        macs=sum(r.macs for r in reps),
+        energy_pj=energy,
+    )
+
+
 def analyze(program: Program, pipeline: str = "v3",
             pe: Optional[PEConfig] = None) -> TimingReport:
     """Walk one compiled program and report cycles/traffic/energy.
@@ -376,11 +472,14 @@ def analyze(program: Program, pipeline: str = "v3",
     compute = sum(p.compute_cycles for p in w.phases)
     transfer = sum(p.transfer_cycles for p in w.phases)
     total = sum(max(p.compute_cycles, p.transfer_cycles) for p in w.phases)
+    dram_xfer = sum(p.dram_transfer_cycles for p in w.phases)
     dram = w.bytes_rw[isa.SPACE_DRAM]
     sram = w.bytes_rw[isa.SPACE_SRAM]
     e_mac = w.macs * E_MAC_INT8
     e_dram = dram * E_DRAM_BYTE
     e_sram = sram * E_SRAM_BYTE
+    n_pes = w.pe.exp_pes + w.pe.dw_lanes + w.pe.proj_engines
+    e_leak = n_pes * total * E_LEAK_PER_PE_CYCLE
     layout = program.meta["layout"]
     return TimingReport(
         pipeline=pipeline,
@@ -393,7 +492,9 @@ def analyze(program: Program, pipeline: str = "v3",
         weight_bytes=int(w.weight_bytes),
         macs=int(w.macs),
         energy_pj={"mac": e_mac, "dram": e_dram, "sram": e_sram,
-                   "total": e_mac + e_dram + e_sram},
+                   "leak": e_leak,
+                   "total": e_mac + e_dram + e_sram + e_leak},
         sram_buffer_bytes=int(layout.sram_size),
         n_phases=len(w.phases),
+        dram_transfer_cycles=dram_xfer,
     )

@@ -2,7 +2,9 @@
 
     python -m repro.launch.cfu --network vww                  # full inference
     python -m repro.launch.cfu --network vww --batch 8 --pe 18,18,112
-    python -m repro.launch.cfu --net mobilenetv2 --schedule fused
+    python -m repro.launch.cfu --net mobilenetv2 --schedule fused-rowtile
+    python -m repro.launch.cfu --net mobilenetv2 --schedule auto
+    python -m repro.launch.cfu --network vww --streams 3
     python -m repro.launch.cfu --block 3rd --schedule all --pipeline v3
     python -m repro.launch.cfu --network vww --asm /tmp/vww.asm
 
@@ -18,6 +20,15 @@ all images in lockstep), checking bit-exactly against
 paper's system does (stem/head on the scalar core), at the stem-output
 resolution. ``--block`` targets one of the paper's four benchmarked
 bottleneck layers at its published feature-map size.
+
+``--schedule`` takes any name from the compiler's schedule registry
+(``repro.cfu.SCHEDULES`` — the ``--help`` list is generated from it),
+plus ``auto`` (the cost-model pass picks per block; the picks are
+printed) and ``all`` (run every registered schedule). ``--streams N``
+partitions the op chain across N CFU cores sharing the DRAM port: the
+run prints per-core cycles, the steady-state frame interval, and the
+DRAM-port contention, and verifies ``executor.run_multistream``
+bit-exactly.
 
 ``--pe`` sets the engine counts baked into the stream's CFG_PE word
 (default: the paper's 9,9,56); ``--json`` writes the timing reports to a
@@ -36,30 +47,17 @@ import jax
 import numpy as np
 
 from repro.cfu import isa
-from repro.cfu.compiler import (CFUSchedule, compile_network,
-                                compile_vww_network)
-from repro.cfu.executor import run_program
-from repro.cfu.network import vww_cfu_params
+from repro.cfu.compiler import (AUTO_SCHEDULE, MultiStreamProgram,
+                                compile_network, compile_vww_network,
+                                schedule_names)
+from repro.cfu.executor import run_multistream, run_program
+from repro.cfu.ir import SCHEDULES
+from repro.cfu.network import random_chain_params, vww_cfu_params
 from repro.cfu.report import PAPER_LAYERS, modeled_network_sw_cycles
-from repro.cfu.timing import PEConfig, analyze
+from repro.cfu.timing import PEConfig, analyze, analyze_multistream
 from repro.configs.vww import VWW
 from repro.core import dsc, quant
 from repro.core.fusion import Schedule, modeled_cycles, run_block
-
-
-def _net_blocks(key, hw: int):
-    """The MobileNetV2 DSC chain with coherently chained quantization."""
-    from repro.models import mobilenetv2
-    specs = mobilenetv2.block_specs()
-    rng = np.random.default_rng(0)
-    x = rng.standard_normal((hw, hw, specs[0][1].cin)).astype(np.float32)
-    params = []
-    for i, (name, spec) in enumerate(specs):
-        p32 = dsc.init_dsc_block_f32(jax.random.fold_in(key, i), spec)
-        qp = dsc.quantize_dsc_block(p32, spec, x)
-        params.append(qp)
-        x = np.asarray(dsc.dsc_block_f32(x, p32, spec))
-    return specs, params
 
 
 def _single_block(key, name: str):
@@ -83,8 +81,51 @@ def _parse_pe(text) -> PEConfig:
 def _dump_asm(prog, path: str):
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     with open(path, "w") as f:
-        f.write(isa.program_to_asm(prog))
+        if isinstance(prog, MultiStreamProgram):
+            for i, p in enumerate(prog.streams):
+                f.write(f"; --- stream {i} ---\n")
+                f.write(isa.program_to_asm(p))
+        else:
+            f.write(isa.program_to_asm(prog))
     print(f"# assembly ({len(prog)} instrs) -> {path}")
+
+
+def _describe_schedule(prog):
+    """Per-block picks (one line) — what the auto pass decided."""
+    picks = prog.meta.get("block_schedules", {})
+    return " ".join(f"{n}:{s}" for n, s in picks.items())
+
+
+def _report_of(prog, args):
+    """Timing for either a single stream or a multi-stream compile."""
+    if isinstance(prog, MultiStreamProgram):
+        rep = analyze_multistream(prog, args.pipeline)
+        if prog.meta["streams"] != prog.meta["streams_requested"]:
+            print(f"#   NOTE: {prog.meta['streams_requested']} streams "
+                  f"requested, only {prog.meta['streams']} schedulable "
+                  f"units — compiled {prog.meta['streams']} cores")
+        for i, (p, r) in enumerate(zip(prog.streams, rep.per_stream)):
+            ops = ",".join(prog.meta["partition"][i])
+            print(f"#   stream {i}: {len(p)} instrs, "
+                  f"{r.total_cycles:.3e} cyc [{ops}]")
+        print(f"#   steady-state interval {rep.interval_cycles:.3e} cyc, "
+              f"DRAM-port contention {rep.dram_contention_cycles:.3e} cyc, "
+              f"throughput x{rep.throughput_speedup_vs_single:.2f} "
+              f"vs one core")
+        cycles = rep.interval_cycles
+        return rep, cycles
+    rep = analyze(prog, args.pipeline)
+    return rep, rep.total_cycles
+
+
+def _asdict(rep, prog=None):
+    d = dataclasses.asdict(rep)
+    if isinstance(prog, MultiStreamProgram):
+        # actual core count (the partition has at most one unit per core,
+        # so a large --streams may clamp), next to the request
+        d["streams"] = prog.meta["streams"]
+        d["streams_requested"] = prog.meta["streams_requested"]
+    return d
 
 
 def _run_vww(args, key, pe: PEConfig, schedules):
@@ -102,11 +143,12 @@ def _run_vww(args, key, pe: PEConfig, schedules):
     print(f"# CFU simulation: full VWW inference ({hw}x{hw}x{VWW.img_ch}, "
           f"stem+{len(specs)} blocks+head+GAP+FC), batch={batch}, "
           f"pe=({pe.exp_pes},{pe.dw_lanes},{pe.proj_engines}), "
-          f"pipeline={args.pipeline}")
+          f"pipeline={args.pipeline}, streams={args.streams}")
     print("schedule,n_instr,cycles,speedup_vs_sw_v0,dram_bytes,sram_bytes,"
           "sram_buffer_bytes,energy_uJ,verified_b1,verified_bN,exec_s")
     results = {"target": f"vww {hw}x{hw}", "pipeline": args.pipeline,
                "batch": batch, "pe": dataclasses.asdict(pe),
+               "streams": args.streams,
                "sw_v0_cycles": sw_cycles, "schedules": {}}
     imgs_q = ref = None
     if not args.no_verify:
@@ -120,28 +162,38 @@ def _run_vww(args, key, pe: PEConfig, schedules):
     for sched in schedules:
         prog = compile_vww_network(specs, hw, sched, img_ch=VWW.img_ch,
                                    head_ch=VWW.head_ch,
-                                   n_classes=VWW.n_classes, pe=pe)
+                                   n_classes=VWW.n_classes, pe=pe,
+                                   streams=args.streams,
+                                   pipeline=args.pipeline)
+        if sched == AUTO_SCHEDULE:
+            print(f"# auto picks: {_describe_schedule(prog)}")
         if args.asm:
             _dump_asm(prog, args.asm)
-        rep = analyze(prog, args.pipeline)
+        rep, cycles = _report_of(prog, args)
+        runner = (run_multistream if isinstance(prog, MultiStreamProgram)
+                  else run_program)
         v1 = vn = "-"
         exec_s = 0.0
         if not args.no_verify:
             t0 = time.time()
-            y1 = run_program(prog, imgs_q[0], params)
-            yb = run_program(prog, imgs_q, params)
+            y1 = runner(prog, imgs_q[0], params)
+            yb = runner(prog, imgs_q, params)
             exec_s = time.time() - t0
             v1 = bool(np.array_equal(y1, ref[0]))
             vn = bool(np.array_equal(yb, ref))
             if not (v1 and vn):
                 raise SystemExit(
-                    f"BIT-EXACTNESS FAILURE under {sched.value} "
+                    f"BIT-EXACTNESS FAILURE under {sched} "
                     f"(batch1={v1}, batch{batch}={vn})")
-        print(f"{sched.value},{len(prog)},{rep.total_cycles:.3e},"
-              f"{sw_cycles / rep.total_cycles:.1f},{rep.dram_bytes},"
-              f"{rep.sram_bytes},{rep.sram_buffer_bytes},"
+        label = sched if isinstance(sched, str) else sched.value
+        dram, sram = rep.dram_bytes, rep.sram_bytes
+        # MultiStreamReport has no sram_buffer_bytes (scratch is per-core)
+        sbuf = getattr(rep, "sram_buffer_bytes",
+                       prog.meta["layout"].sram_size)
+        print(f"{label},{len(prog)},{cycles:.3e},"
+              f"{sw_cycles / cycles:.1f},{dram},{sram},{sbuf},"
               f"{rep.energy_pj['total'] / 1e6:.2f},{v1},{vn},{exec_s:.2f}")
-        results["schedules"][sched.value] = dataclasses.asdict(rep)
+        results["schedules"][label] = _asdict(rep, prog)
     return results
 
 
@@ -151,8 +203,10 @@ def _run_chain(args, key, pe: PEConfig, schedules):
         specs, params, hw = _single_block(key, args.block)
         target = f"block {args.block} ({hw}x{hw})"
     else:
+        from repro.models import mobilenetv2
         hw = args.hw
-        specs, params = _net_blocks(key, hw)
+        specs = mobilenetv2.block_specs()
+        params = random_chain_params(key, specs, hw)
         target = f"mobilenetv2 DSC chain ({hw}x{hw} stem output)"
 
     # v0 software baseline over the same chain (calibrated cycle model)
@@ -162,18 +216,24 @@ def _run_chain(args, key, pe: PEConfig, schedules):
         sw_cycles += modeled_cycles(spec, h, w, Schedule.V0_LAYER_BY_LAYER)
         h, w = spec.out_hw(h, w)
 
-    print(f"# CFU simulation: {target}, schedules="
-          f"{[s.value for s in schedules]}, pipeline={args.pipeline}")
+    print(f"# CFU simulation: {target}, schedules={schedules}, "
+          f"pipeline={args.pipeline}, streams={args.streams}")
     print("schedule,n_instr,cycles,speedup_vs_sw_v0,dram_bytes,sram_bytes,"
           "sram_buffer_bytes,energy_uJ,verified,exec_s")
     results = {"target": target, "pipeline": args.pipeline,
-               "pe": dataclasses.asdict(pe),
+               "pe": dataclasses.asdict(pe), "streams": args.streams,
                "sw_v0_cycles": sw_cycles, "schedules": {}}
     for sched in schedules:
-        prog = compile_network(specs, hw, hw, sched, pe=pe)
+        prog = compile_network(specs, hw, hw, sched, pe=pe,
+                               streams=args.streams,
+                               pipeline=args.pipeline)
+        if sched == AUTO_SCHEDULE:
+            print(f"# auto picks: {_describe_schedule(prog)}")
         if args.asm:
             _dump_asm(prog, args.asm)
-        rep = analyze(prog, args.pipeline)
+        rep, cycles = _report_of(prog, args)
+        runner = (run_multistream if isinstance(prog, MultiStreamProgram)
+                  else run_program)
         verified, exec_s = "-", 0.0
         if not args.no_verify:
             rng = np.random.default_rng(args.seed)
@@ -181,25 +241,31 @@ def _run_chain(args, key, pe: PEConfig, schedules):
                 (hw, hw, specs[0][1].cin)).astype(np.float32)
             x_q = np.asarray(quant.quantize(x_f, params[0].qp_in))
             t0 = time.time()
-            y = run_program(prog, x_q, params)
+            y = runner(prog, x_q, params)
             exec_s = time.time() - t0
             ref = x_q
             for qp in params:
                 ref = run_block(ref, qp, Schedule.V0_LAYER_BY_LAYER)
             verified = bool(np.array_equal(y, np.asarray(ref)))
             if not verified:
-                raise SystemExit(
-                    f"BIT-EXACTNESS FAILURE under {sched.value}")
-        print(f"{sched.value},{len(prog)},{rep.total_cycles:.3e},"
-              f"{sw_cycles / rep.total_cycles:.1f},{rep.dram_bytes},"
-              f"{rep.sram_bytes},{rep.sram_buffer_bytes},"
+                raise SystemExit(f"BIT-EXACTNESS FAILURE under {sched}")
+        dram, sram = rep.dram_bytes, rep.sram_bytes
+        # MultiStreamReport has no sram_buffer_bytes (scratch is per-core)
+        sbuf = getattr(rep, "sram_buffer_bytes",
+                       prog.meta["layout"].sram_size)
+        print(f"{sched},{len(prog)},{cycles:.3e},"
+              f"{sw_cycles / cycles:.1f},{dram},{sram},{sbuf},"
               f"{rep.energy_pj['total'] / 1e6:.2f},{verified},{exec_s:.2f}")
-        results["schedules"][sched.value] = dataclasses.asdict(rep)
+        results["schedules"][sched] = _asdict(rep, prog)
     return results
 
 
 def main():
-    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    schedule_help = "; ".join(f"{name}: {desc}"
+                              for name, (_, desc) in SCHEDULES.items())
+    ap = argparse.ArgumentParser(
+        description=__doc__.splitlines()[0],
+        formatter_class=argparse.ArgumentDefaultsHelpFormatter)
     tgt = ap.add_mutually_exclusive_group()
     tgt.add_argument("--network", choices=["vww"], default=None,
                      help="full inference: stem + blocks + head + GAP + FC")
@@ -207,8 +273,14 @@ def main():
                      help="DSC bottleneck chain only (paper partitioning)")
     tgt.add_argument("--block", choices=[n for n, _, _ in PAPER_LAYERS])
     ap.add_argument("--schedule", default="fused",
-                    choices=[s.value for s in CFUSchedule] + ["all"])
+                    choices=schedule_names(include_auto=True) + ["all"],
+                    help=f"schedule registry: {schedule_help}; "
+                         "auto = cost-model pick per block; "
+                         "all = every registered schedule")
     ap.add_argument("--pipeline", default="v3", choices=["v1", "v2", "v3"])
+    ap.add_argument("--streams", type=int, default=1,
+                    help="partition the op chain across N CFU cores "
+                         "sharing the DRAM port")
     ap.add_argument("--hw", type=int, default=40,
                     help="input feature-map size for --net (stem output)")
     ap.add_argument("--img-hw", type=int, default=VWW.img_hw,
@@ -229,8 +301,8 @@ def main():
 
     key = jax.random.PRNGKey(args.seed)
     pe = _parse_pe(args.pe)
-    schedules = (list(CFUSchedule) if args.schedule == "all"
-                 else [CFUSchedule(args.schedule)])
+    schedules = (schedule_names() if args.schedule == "all"
+                 else [args.schedule])
 
     if args.network:
         results = _run_vww(args, key, pe, schedules)

@@ -8,15 +8,17 @@ import json
 import os
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.cfu import isa
-from repro.cfu.compiler import (CFUSchedule, compile_block, compile_network,
-                                compile_vww_network)
-from repro.cfu.executor import run_program, run_words
-from repro.cfu.network import vww_cfu_params
-from repro.cfu.timing import PEConfig, analyze
+from repro.cfu.compiler import (AUTO_SCHEDULE, CFUSchedule, compile_block,
+                                compile_network, compile_vww_network)
+from repro.cfu.executor import run_multistream, run_program, run_words
+from repro.cfu.ir import Layout, MemoryPlanError
+from repro.cfu.network import random_chain_params, vww_cfu_params
+from repro.cfu.timing import (PEConfig, analyze, analyze_multistream)
 from repro.core import dsc, quant
 from repro.core.dsc import DSCBlockSpec
 from repro.core.fusion import Schedule, modeled_cycles
@@ -92,7 +94,263 @@ def test_network_chain_bit_exact():
         np.testing.assert_array_equal(y, ref, err_msg=str(sched))
 
 
+# --- new schedules: fused-rowtile ------------------------------------------
+
+
+@pytest.mark.parametrize("tile_rows", [1, 2, 3, 5])
+def test_rowtile_matches_rowtile_reference_and_pallas(tile_rows):
+    """The fused-rowtile stream must equal the row-tile JAX discipline
+    (core.fusion v3's dataflow) AND the Pallas kernel, bit-exactly."""
+    from repro.kernels.fused_dsc import fused_dsc_pallas
+    spec, hw = DSCBlockSpec(cin=8, cmid=48, cout=8, stride=1), 12
+    x_q, qp, ref = _block(spec, hw)
+    prog = compile_block(spec, hw, hw, CFUSchedule.FUSED_ROWTILE,
+                         tile_rows=tile_rows)
+    y = run_program(prog, x_q, [qp])
+    rt = np.asarray(dsc.dsc_block_fused_rowtile(jnp.asarray(x_q), qp,
+                                                tile_rows=tile_rows))
+    np.testing.assert_array_equal(y, rt)
+    zps = (qp.qp_in.zero_point, qp.qp_f1.zero_point,
+           qp.qp_f2.zero_point, qp.qp_out.zero_point)
+    pl = fused_dsc_pallas(jnp.asarray(x_q), qp.w_exp,
+                          qp.w_dw.reshape(9, spec.cmid), qp.w_proj,
+                          qp.b_exp, qp.b_dw, qp.b_proj, qp.m_exp, qp.m_dw,
+                          qp.m_proj, stride=spec.stride, zps=zps,
+                          q6=(qp.q6_f1, qp.q6_f2), tile_rows=tile_rows,
+                          interpret=True)
+    y_pl = np.asarray(pl)
+    if spec.has_residual:
+        y_pl = np.asarray(dsc.residual_add_q(jnp.asarray(y_pl),
+                                             jnp.asarray(x_q), qp))
+    np.testing.assert_array_equal(y, y_pl)
+    np.testing.assert_array_equal(y, ref)
+
+
+@pytest.mark.parametrize("bi", range(7))
+def test_rowtile_moves_no_more_dram_than_fused(bi):
+    """Halo reuse across row tiles: rowtile's DRAM traffic equals the
+    fused dataflow's exactly (each input byte fetched once; strip
+    intermediates live in SRAM), and expansion recompute is gone (layer
+    MAC count, not the fused 9x)."""
+    (name, spec), hw = block_specs()[bi], MOBILENET_CHAIN_HW[bi]
+    rep_rt = analyze(compile_block(spec, hw, hw, CFUSchedule.FUSED_ROWTILE))
+    rep_f = analyze(compile_block(spec, hw, hw, CFUSchedule.FUSED))
+    rep_d = analyze(compile_block(spec, hw, hw, CFUSchedule.LAYER_DRAM))
+    assert rep_rt.dram_bytes == rep_f.dram_bytes
+    assert rep_rt.macs == rep_d.macs          # expansion once per input row
+    assert rep_rt.macs < rep_f.macs           # fused pays the 9x recompute
+    # the strip is a few rows, not the Eq. 2 full-map buffer
+    assert 0 < rep_rt.sram_buffer_bytes \
+        < min_sram_buffer_bytes(spec, hw, hw) + spec.cmid * hw * 3
+
+
+# --- scheduling passes -------------------------------------------------------
+
+
+def test_auto_schedule_never_loses_to_uniform():
+    """The cost-model pick is per block, so the auto stream's cycles are
+    <= every uniform schedule's (per-block costs are additive across the
+    chain: phases are per-block)."""
+    specs = block_specs()
+    hw = 16
+    auto = analyze(compile_network(specs, hw, hw, AUTO_SCHEDULE), "v3")
+    uniform = {s: analyze(compile_network(specs, hw, hw, s), "v3")
+               for s in CFUSchedule}
+    for s, rep in uniform.items():
+        assert auto.total_cycles <= rep.total_cycles * (1 + 1e-9), s
+    # and the picks genuinely mix (the point of per-block scheduling)
+    prog = compile_network(specs, hw, hw, AUTO_SCHEDULE)
+    assert len(set(prog.meta["block_schedules"].values())) > 1
+
+
+def test_per_block_schedule_mapping_bit_exact():
+    """An explicitly mixed per-block mapping executes bit-exactly."""
+    specs = block_specs()[:4]
+    hw = 10
+    params = random_chain_params(jax.random.PRNGKey(3), specs, hw)
+    mapping = {"3rd": "fused", "b2": "layer-sram",
+               "5th": "fused-rowtile", "b4": "layer-dram"}
+    prog = compile_network(specs, hw, hw, mapping)
+    assert prog.meta["schedule"] == "mixed"
+    assert prog.meta["block_schedules"] == mapping
+    rng = np.random.default_rng(9)
+    x_q = rng.integers(-128, 128, (hw, hw, specs[0][1].cin)).astype(np.int8)
+    ref = x_q
+    for qp in params:
+        ref = np.asarray(dsc.dsc_block_reference(ref, qp))
+    np.testing.assert_array_equal(run_program(prog, x_q, params), ref)
+
+
+# --- memory planner ----------------------------------------------------------
+
+
+def test_layout_add_raises_on_live_overlap():
+    """Overlap is no longer silent: two live regions may not collide;
+    freeing one legalizes address reuse (disjoint lifetimes)."""
+    lay = Layout()
+    lay.add("a", isa.SPACE_SRAM, 0, 100)
+    with pytest.raises(MemoryPlanError):
+        lay.add("b", isa.SPACE_SRAM, 50, 100)     # overlaps live 'a'
+    lay.add("c", isa.SPACE_DRAM, 50, 100)         # other space: fine
+    lay.free("a")
+    lay.add("b", isa.SPACE_SRAM, 50, 100)         # 'a' freed: reuse is legal
+    assert lay.sram_size == 150                   # high-water, not sum
+    assert "a" in lay.regions                     # record survives the free
+
+
+def test_memory_planner_reuses_scratch_across_blocks():
+    """Liveness-driven placement: the SRAM high-water equals the LARGEST
+    block's F1+F2 footprint (buffers of different blocks share addresses),
+    and block-IO DRAM maps are reused once dead (footprint < the sum)."""
+    specs = block_specs()
+    hw = 16
+    prog = compile_network(specs, hw, hw, CFUSchedule.LAYER_SRAM)
+    lay = prog.meta["layout"]
+    h = w = hw
+    per_block = []
+    for _, spec in specs:
+        h2, w2 = spec.out_hw(h, w)
+        per_block.append(h * w * spec.cmid + h2 * w2 * spec.cmid)
+        h, w = spec.out_hw(h, w)
+    assert lay.sram_size == max(per_block)
+    io_sum = sum(r.size for r in lay.regions.values()
+                 if r.space == isa.SPACE_DRAM)
+    assert lay.dram_size < io_sum                 # dead maps were reused
+
+
+def test_multistream_plan_pins_boundaries_not_scratch():
+    """pin_io pins boundary maps for the frame pipeline but must NOT pin
+    scheduler scratch (single-op lifetime on a single core): layer-dram's
+    multi-stream DRAM footprint is the pinned IO sum plus ONE reused
+    scratch arena, not per-block scratch copies."""
+    specs = block_specs()
+    hw = 16
+    ms = compile_network(specs, hw, hw, CFUSchedule.LAYER_DRAM, streams=2)
+    lay = ms.meta["layout"]
+    io_sum = scratch_sum = scratch_max = 0
+    per_block = {}
+    for r in lay.regions.values():
+        if r.name.startswith(("f1@", "f2@")):
+            scratch_sum += r.size
+            blk = r.name.split("@", 1)[1]
+            per_block[blk] = per_block.get(blk, 0) + r.size
+        else:
+            io_sum += r.size
+    scratch_max = max(per_block.values())
+    # every boundary map is pinned (the frame pipeline needs them all)...
+    assert lay.dram_size >= io_sum
+    # ...but scratch is NOT: the arena is reused, never per-block copies
+    assert lay.dram_size <= io_sum + scratch_max
+    assert lay.dram_size < io_sum + scratch_sum
+
+
+# --- multi-stream compilation ------------------------------------------------
+
+
+@pytest.mark.parametrize("streams", [2, 3])
+def test_multistream_bit_exact_vs_single(streams):
+    """N per-core streams over the shared DRAM plan produce exactly the
+    single-stream result on the bare DSC chain, batched and unbatched."""
+    specs = block_specs()
+    hw = 12
+    params = random_chain_params(jax.random.PRNGKey(1), specs, hw)
+    rng = np.random.default_rng(streams)
+    x_q = rng.integers(-128, 128, (2, hw, hw, specs[0][1].cin)) \
+        .astype(np.int8)
+    single = compile_network(specs, hw, hw, CFUSchedule.FUSED)
+    ms = compile_network(specs, hw, hw, CFUSchedule.FUSED, streams=streams)
+    assert len(ms.streams) == streams
+    ref = run_program(single, x_q, params)
+    np.testing.assert_array_equal(run_multistream(ms, x_q, params), ref)
+    np.testing.assert_array_equal(run_multistream(ms, x_q[0], params),
+                                  ref[0])
+
+
+def test_multistream_vww_bit_exact_vs_forward_int8():
+    """Full-VWW multistream: the partition has to handle the Conv3x3 stem
+    unit and the indivisible GAP+FC unit at segment boundaries; the
+    pipelined cores must still match the scalar-core reference logits."""
+    from repro.models import mobilenetv2 as mnv2
+    img_hw = 16
+    net = mnv2.init_and_quantize(jax.random.PRNGKey(4), img_hw=img_hw)
+    specs = block_specs()
+    params = vww_cfu_params(net)
+    rng = np.random.default_rng(11)
+    imgs = rng.standard_normal((3, img_hw, img_hw, 3)).astype(np.float32)
+    imgs_q = np.asarray(quant.quantize(imgs, net.qp_img))
+    ref = np.asarray(mnv2.forward_batch(imgs, net, return_quantized=True))
+    for streams in (2, 4):
+        ms = compile_vww_network(specs, img_hw, CFUSchedule.FUSED,
+                                 streams=streams)
+        assert ms.meta["partition"][0][0] == "stem"
+        assert ms.meta["partition"][-1][-2:] == ["gap", "fc"]
+        np.testing.assert_array_equal(run_multistream(ms, imgs_q, params),
+                                      ref, err_msg=f"streams={streams}")
+
+
+def test_plan_memory_pin_is_not_destructive():
+    """pin_io is a planning-time view: re-planning the same IR without the
+    pin must recover the lifetime-aware (smaller) footprint."""
+    from repro.cfu.compiler import assign_schedules, materialize_scratch
+    from repro.cfu.ir import build_chain_ir, plan_memory
+    specs = block_specs()
+    ir = build_chain_ir(specs, 16, 16)
+    assign_schedules(ir, CFUSchedule.FUSED)
+    materialize_scratch(ir)
+    unpinned = plan_memory(ir).dram_size
+    pinned = plan_memory(ir, pin_io=True).dram_size
+    assert pinned > unpinned
+    assert plan_memory(ir).dram_size == unpinned      # pin didn't stick
+
+
+def test_multistream_timing_interval_and_contention():
+    """Steady-state model: the frame interval is bounded below by the
+    slowest core and by the serialized DRAM port; total traffic equals the
+    single-stream compile's (partitioning moves no extra bytes)."""
+    specs = block_specs()
+    hw = 12
+    single = analyze(compile_network(specs, hw, hw, CFUSchedule.FUSED), "v3")
+    ms = compile_network(specs, hw, hw, CFUSchedule.FUSED, streams=3)
+    rep = analyze_multistream(ms, "v3")
+    assert len(rep.per_stream) == 3
+    slowest = max(r.total_cycles for r in rep.per_stream)
+    port = sum(r.dram_transfer_cycles for r in rep.per_stream)
+    assert rep.interval_cycles == pytest.approx(max(slowest, port))
+    assert rep.interval_cycles <= rep.latency_cycles
+    assert rep.dram_contention_cycles == pytest.approx(
+        max(0.0, port - slowest))
+    assert rep.dram_bytes == single.dram_bytes
+    assert rep.throughput_speedup_vs_single > 1.0
+    # per-frame latency is the sum of the cores (they run back-to-back)
+    assert rep.latency_cycles == pytest.approx(
+        sum(r.total_cycles for r in rep.per_stream))
+
+
 # --- ISA round trips ---------------------------------------------------------
+
+
+def _canonical_word(op: str, args) -> int:
+    """Pack fields per FIELD_SPECS by hand (independent of assemble())."""
+    word = isa.OPCODES[op] << 56
+    pos = 56
+    for v, (_, bits) in zip(args, isa.FIELD_SPECS[op]):
+        pos -= bits
+        word |= int(v) << pos
+    return word
+
+
+def test_assemble_disassemble_word_roundtrip_every_opcode():
+    """assemble(disassemble(w)) == w for canonical words of EVERY opcode
+    (incl. CONV_MAC/GAP_*/CFG_PE and the rowtile CFG_STRIP) — the binary
+    encoding drops no bits and invents none."""
+    rng = np.random.default_rng(7)
+    for op, fields in isa.FIELD_SPECS.items():
+        for _ in range(16):
+            args = tuple(int(rng.integers(0, 1 << bits))
+                         for _, bits in fields)
+            word = _canonical_word(op, args)
+            assert isa.assemble(isa.disassemble(word)) == word, op
+
 
 
 def test_every_opcode_roundtrips_through_binary_and_text():

@@ -21,9 +21,9 @@ import jax
 import numpy as np
 import pytest
 
-from repro.cfu.compiler import (CFUSchedule, compile_block,
+from repro.cfu.compiler import (CFUSchedule, compile_block, compile_network,
                                 compile_vww_network)
-from repro.cfu.executor import run_program
+from repro.cfu.executor import run_multistream, run_program
 from repro.cfu.network import vww_cfu_params
 from repro.core import dsc, quant
 from repro.core.dsc import DSCBlockSpec
@@ -47,7 +47,7 @@ def _quantized_block(spec: DSCBlockSpec, hw: int, seed: int):
 
 
 def _check_block_all_schedules(spec: DSCBlockSpec, hw: int, batch: int,
-                               seed: int):
+                               seed: int, tile_rows: int = 4):
     """The differential property: every schedule, every image of the batch,
     exact integer equality between the executed words and the reference."""
     qp = _quantized_block(spec, hw, seed)
@@ -56,14 +56,15 @@ def _check_block_all_schedules(spec: DSCBlockSpec, hw: int, batch: int,
     x_q = np.asarray(quant.quantize(x_f, qp.qp_in))
     ref = np.stack([np.asarray(dsc.dsc_block_reference(x, qp)) for x in x_q])
     for sched in CFUSchedule:
-        prog = compile_block(spec, hw, hw, sched)
+        prog = compile_block(spec, hw, hw, sched, tile_rows=tile_rows)
         y_batch = run_program(prog, x_q, [qp])          # one stream, B images
         np.testing.assert_array_equal(
             y_batch, ref,
-            err_msg=f"{spec} hw={hw} batch={batch} {sched}")
+            err_msg=f"{spec} hw={hw} batch={batch} {sched} t={tile_rows}")
         y_single = run_program(prog, x_q[0], [qp])      # unbatched entry
         np.testing.assert_array_equal(
-            y_single, ref[0], err_msg=f"{spec} hw={hw} single {sched}")
+            y_single, ref[0],
+            err_msg=f"{spec} hw={hw} single {sched} t={tile_rows}")
 
 
 # --- seeded-random sweep (runs without hypothesis) ---------------------------
@@ -75,7 +76,40 @@ def test_random_blocks_bit_exact_all_schedules_batched(draw):
     spec = _random_spec(rng)
     hw = int(rng.integers(3, 8))
     batch = int(rng.integers(1, 5))
-    _check_block_all_schedules(spec, hw, batch, seed=draw)
+    tile_rows = int(rng.integers(1, 6))       # rowtile granularity too
+    _check_block_all_schedules(spec, hw, batch, seed=draw,
+                               tile_rows=tile_rows)
+
+
+@pytest.mark.parametrize("draw", range(4))
+def test_random_chain_multistream_bit_exact(draw):
+    """Random chains partitioned across random stream counts execute
+    bit-exactly vs the chained reference, per image of the batch."""
+    from repro.cfu.network import random_chain_params
+    rng = np.random.default_rng(2000 + draw)
+    n_blocks = int(rng.integers(2, 5))
+    hw = int(rng.integers(4, 8))
+    specs = []
+    for i in range(n_blocks):
+        cin = int(rng.integers(1, 6)) if i == 0 else specs[-1][1].cout
+        t = int(rng.integers(1, 4))
+        spec = DSCBlockSpec(cin=cin, cmid=cin * t,
+                            cout=int(rng.integers(1, 7)),
+                            stride=int(rng.choice([1, 2])))
+        specs.append((f"b{i}", spec))
+    params = random_chain_params(jax.random.PRNGKey(draw), specs, hw,
+                                 seed=draw)
+    x_f = rng.standard_normal((hw, hw, specs[0][1].cin)).astype(np.float32)
+    x_q = np.asarray(quant.quantize(x_f, params[0].qp_in))
+    ref = x_q
+    for qp in params:
+        ref = np.asarray(dsc.dsc_block_reference(ref, qp))
+    streams = int(rng.integers(2, n_blocks + 1))
+    sched = rng.choice([s.value for s in CFUSchedule])
+    ms = compile_network(specs, hw, hw, str(sched), streams=streams)
+    y = run_multistream(ms, x_q, params)
+    np.testing.assert_array_equal(
+        y, ref, err_msg=f"{specs} streams={streams} {sched}")
 
 
 @pytest.mark.parametrize("batch", [1, 4])
