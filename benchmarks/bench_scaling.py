@@ -32,6 +32,23 @@ paper's 3rd bottleneck layer (40x40, paper PE point) falls below MIN — the
 CI regression gate for the seed's modeled 59.3x. That gate geometry is
 fixed even under ``--tiny`` (which only shrinks the sweep image), so smoke
 runs check the same invariant as full runs.
+
+Heterogeneous multi-stream sweep (PR 4): the ``multistream`` section maps
+the frame-pipeline design space — (streams N) x (homogeneous vs
+auto-hetero PE allocation at equal total MACs) x (frame-group batch B) —
+reporting the steady-state round interval, frames/cycle, and energy/frame
+from ``timing.analyze_multistream`` (``cfu.report.multistream_comparison``
+builds the rows; ``--multistream-json`` writes them as the CI artifact).
+``--gate-hetero`` is the companion regression gate: at the FIXED gate
+geometry (48x48 VWW, 2 cores, a 2x(5,5,28) engine budget — an
+area-constrained half of the paper's arrays per core), the compiler's
+auto-hetero allocation must achieve STRICTLY better modeled frames/cycle
+than the homogeneous 2-core split of the same total engine budget. The
+constrained budget is the point of the gate: at the paper's full arrays
+the 2-core pipeline is DRAM-port-bound and allocation is moot; under an
+area budget the stem stage is transfer-dominated, so the search shifts
+engines to the compute-bound tail core and wins — the per-layer-shape
+specialization effect of Daghero et al. (arXiv:2406.12478).
 """
 
 from __future__ import annotations
@@ -41,10 +58,11 @@ import dataclasses
 import json
 import os
 
-from repro.cfu.compiler import (CFUSchedule, compile_block, compile_network,
-                                compile_vww_network)
-from repro.cfu.report import PAPER_LAYERS, modeled_network_sw_cycles
-from repro.cfu.timing import analyze
+from repro.cfu.compiler import (AUTO_HETERO, CFUSchedule, compile_block,
+                                compile_network, compile_vww_network)
+from repro.cfu.report import (PAPER_LAYERS, modeled_network_sw_cycles,
+                              multistream_comparison)
+from repro.cfu.timing import PEConfig, analyze, analyze_multistream
 from repro.configs.vww import PAPER_PE, PE_SWEEP, VWW
 from repro.core.fusion import Schedule, modeled_cycles
 from repro.models.mobilenetv2 import block_specs
@@ -54,6 +72,12 @@ PIPELINES = ("v1", "v2", "v3")
 # One-axis expansion factors for the per-axis sweeps (others at paper 1x).
 AXIS_SCALES = (1 / 3, 2 / 3, 1, 2, 4)
 AXES = ("exp_pes", "dw_lanes", "proj_engines")
+
+# The hetero gate's fixed geometry: small enough to compile in seconds,
+# large enough that the 2-core pipeline is compute-bound (40x40 is
+# port-bound and every allocation ties; >= 48 the allocation decides).
+HETERO_GATE_IMG_HW = 48
+HETERO_GATE_BASE_PE = PEConfig(5, 5, 28)    # per-core budget (half paper)
 
 
 def sweep(img_hw: int = VWW.img_hw, pipelines=PIPELINES):
@@ -111,6 +135,41 @@ def sweep(img_hw: int = VWW.img_hw, pipelines=PIPELINES):
     }
 
 
+def multistream_sweep(img_hw: int = VWW.img_hw):
+    """Frame-pipeline design-space rows (streams x allocation x batch)."""
+    return multistream_comparison(img_hw=img_hw,
+                                  base_pe=HETERO_GATE_BASE_PE,
+                                  streams_list=(1, 2, 3),
+                                  batches=(1, 4))
+
+
+def hetero_gate_point():
+    """Homogeneous vs auto-hetero 2-core frames/cycle at the FIXED gate
+    geometry (size-independent, like ``block3_paper_speedup``): equal
+    total engine budget, strictly-better required of the searched
+    allocation."""
+    specs = block_specs()
+    homo = compile_vww_network(specs, HETERO_GATE_IMG_HW, CFUSchedule.FUSED,
+                               pe=HETERO_GATE_BASE_PE, streams=2)
+    het = compile_vww_network(specs, HETERO_GATE_IMG_HW, CFUSchedule.FUSED,
+                              pe=HETERO_GATE_BASE_PE, streams=2,
+                              pe_per_core=AUTO_HETERO)
+    r_homo = analyze_multistream(homo, "v3")
+    r_het = analyze_multistream(het, "v3")
+    pes = het.meta["pe_per_core"]
+    return {
+        "img_hw": HETERO_GATE_IMG_HW,
+        "base_pe": dataclasses.asdict(HETERO_GATE_BASE_PE),
+        "homo_frames_per_cycle": r_homo.frames_per_cycle,
+        "hetero_frames_per_cycle": r_het.frames_per_cycle,
+        "homo_interval_cycles": r_homo.interval_cycles,
+        "hetero_interval_cycles": r_het.interval_cycles,
+        "hetero_pe_per_core": [dataclasses.asdict(p) for p in pes],
+        "hetero_strictly_better":
+            r_het.frames_per_cycle > r_homo.frames_per_cycle,
+    }
+
+
 def block3_paper_speedup() -> float:
     """Fused-v3 speedup on the paper's 3rd bottleneck layer at 40x40 under
     the paper's PE config — the seed's 59.3x (Table III(A)) analogue. Fixed
@@ -146,10 +205,36 @@ def run(report, img_hw: int = VWW.img_hw):
                f"{pt['dw_lanes']},{pt['proj_engines']},"
                f"{pt['network_cycles']:.3e},{pt['network_energy_uj']:.2f},"
                f"{pt['network_leak_uj']:.3f}")
+    ms_rows = multistream_sweep(img_hw)
+    report("# heterogeneous frame-pipeline sweep: N cores x PE allocation "
+           "(equal total engine budget per N) x frame-group batch")
+    report("streams,alloc,pe_per_core,batch,interval_cycles,"
+           "cycles_per_frame,frames_per_cycle,energy_per_frame_uJ,"
+           "handoff_cycles,dram_contention_cycles")
+    for r in ms_rows:
+        pes = ";".join(f"{p.exp_pes},{p.dw_lanes},{p.proj_engines}"
+                       for p in r["pe_per_core"])
+        report(f"{r['streams']},{r['alloc']},{pes},{r['batch']},"
+               f"{r['interval_cycles']:.3e},{r['cycles_per_frame']:.3e},"
+               f"{r['frames_per_cycle']:.3e},"
+               f"{r['energy_per_frame_uj']:.2f},"
+               f"{r['handoff_cycles']:.0f},"
+               f"{r['dram_contention_cycles']:.3e}")
+    result["multistream"] = [
+        {**r, "pe_per_core": [dataclasses.asdict(p)
+                              for p in r["pe_per_core"]]}
+        for r in ms_rows]
     gate = block3_paper_speedup()
     result["block3_paper_pe_v3_speedup"] = gate
     report(f"# block-3 fused-v3 speedup at the paper PE point: "
            f"{gate:.1f}x (paper/seed model: 59.3x)")
+    hg = hetero_gate_point()
+    result["hetero_gate"] = hg
+    report(f"# hetero gate ({hg['img_hw']}x{hg['img_hw']}, 2 cores, "
+           f"2x(5,5,28) budget): homo {hg['homo_frames_per_cycle']:.3e} "
+           f"vs auto-hetero {hg['hetero_frames_per_cycle']:.3e} "
+           f"frames/cycle — strictly better: "
+           f"{hg['hetero_strictly_better']}")
     return result
 
 
@@ -160,12 +245,20 @@ def main():
                     help="16x16 image (CI smoke: same code path, ~1s)")
     ap.add_argument("--json", default=None,
                     help="write the sweep as JSON to this path")
+    ap.add_argument("--multistream-json", default=None,
+                    help="write ONLY the heterogeneous multi-stream sweep "
+                         "+ gate point as JSON to this path (CI artifact)")
     ap.add_argument("--check-speedup", type=float, default=None,
                     metavar="MIN",
                     help="fail if the block-3 fused-v3 speedup at the "
                          "paper PE point (fixed 40x40 geometry, NOT the "
                          "sweep's chain column) drops below MIN "
                          "(CI regression gate; seed models ~57x)")
+    ap.add_argument("--gate-hetero", action="store_true",
+                    help="fail unless the auto-hetero 2-core allocation "
+                         "beats the equal-total-MACs homogeneous split "
+                         "STRICTLY on modeled frames/cycle (fixed 48x48 "
+                         "geometry, size-independent like --check-speedup)")
     args = ap.parse_args()
 
     img_hw = 16 if args.tiny else args.img_hw
@@ -177,6 +270,14 @@ def main():
             json.dump(result, f, indent=2)
         print(f"# wrote {args.json}")
 
+    if args.multistream_json:
+        os.makedirs(os.path.dirname(args.multistream_json) or ".",
+                    exist_ok=True)
+        with open(args.multistream_json, "w") as f:
+            json.dump({"multistream": result["multistream"],
+                       "hetero_gate": result["hetero_gate"]}, f, indent=2)
+        print(f"# wrote {args.multistream_json}")
+
     if args.check_speedup is not None:
         got = result["block3_paper_pe_v3_speedup"]
         if got < args.check_speedup:
@@ -185,6 +286,18 @@ def main():
                 f"paper PE point {got:.1f}x < required "
                 f"{args.check_speedup:.1f}x")
         print(f"# speedup gate OK: {got:.1f}x >= {args.check_speedup:.1f}x")
+
+    if args.gate_hetero:
+        hg = result["hetero_gate"]
+        if not hg["hetero_strictly_better"]:
+            raise SystemExit(
+                "HETERO REGRESSION: auto-hetero 2-core frames/cycle "
+                f"{hg['hetero_frames_per_cycle']:.3e} is not strictly "
+                f"better than the equal-budget homogeneous split's "
+                f"{hg['homo_frames_per_cycle']:.3e}")
+        print(f"# hetero gate OK: {hg['hetero_frames_per_cycle']:.3e} > "
+              f"{hg['homo_frames_per_cycle']:.3e} frames/cycle "
+              f"(pe_per_core {hg['hetero_pe_per_core']})")
 
 
 if __name__ == "__main__":

@@ -52,6 +52,10 @@ CFG_PE    latch engine counts (expansion PEs, depthwise lanes, projection
           engines) — timing-only; the golden executor ignores it
 CFG_STRIP put the F1 map into rolling-strip addressing (row mod depth) —
           the fused-rowtile schedule's circular line buffer; 0 = off
+CFG_CORE  latch this stream's pipeline-stage slot (core i of n) — the
+          multi-stream segment streams are self-describing
+CFG_DBUF  bind a base register to a double-buffered boundary region
+          (ping/pong base pair, resolved by the core's frame parity)
 ======== ====================================================================
 
 Full-network simulation (PR 2)
@@ -80,8 +84,29 @@ is a liveness-driven first-fit allocator with buffer reuse that raises on
 any live overlap (``ir.MemoryPlanError``). ``streams=N`` partitions the
 op chain across N CFU cores sharing the DRAM port
 (``compiler.MultiStreamProgram``; run with ``executor.run_multistream``,
-time with ``timing.analyze_multistream`` — steady-state interval with
-port contention).
+time with ``timing.analyze_multistream``).
+
+Heterogeneous frame pipeline (PR 4)
+-----------------------------------
+Multi-stream is a modeled heterogeneous frame-pipelined system:
+``pe_per_core`` gives every core its own ``PEConfig`` (explicit list or
+``compiler.AUTO_HETERO`` — a search over per-core allocations of the
+homogeneous total engine budget), and the partitioner balances per-core
+*time* under each core's own engine counts. Inter-core boundary maps are
+explicitly double-buffered: ``ir.plan_memory(dbuf_values=...)`` allocates
+ping/pong copies (DRAM scratch moves to per-segment arenas — program-
+order liveness is unsound when every core re-executes its segment each
+round), the streams bind them with CFG_DBUF, and
+``executor.MultiStreamRunner`` ENFORCES the handoff (stale reads raise
+``HandoffViolation``). Frame-level batching composes with the layer
+pipeline (``run_multistream(batch=B)`` drives B frames per round in
+lockstep); ``timing.analyze_multistream(batch=B)`` prices it — round
+interval = max(slowest core + its handoffs, serialized DRAM port), with
+per-phase pipeline fill amortized over the batch — and reports
+steady-state ``frames_per_cycle`` and ``energy_per_frame_pj``
+(``benchmarks/bench_scaling.py`` sweeps both and CI gates that an
+auto-hetero 2-core split strictly beats the equal-budget homogeneous
+one).
 
 Schedules (``ir.CFUSchedule``, registry ``ir.SCHEDULES``)
 ---------------------------------------------------------
@@ -119,12 +144,14 @@ from repro.cfu.isa import (Instr, Program, assemble, disassemble,
                            program_from_asm)
 from repro.cfu.ir import (CFUSchedule, Layout, MemoryPlanError, SCHEDULES,
                           build_chain_ir, build_vww_ir, plan_memory)
-from repro.cfu.compiler import (AUTO_SCHEDULE, MultiStreamProgram,
-                                assign_schedules, auto_schedule,
-                                compile_block, compile_network,
-                                compile_vww_network, schedule_names,
-                                select_instructions)
-from repro.cfu.executor import run_multistream, run_program, run_words
+from repro.cfu.compiler import (AUTO_HETERO, AUTO_SCHEDULE,
+                                MultiStreamProgram, assign_schedules,
+                                auto_schedule, compile_block,
+                                compile_network, compile_vww_network,
+                                hetero_pe_candidates, schedule_names,
+                                select_instructions, split_pe_budget)
+from repro.cfu.executor import (HandoffViolation, MultiStreamRunner,
+                                run_multistream, run_program, run_words)
 from repro.cfu.network import (CFUFCParams, CFUHeadParams, CFUStemParams,
                                vww_cfu_params)
 from repro.cfu.timing import (MultiStreamReport, PEConfig, TimingReport,
@@ -133,11 +160,13 @@ from repro.cfu.timing import (MultiStreamReport, PEConfig, TimingReport,
 __all__ = [
     "Instr", "Program", "assemble", "disassemble", "encode_program",
     "decode_words", "program_to_asm", "program_from_asm",
-    "CFUSchedule", "SCHEDULES", "AUTO_SCHEDULE", "Layout", "MemoryPlanError",
-    "build_chain_ir", "build_vww_ir", "plan_memory", "assign_schedules",
-    "auto_schedule", "schedule_names", "select_instructions",
-    "compile_block", "compile_network", "compile_vww_network",
-    "MultiStreamProgram", "run_program", "run_words", "run_multistream",
+    "CFUSchedule", "SCHEDULES", "AUTO_SCHEDULE", "AUTO_HETERO", "Layout",
+    "MemoryPlanError", "build_chain_ir", "build_vww_ir", "plan_memory",
+    "assign_schedules", "auto_schedule", "schedule_names",
+    "select_instructions", "compile_block", "compile_network",
+    "compile_vww_network", "split_pe_budget", "hetero_pe_candidates",
+    "MultiStreamProgram", "MultiStreamRunner", "HandoffViolation",
+    "run_program", "run_words", "run_multistream",
     "TimingReport", "MultiStreamReport", "analyze", "analyze_multistream",
     "PEConfig", "CFUStemParams", "CFUHeadParams", "CFUFCParams",
     "vww_cfu_params",

@@ -46,17 +46,28 @@ Schedule lowering (per ``DSCBlock``):
   dataflow's exactly.
 
 Multi-stream compilation (``streams=N``): the op chain is partitioned
-into N contiguous segments balanced by the timing cost model, one CFU
-core per segment, sharing the DRAM port (boundary maps are pinned in
-DRAM for the whole frame — each core owns a different pipeline stage of
-consecutive frames). Each segment compiles to its own ``Program``;
-``executor.run_multistream`` runs them against one shared DRAM image and
-``timing.analyze_multistream`` models the steady-state interval with
-DRAM port contention.
+into N contiguous segments, one CFU core per segment, each core owning a
+different pipeline stage of consecutive frames behind the shared DRAM
+port. The partitioner balances per-core *time* under each core's own
+``PEConfig`` (``pe_per_core``: explicit per-core configs, or
+``"auto-hetero"`` — a search over a small allocation space under the
+homogeneous total engine budget, e.g. a big core for the stem and a
+small one for the tail, cf. Daghero et al., arXiv:2406.12478). Every
+value that crosses a segment boundary (plus the host-facing program
+input/output) is planned as an explicitly double-buffered region: the
+planner allocates ping/pong copies (``ir.plan_memory(dbuf_values=...)``)
+and the segment streams bind them with CFG_DBUF words, so a producer
+core fills one copy while its consumer drains the other.
+``executor.run_multistream`` runs the segments against one shared DRAM
+image and *enforces* the handoff (reading a boundary copy before its
+producer's round retired raises); ``timing.analyze_multistream`` models
+the steady-state round interval (slowest core + its handoffs vs the
+serialized DRAM port), the (N-1)-round fill, and frame-batched rounds.
 
-Every stream opens with CFG_PE carrying the engine counts
-(``timing.PEConfig``) so a compiled stream is a *complete* description of
-the simulated hardware point.
+Every stream opens with CFG_PE carrying its core's engine counts
+(``timing.PEConfig``) and CFG_CORE carrying its pipeline-stage slot, so
+a compiled stream is a *complete* description of the simulated hardware
+point.
 """
 
 from __future__ import annotations
@@ -74,11 +85,12 @@ from repro.cfu.isa import Instr, Program
 from repro.cfu.timing import PEConfig
 
 __all__ = [
-    "CFUSchedule", "SCHEDULES", "AUTO_SCHEDULE", "Layout", "Region",
-    "MemoryPlanError", "MultiStreamProgram", "ScheduleSpec",
+    "CFUSchedule", "SCHEDULES", "AUTO_SCHEDULE", "AUTO_HETERO", "Layout",
+    "Region", "MemoryPlanError", "MultiStreamProgram", "ScheduleSpec",
     "compile_block", "compile_network", "compile_vww_network",
     "assign_schedules", "auto_schedule", "materialize_scratch",
     "select_instructions", "estimate_block_cycles", "schedule_names",
+    "split_pe_budget", "hetero_pe_candidates", "HETERO_FRACTIONS",
 ]
 
 #: Compiler policy (not a schedule): pick the cheapest schedule per block.
@@ -244,16 +256,27 @@ class _InstrSel:
     def region(self, name: str) -> Region:
         return self.layout.regions[name]
 
+    def bind(self, reg: int, name: str):
+        """Bind a base register to a planned region: SET_BASE for private
+        regions, CFG_DBUF (ping+pong pair) for double-buffered inter-core
+        boundary maps — the executing core resolves the pair against its
+        frame parity."""
+        r = self.region(name)
+        pong = self.layout.dbuf.get(name)
+        if pong is None:
+            self.emit("SET_BASE", reg, r.space, r.base)
+        else:
+            self.emit("CFG_DBUF", reg, r.space, r.base, pong.base)
+
     # --- op lowering --------------------------------------------------------
 
     def op_conv3x3(self, op: Conv3x3):
         """3x3 stride-2 standard conv (the VWW stem) on the expansion
         array: same halo-aware LD_WIN gather as the depthwise windows."""
-        r_x, r_y = self.region(op.inputs[0]), self.region(op.outputs[0])
         h2, w2 = -(-op.h // op.stride), -(-op.w // op.stride)
         self.emit("CFG", op.cin, op.cout, op.cout, op.stride, op.h, op.w)
-        self.emit("SET_BASE", isa.REG_IN, r_x.space, r_x.base)
-        self.emit("SET_BASE", isa.REG_OUT, r_y.space, r_y.base)
+        self.bind(isa.REG_IN, op.inputs[0])
+        self.bind(isa.REG_OUT, op.outputs[0])
         self.emit("LD_WGT", isa.WGT_CONV, op.param_idx)
         self.bar()
         for oy in range(h2):
@@ -265,10 +288,9 @@ class _InstrSel:
 
     def op_head1x1(self, op: Head1x1):
         """1x1 conv + ReLU6 (the classifier head) = EXP_MAC in VEC mode."""
-        r_x, r_y = self.region(op.inputs[0]), self.region(op.outputs[0])
         self.emit("CFG", op.cin, op.cout, op.cout, 1, op.h, op.w)
-        self.emit("SET_BASE", isa.REG_IN, r_x.space, r_x.base)
-        self.emit("SET_BASE", isa.REG_OUT, r_y.space, r_y.base)
+        self.bind(isa.REG_IN, op.inputs[0])
+        self.bind(isa.REG_OUT, op.outputs[0])
         self.emit("LD_WGT", isa.WGT_EXP, op.param_idx)
         self.bar()
         for y in range(op.h):
@@ -281,11 +303,9 @@ class _InstrSel:
     def op_gap_fc(self, gap: GAP, fc: FC):
         """GAP + FC pattern-matched into one unit: the pooled vector lands
         on the projection port (GAP_FIN) and is consumed in place."""
-        r_x = self.region(gap.inputs[0])
-        r_y = self.region(fc.outputs[0])
         self.emit("CFG", gap.ch, gap.ch, fc.cout, 1, gap.h, gap.w)
-        self.emit("SET_BASE", isa.REG_IN, r_x.space, r_x.base)
-        self.emit("SET_BASE", isa.REG_OUT, r_y.space, r_y.base)
+        self.bind(isa.REG_IN, gap.inputs[0])
+        self.bind(isa.REG_OUT, fc.outputs[0])
         self.emit("LD_WGT", isa.WGT_PROJ, fc.param_idx)
         self.bar()
         self.emit("GAP_RST")
@@ -300,16 +320,14 @@ class _InstrSel:
 
     def op_dsc_block(self, op: DSCBlock):
         assert op.spec.kernel == isa.KERNEL, "the CFU's depthwise is 3x3"
-        r_x, r_y = self.region(op.inputs[0]), self.region(op.outputs[0])
         spec, bh, bw = op.spec, op.h, op.w
         self.emit("CFG", spec.cin, spec.cmid, spec.cout, spec.stride, bh, bw)
         if op.schedule is CFUSchedule.FUSED_ROWTILE:
             self.emit("CFG_STRIP", _strip_rows(spec, op.tile_rows))
-        self.emit("SET_BASE", isa.REG_IN, r_x.space, r_x.base)
-        self.emit("SET_BASE", isa.REG_OUT, r_y.space, r_y.base)
+        self.bind(isa.REG_IN, op.inputs[0])
+        self.bind(isa.REG_OUT, op.outputs[0])
         if op.schedule is CFUSchedule.FUSED_ROWTILE:
-            r_strip = self.region(op.scratch[0])
-            self.emit("SET_BASE", isa.REG_F1, r_strip.space, r_strip.base)
+            self.bind(isa.REG_F1, op.scratch[0])
         for which in (isa.WGT_EXP, isa.WGT_DW, isa.WGT_PROJ):
             self.emit("LD_WGT", which, op.param_idx)
         if op.schedule is CFUSchedule.FUSED:
@@ -342,9 +360,8 @@ class _InstrSel:
         """Layer-by-layer: three passes over planned F1/F2 regions."""
         spec, bh, bw = op.spec, op.h, op.w
         h2, w2 = spec.out_hw(bh, bw)
-        r_f1, r_f2 = self.region(op.scratch[0]), self.region(op.scratch[1])
-        self.emit("SET_BASE", isa.REG_F1, r_f1.space, r_f1.base)
-        self.emit("SET_BASE", isa.REG_F2, r_f2.space, r_f2.base)
+        self.bind(isa.REG_F1, op.scratch[0])
+        self.bind(isa.REG_F2, op.scratch[1])
         # pass 1: expansion at input resolution, F1 materialized
         self.bar()
         for y in range(bh):
@@ -405,10 +422,16 @@ class _InstrSel:
 
 
 def select_instructions(ops: Sequence[ir_mod.Op], layout: Layout,
-                        pe: PEConfig) -> List[Instr]:
-    """Lower a (contiguous) op sequence to one instruction stream."""
+                        pe: PEConfig,
+                        core: Optional[Tuple[int, int]] = None) -> List[Instr]:
+    """Lower a (contiguous) op sequence to one instruction stream.
+
+    ``core=(i, n)`` stamps the stream with its pipeline-stage slot
+    (CFG_CORE) — multi-stream segments are self-describing."""
     sel = _InstrSel(layout)
     sel.emit("CFG_PE", pe.exp_pes, pe.dw_lanes, pe.proj_engines)
+    if core is not None:
+        sel.emit("CFG_CORE", core[0], core[1])
     i = 0
     while i < len(ops):
         op = ops[i]
@@ -453,31 +476,61 @@ def _partition_units(ops: Sequence[ir_mod.Op]) -> List[List[ir_mod.Op]]:
     return units
 
 
-def _unit_cost(unit: List[ir_mod.Op], layout: Layout, pe: PEConfig,
-               pipeline: str) -> float:
-    """Cycles of one unit compiled alone against the real layout."""
-    from repro.cfu.timing import analyze
-    prog = Program(select_instructions(unit, layout, pe),
-                   meta={"layout": layout})
-    return analyze(prog, pipeline, pe=pe).total_cycles
+class _UnitCosts:
+    """Per-(unit, PEConfig) timing of units compiled alone against the
+    real layout. Units compile ONCE; each PE design point is a pure
+    ``timing.analyze(pe=...)`` re-walk (engine counts shape time, never
+    the stream), so the auto-hetero search costs walks, not compiles."""
+
+    def __init__(self, units: List[List[ir_mod.Op]], layout: Layout,
+                 pipeline: str):
+        base = PEConfig()
+        self.progs = [Program(select_instructions(u, layout, base),
+                              meta={"layout": layout}) for u in units]
+        self.pipeline = pipeline
+        self._cache: Dict[Tuple[int, PEConfig], float] = {}
+        from repro.cfu.timing import analyze
+        # the serialized-DRAM-port term is PE-independent
+        self.port_cycles = [analyze(p, pipeline).dram_transfer_cycles
+                            for p in self.progs]
+
+    def cycles(self, ui: int, pe: PEConfig) -> float:
+        key = (ui, pe)
+        if key not in self._cache:
+            from repro.cfu.timing import analyze
+            self._cache[key] = analyze(self.progs[ui], self.pipeline,
+                                       pe=pe).total_cycles
+        return self._cache[key]
 
 
-def _balanced_partition(costs: List[float], n: int) -> List[int]:
-    """Contiguous min-max partition (DP); returns segment sizes."""
-    n_units = len(costs)
+def _balanced_partition(cost_rows: List[List[float]], n: int) -> List[int]:
+    """Contiguous min-max partition (DP); returns segment sizes.
+
+    ``cost_rows[c][u]`` is unit *u*'s cycles on core *c* — the
+    heterogeneity-aware form: each candidate segment is priced under the
+    PE config of the core that would own it (cores are in pipeline-stage
+    order, so segment *c* always lands on core *c*). Homogeneous configs
+    are the special case of identical rows.
+    """
+    n_units = len(cost_rows[0])
     n = min(n, n_units)
-    prefix = [0.0]
-    for c in costs:
-        prefix.append(prefix[-1] + c)
+    prefixes = []
+    for row in cost_rows[:n]:
+        prefix = [0.0]
+        for c in row:
+            prefix.append(prefix[-1] + c)
+        prefixes.append(prefix)
     INF = float("inf")
-    # best[k][i] = minimal max-segment-cost splitting units[:i] into k parts
+    # best[k][i] = minimal max-segment-cost splitting units[:i] into k
+    # parts, segment k-1 priced on core k-1
     best = [[INF] * (n_units + 1) for _ in range(n + 1)]
     cut = [[0] * (n_units + 1) for _ in range(n + 1)]
     best[0][0] = 0.0
     for k in range(1, n + 1):
+        pre = prefixes[k - 1]
         for i in range(k, n_units + 1):
             for j in range(k - 1, i):
-                cand = max(best[k - 1][j], prefix[i] - prefix[j])
+                cand = max(best[k - 1][j], pre[i] - pre[j])
                 if cand < best[k][i]:
                     best[k][i], cut[k][i] = cand, j
     sizes: List[int] = []
@@ -487,6 +540,94 @@ def _balanced_partition(costs: List[float], n: int) -> List[int]:
         sizes.append(i - j)
         i = j
     return sizes[::-1]
+
+
+# --- per-core PE allocation (heterogeneous frame pipeline) -------------------
+
+#: Compiler policy: search a small per-core PE-allocation space under the
+#: homogeneous configuration's total engine budget.
+AUTO_HETERO = "auto-hetero"
+
+#: Per-core budget shares the auto-hetero search draws from.
+HETERO_FRACTIONS = (0.5, 0.75, 1.0, 1.25, 1.5)
+
+
+def split_pe_budget(total: Tuple[int, int, int],
+                    fractions: Sequence[float]) -> List[PEConfig]:
+    """Split a total engine budget into per-core ``PEConfig``s, exactly.
+
+    ``total`` is the (exp_pes, dw_lanes, proj_engines) engine budget summed
+    over the cores; ``fractions`` the per-core shares. Every axis is split
+    by largest remainder with a floor of one engine, so the per-core
+    counts of every axis sum to the budget EXACTLY — heterogeneous
+    configurations produced this way have the same total MACs as the
+    homogeneous split they compete with.
+    """
+    n = len(fractions)
+    if any(f <= 0 for f in fractions):
+        raise ValueError(f"fractions must be positive, got {fractions}")
+    out_axes: List[List[int]] = []
+    for axis_total in total:
+        if axis_total < n:
+            raise ValueError(f"cannot split {axis_total} engines over "
+                             f"{n} cores (each needs >= 1)")
+        s = sum(fractions)
+        shares = [axis_total * f / s for f in fractions]
+        counts = [max(1, int(x)) for x in shares]
+        # largest-remainder top-up / trim to hit the budget exactly
+        while sum(counts) < axis_total:
+            rema = [(shares[i] - counts[i], i) for i in range(n)]
+            counts[max(rema)[1]] += 1
+        while sum(counts) > axis_total:
+            rema = [(shares[i] - counts[i], i) for i in range(n)
+                    if counts[i] > 1]
+            counts[min(rema)[1]] -= 1
+        out_axes.append(counts)
+    return [PEConfig(out_axes[0][i], out_axes[1][i], out_axes[2][i])
+            for i in range(n)]
+
+
+def hetero_pe_candidates(n: int,
+                         base_pe: Optional[PEConfig] = None
+                         ) -> List[List[PEConfig]]:
+    """The auto-hetero search space: per-core allocations of the
+    homogeneous total budget (``n x base_pe``).
+
+    Candidates are monotone share profiles (big-stem..small-tail and the
+    reverse) drawn from ``HETERO_FRACTIONS`` and summing to ``n`` — a
+    deliberately small space (the partitioner adapts segment sizes to the
+    allocation, so fine-grained shares buy little). The HOMOGENEOUS
+    allocation is always candidate 0, which is what makes the searched
+    pick provably never worse than homogeneous under the model.
+    """
+    base_pe = base_pe or PEConfig()
+    total = (base_pe.exp_pes * n, base_pe.dw_lanes * n,
+             base_pe.proj_engines * n)
+
+    profiles: List[Tuple[float, ...]] = [(1.0,) * n]
+
+    def grow(prefix: Tuple[float, ...]):
+        if len(prefix) == n:
+            if abs(sum(prefix) - n) < 1e-9 and prefix not in profiles:
+                profiles.append(prefix)
+            return
+        for f in HETERO_FRACTIONS:
+            if not prefix or f <= prefix[-1]:      # non-increasing
+                grow(prefix + (f,))
+
+    grow(())
+    # the reversed (ascending) profiles too: sometimes the tail is heavy
+    for p in list(profiles[1:]):
+        rp = tuple(reversed(p))
+        if rp not in profiles:
+            profiles.append(rp)
+    out = []
+    for p in profiles:
+        try:
+            out.append(split_pe_budget(total, p))
+        except ValueError:
+            continue       # budget too small for this share profile
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -503,17 +644,70 @@ def _schedule_meta(ir: IRProgram, schedule: ScheduleSpec):
     return label, {op.name: op.schedule.value for op in blocks}
 
 
+def _boundary_values(ir: IRProgram,
+                     op_seg: Mapping[int, int]) -> List[str]:
+    """Values that cross a pipeline-stage boundary: produced and consumed
+    in different segments, or host-facing (the program input arrives from
+    outside; the program output is drained by the host). These are the
+    maps the planner double-buffers."""
+    consumers: Dict[str, List[int]] = {}
+    for oi, op in enumerate(ir.ops):
+        for nm in op.inputs:
+            consumers.setdefault(nm, []).append(oi)
+    names: List[str] = []
+    for v in ir.values.values():
+        if v.port_resident or v.scratch:
+            continue
+        prod = op_seg[v.def_idx] if v.def_idx >= 0 else None   # None = host
+        cons = {op_seg[oi] for oi in consumers.get(v.name, ())}
+        host_out = v.last_use is None
+        if prod is None or host_out or any(c != prod for c in cons):
+            names.append(v.name)
+    return names
+
+
+def _resolve_pe_per_core(pe_per_core, pe: PEConfig, n: int,
+                         streams_requested: int) -> Optional[List[PEConfig]]:
+    """Normalize the ``pe_per_core`` argument to a list of n PEConfigs
+    (or None for the auto-hetero search)."""
+    if pe_per_core is None:
+        return [pe] * n
+    if isinstance(pe_per_core, str):
+        if pe_per_core != AUTO_HETERO:
+            raise ValueError(f"pe_per_core must be a sequence of PEConfigs "
+                             f"or {AUTO_HETERO!r}, got {pe_per_core!r}")
+        return None
+    pes = []
+    for p in pe_per_core:
+        if isinstance(p, PEConfig):
+            pes.append(p)
+        elif isinstance(p, str):
+            pes.append(PEConfig(*(int(t) for t in p.split(","))))
+        else:
+            pes.append(PEConfig(*p))
+    if len(pes) != streams_requested:
+        raise ValueError(f"pe_per_core has {len(pes)} entries for "
+                         f"{streams_requested} streams")
+    if n < streams_requested:
+        # truncating an EXPLICIT allocation would silently drop engine
+        # budget from the modeled machine; make the caller decide
+        raise ValueError(
+            f"only {n} schedulable units for {streams_requested} "
+            f"requested streams: an explicit pe_per_core cannot be "
+            f"honored (use auto-hetero or fewer streams)")
+    return pes
+
+
 def _compile_ir(ir: IRProgram, schedule: ScheduleSpec,
                 pe: Optional[PEConfig], *, streams: int = 1,
-                tile_rows: int = 4, pipeline: str = "v3"):
+                pe_per_core=None, tile_rows: int = 4, pipeline: str = "v3"):
     pe = pe or PEConfig()
     assign_schedules(ir, schedule, tile_rows=tile_rows,
                      pipeline=pipeline, pe=pe)
     materialize_scratch(ir)
-    layout = plan_memory(ir, pin_io=streams > 1)
     label, block_schedules = _schedule_meta(ir, schedule)
 
-    def meta_for(ops_seg, extra):
+    def meta_for(ops_seg, layout, extra):
         first, last = ops_seg[0], ops_seg[-1]
         v_in, v_out = (ir.value_of(first.inputs[0]),
                        ir.value_of(last.outputs[0]))
@@ -534,44 +728,108 @@ def _compile_ir(ir: IRProgram, schedule: ScheduleSpec,
         return m
 
     if streams <= 1:
+        if pe_per_core is not None:
+            raise ValueError("pe_per_core needs streams > 1")
+        layout = plan_memory(ir)
         instrs = select_instructions(ir.ops, layout, pe)
-        return Program(instrs, meta=meta_for(ir.ops, {}))
+        return Program(instrs, meta=meta_for(ir.ops, layout, {}))
 
+    # --- choose per-core PEs + the time-balanced contiguous partition ----
+    # (costed against a provisional pinned layout; engine counts never
+    # change the stream, so PE candidates are analyze() re-walks)
+    prov = plan_memory(ir, pin_io=True)
     units = _partition_units(ir.ops)
-    costs = [_unit_cost(u, layout, pe, pipeline) for u in units]
-    sizes = _balanced_partition(costs, streams)
+    n = min(streams, len(units))
+    uc = _UnitCosts(units, prov, pipeline)
+    port = sum(uc.port_cycles)
+    n_units = len(units)
+
+    def rows_for(pes: List[PEConfig]) -> List[List[float]]:
+        return [[uc.cycles(u, p) for u in range(n_units)] for p in pes]
+
+    def score(rows: List[List[float]], sizes: List[int]) -> float:
+        worst, at = 0.0, 0
+        for c, sz in enumerate(sizes):
+            worst = max(worst, sum(rows[c][at:at + sz]))
+            at += sz
+        return max(worst, port)       # est. steady-state interval
+
+    pes = _resolve_pe_per_core(pe_per_core, pe, n, streams)
+    if pes is None:                   # auto-hetero: searched allocation
+        best = None
+        for cand in hetero_pe_candidates(n, pe):
+            rows = rows_for(cand)
+            sizes = _balanced_partition(rows, n)
+            s = score(rows, sizes)
+            # strict <: candidate 0 is homogeneous, so ties keep it and
+            # the pick is never worse than homogeneous under the model
+            if best is None or s < best[0]:
+                best = (s, cand, rows, sizes)
+        _, pes, rows, sizes = best
+    else:
+        rows = rows_for(pes)
+        sizes = _balanced_partition(rows, n)
+
+    # --- double-buffer the inter-core boundaries, then lower segments ----
+    op_seg: Dict[int, int] = {}
+    oi, at = 0, 0
+    for si, size in enumerate(sizes):      # units cover ir.ops in order
+        for u in units[at:at + size]:
+            for _ in u:
+                op_seg[oi] = si
+                oi += 1
+        at += size
+    boundaries = _boundary_values(ir, op_seg)
+    layout = plan_memory(ir, pin_io=True, dbuf_values=boundaries,
+                         op_segments=op_seg)
+
     progs: List[Program] = []
     partition: List[List[str]] = []
     at = 0
     for si, size in enumerate(sizes):
         seg_ops = [op for u in units[at:at + size] for op in u]
         progs.append(Program(
-            select_instructions(seg_ops, layout, pe),
-            meta=meta_for(seg_ops, {"stream": si,
-                                    "est_cycles": sum(costs[at:at + size])})))
+            select_instructions(seg_ops, layout, pes[si],
+                                core=(si, len(sizes))),
+            meta=meta_for(seg_ops, layout, {
+                "stream": si, "pe": pes[si],
+                "est_cycles": sum(rows[si][at:at + size])})))
         partition.append([op.name for op in seg_ops])
         at += size
-    return MultiStreamProgram(progs, meta=meta_for(ir.ops, {
+    return MultiStreamProgram(progs, meta=meta_for(ir.ops, layout, {
         "streams": len(progs),             # actual core count (may clamp:
         "streams_requested": streams,      # at most one unit per core)
-        "partition": partition}))
+        "partition": partition,
+        "pe_per_core": pes,
+        "hetero": len(set(pes)) > 1,
+        "boundaries": boundaries}))
 
 
 def compile_network(specs: Sequence[Tuple[str, "DSCBlockSpec"]],
                     h: int, w: int,
                     schedule: ScheduleSpec,
                     pe: Optional[PEConfig] = None, *,
-                    streams: int = 1, tile_rows: int = 4,
+                    streams: int = 1, pe_per_core=None,
+                    tile_rows: int = 4,
                     pipeline: str = "v3"):
     """Lower a chain of DSC blocks into CFU instruction stream(s).
 
     ``schedule`` is a uniform schedule (enum or registry name), a
     per-block ``{name: schedule}`` mapping, or ``"auto"`` (cost-model pick
     per block). ``streams=N`` partitions the chain across N CFU cores
-    sharing the DRAM port and returns a :class:`MultiStreamProgram`.
+    sharing the DRAM port and returns a :class:`MultiStreamProgram`
+    whose inter-core boundary maps are double-buffered (ping/pong).
+
+    ``pe_per_core`` makes the frame pipeline heterogeneous: a sequence of
+    N ``PEConfig``s (or ``"E,D,P"`` strings), one per core in pipeline
+    order, or ``"auto-hetero"`` to search a small allocation space under
+    the homogeneous total engine budget (``N x pe``). The partitioner
+    balances per-core *time* under each core's own engine counts either
+    way.
     """
     ir = build_chain_ir(specs, h, w)
     return _compile_ir(ir, schedule, pe, streams=streams,
+                       pe_per_core=pe_per_core,
                        tile_rows=tile_rows, pipeline=pipeline)
 
 
@@ -591,7 +849,8 @@ def compile_vww_network(specs: Sequence[Tuple[str, "DSCBlockSpec"]],
                         head_ch: int = 128,
                         n_classes: int = 2,
                         pe: Optional[PEConfig] = None,
-                        streams: int = 1, tile_rows: int = 4,
+                        streams: int = 1, pe_per_core=None,
+                        tile_rows: int = 4,
                         pipeline: str = "v3"):
     """Lower a COMPLETE VWW inference: stem -> DSC chain -> head -> GAP+FC.
 
@@ -599,9 +858,11 @@ def compile_vww_network(specs: Sequence[Tuple[str, "DSCBlockSpec"]],
     the stem downsamples the (img_hw, img_hw, img_ch) image by 2 into the
     chain's cin channels. Weight binding: params[0]=stem, params[1..N]=
     blocks, params[N+1]=head, params[N+2]=FC. Accepts the same
-    ``schedule``/``streams`` forms as :func:`compile_network`.
+    ``schedule``/``streams``/``pe_per_core`` forms as
+    :func:`compile_network`.
     """
     ir = build_vww_ir(specs, img_hw, img_ch=img_ch, head_ch=head_ch,
                       n_classes=n_classes)
     return _compile_ir(ir, schedule, pe, streams=streams,
+                       pe_per_core=pe_per_core,
                        tile_rows=tile_rows, pipeline=pipeline)

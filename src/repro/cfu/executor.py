@@ -16,11 +16,22 @@ same program); only the data plane widens. ``run_words`` accepts either a
 single image (H, W, C) or a batch (B, H, W, C) and is bit-exact per image
 either way (asserted in tests/test_cfu_differential.py).
 
-Multi-core simulation (PR 3): ``run_multistream`` executes a
-``compiler.MultiStreamProgram`` as a frame-pipelined machine — N cores
-over one shared DRAM image, interleaved round by round (core *i* runs
-frame *r - i* in round *r*), each core re-running its own encoded stream
-per frame with a private SRAM scratch.
+Multi-core simulation (PR 3, reworked in PR 4): ``run_multistream``
+executes a ``compiler.MultiStreamProgram`` as a frame-pipelined machine —
+N cores over ONE shared physical DRAM, each core re-running its own
+encoded stream per round with a private SRAM scratch. Inter-core boundary
+maps exist exactly TWICE in that DRAM (the planner's ping/pong copies,
+bound by CFG_DBUF words): in an even round a core reads/writes the ping
+copy, in an odd round the pong copy, so the producer of a boundary fills
+one copy while its consumer drains the other. ``MultiStreamRunner``
+exposes the schedule core-step by core-step and ENFORCES the handoff
+protocol: stepping a core whose input boundary copy does not yet hold its
+frame group — or whose output copy still holds data its consumer has not
+retired — raises :class:`HandoffViolation` instead of silently reading
+stale (or clobbering unconsumed) data. Frame-level batching composes with
+the pipelining: each round drives a GROUP of ``batch`` frames through a
+core in lockstep (the batch axis below), so B frames x N cores run as
+``ceil(B/batch)`` pipelined rounds.
 
 Bit-exactness contract: the int8 outputs equal
 ``core.dsc.dsc_block_reference`` / ``dsc_block_fused_pixelwise`` (and the
@@ -157,6 +168,8 @@ class CFUMachine:
         self.stride = 1
         self.h = self.w = self.h2 = self.w2 = 0
         self.strip_rows = 0      # CFG_STRIP: F1 rolling-buffer depth (0=off)
+        self.frame_parity = 0    # ping/pong latch CFG_DBUF resolves against
+        self.core_id: Optional[Tuple[int, int]] = None   # CFG_CORE slot
         # base registers: reg -> (space, addr)
         self.base: Dict[int, Tuple[int, int]] = {}
         self.cur: Optional[_BlockWeights] = None
@@ -256,8 +269,15 @@ class CFUMachine:
     def _op_cfg_strip(self, rows):
         self.strip_rows = rows
 
+    def _op_cfg_core(self, core, n_cores):
+        self.core_id = (core, n_cores)   # informational: stream identity
+
     def _op_set_base(self, reg, space, addr):
         self.base[reg] = (space, addr)
+
+    def _op_cfg_dbuf(self, reg, space, base0, base1):
+        # double-buffered boundary: the frame-parity latch picks the copy
+        self.base[reg] = (space, base1 if self.frame_parity & 1 else base0)
 
     def _op_ld_wgt(self, which, block):
         if block not in self._wcache:
@@ -437,40 +457,168 @@ def run_program(program, x_q, params: Sequence,
                      return_stats=return_stats)
 
 
-def run_multistream(ms, x_q, params: Sequence, return_stats: bool = False):
-    """Execute a ``compiler.MultiStreamProgram`` as the frame-pipelined
-    multi-core machine it compiles for: N cores share ONE DRAM image (the
-    common off-chip port), each owns its SRAM scratch, and the runner
-    *interleaves* the streams round by round — in round *r*, core *i*
-    executes frame *r - i*, so all N cores are busy on N consecutive
-    frames of the batch at once (the steady state
-    ``timing.analyze_multistream`` prices).
+class HandoffViolation(RuntimeError):
+    """A core tried to touch a double-buffered boundary copy out of turn:
+    reading a copy before its producer's round retired, or overwriting a
+    copy its consumer has not drained yet."""
 
-    Core *i*'s output regions are core *i+1*'s input regions in the shared
-    plan (boundary maps are pinned for the whole frame), so the schedule
-    respects the frame's data dependencies by construction and the result
-    is bit-exact vs the single-stream compile, per frame. Every stream
-    executes from its encoded words.
+
+class MultiStreamRunner:
+    """Frame-pipelined multi-core execution over ONE shared physical DRAM,
+    with the double-buffer handoff protocol ENFORCED step by step.
+
+    N cores each own a pipeline-stage segment of the network. Frames are
+    processed in GROUPS of ``batch`` (the lockstep data plane of the
+    batched executor); core *i* runs its whole segment for one group per
+    :meth:`step`. Every inter-core boundary map exists twice in the shared
+    DRAM (the planner's ping/pong copies): group *g* lives in copy
+    ``g % 2``, which the executing core resolves through its frame-parity
+    latch and the CFG_DBUF words of its stream.
+
+    The runner tracks which group each boundary copy currently holds and
+    which (boundary, group) pairs the consumer has retired. ``step(core)``
+    raises :class:`HandoffViolation` — it never silently reads stale
+    data — when the core's input copy does not hold its next group (the
+    producer has not retired that round) or its output copy still holds a
+    group the consumer has not drained (a double buffer is two deep, not
+    infinite). :meth:`run` plays the canonical schedule (core *i* takes
+    group *r - i* in round *r*); arbitrary legal interleavings reach the
+    same bit-exact result (property-tested in
+    ``tests/test_cfu_properties.py``).
     """
-    layout = ms.meta["layout"]
-    x_q, batched = _bind_input(x_q, ms.meta)
-    n_frames = x_q.shape[0]
-    dram = np.zeros((n_frames, max(layout.dram_size, 1)), np.int8)
-    r_in = layout.regions[ms.meta["in_region"]]
-    dram[:, r_in.base:r_in.base + r_in.size] = x_q.reshape(n_frames, -1)
-    words = [isa.decode_words(isa.encode_program(p)) for p in ms.streams]
-    # One persistent machine per core: the weight cache and SRAM scratch
-    # survive across frames (as in the real core — every stream writes its
-    # scratch before reading it, so stale frame state is never observed);
-    # only the DRAM window is re-pointed at the round's frame.
-    cores = [CFUMachine(params, layout.dram_size, layout.sram_size,
-                        batch=1, dram_mem=dram[0:1]) for _ in ms.streams]
-    for rnd in range(n_frames + len(ms.streams) - 1):
-        for core, (m, instrs) in enumerate(zip(cores, words)):
-            frame = rnd - core
-            if not 0 <= frame < n_frames:
-                continue  # core idle this round (pipeline fill/drain)
-            m.mem[isa.SPACE_DRAM] = dram[frame:frame + 1]
-            m.execute(instrs)
-    y = _read_output(dram, None, ms.meta, batched)
-    return (y, [m.stats for m in cores]) if return_stats else y
+
+    def __init__(self, ms, x_q, params: Sequence, batch: int = 1):
+        if batch < 1:
+            raise ValueError(f"batch must be >= 1, got {batch}")
+        self.ms = ms
+        self.layout = ms.meta["layout"]
+        x_q, self.batched = _bind_input(x_q, ms.meta)
+        self.n_frames = x_q.shape[0]
+        self.batch = batch
+        self.n_groups = -(-self.n_frames // batch)
+        pad = self.n_groups * batch - self.n_frames
+        if pad:        # ragged tail: repeat the last frame, sliced off later
+            x_q = np.concatenate([x_q, np.repeat(x_q[-1:], pad, 0)], axis=0)
+        self.frames = x_q
+        self.n_cores = len(ms.streams)
+        self.words = [isa.decode_words(isa.encode_program(p))
+                      for p in ms.streams]
+        self.in_names = [p.meta["in_region"] for p in ms.streams]
+        self.out_names = [p.meta["out_region"] for p in ms.streams]
+        # ONE shared DRAM: private segments are disjoint by the pinned
+        # plan; boundary maps exist exactly twice (ping/pong).
+        self.dram = np.zeros((batch, max(self.layout.dram_size, 1)), np.int8)
+        self.cores = [CFUMachine(params, self.layout.dram_size,
+                                 self.layout.sram_size, batch=batch,
+                                 dram_mem=self.dram)
+                      for _ in ms.streams]
+        self.next_group = [0] * self.n_cores
+        self.copy_holds: Dict[Tuple[str, int], int] = {}  # copy -> group
+        self.consumed: set = set()                        # (name, group)
+        out_shape = tuple(ms.meta["out_shape"])
+        self.out = np.zeros((self.n_groups * batch,) + out_shape, np.int8)
+
+    # --- boundary-copy helpers ---------------------------------------------
+
+    def _copy_region(self, name: str, parity: int):
+        if parity and name in self.layout.dbuf:
+            return self.layout.dbuf[name]
+        return self.layout.regions[name]
+
+    def _blocker(self, core: int) -> Optional[str]:
+        """Why ``step(core)`` would violate the handoff (None = ready)."""
+        g = self.next_group[core]
+        if g >= self.n_groups:
+            return f"core {core} has retired all {self.n_groups} groups"
+        parity = g & 1
+        in_name = self.in_names[core]
+        # core 0's input arrives by host DMA inside its own step (which
+        # also consumes the copy's previous group), so only downstream
+        # cores can be starved of input
+        if core > 0 and self.copy_holds.get((in_name, parity)) != g:
+            held = self.copy_holds.get((in_name, parity))
+            return (f"core {core} needs boundary {in_name!r} group {g} in "
+                    f"copy {parity}, which holds "
+                    f"{'nothing' if held is None else f'group {held}'} — "
+                    f"producer core {core - 1} has not retired that round")
+        out_name = self.out_names[core]
+        held = self.copy_holds.get((out_name, parity))
+        if held is not None and (out_name, held) not in self.consumed:
+            return (f"core {core} would overwrite boundary {out_name!r} "
+                    f"copy {parity} holding group {held}, which its "
+                    f"consumer has not drained")
+        return None
+
+    def ready(self, core: int) -> bool:
+        return self._blocker(core) is None
+
+    @property
+    def done(self) -> bool:
+        return all(g >= self.n_groups for g in self.next_group)
+
+    # --- execution -----------------------------------------------------------
+
+    def step(self, core: int) -> int:
+        """Run ``core``'s segment for its next frame group; returns the
+        group index. Raises :class:`HandoffViolation` if the double-buffer
+        protocol does not permit the step yet."""
+        why = self._blocker(core)
+        if why is not None:
+            raise HandoffViolation(why)
+        g = self.next_group[core]
+        parity = g & 1
+        in_name, out_name = self.in_names[core], self.out_names[core]
+        if core == 0:      # host DMA: this round's frames arrive off-chip
+            r = self._copy_region(in_name, parity)
+            self.dram[:, r.base:r.base + r.size] = \
+                self.frames[g * self.batch:(g + 1) * self.batch] \
+                    .reshape(self.batch, -1)
+            self.copy_holds[(in_name, parity)] = g
+        m = self.cores[core]
+        m.frame_parity = parity
+        m.execute(self.words[core])
+        self.consumed.add((in_name, g))
+        self.copy_holds[(out_name, parity)] = g
+        if core == self.n_cores - 1:   # host drains the program output
+            r = self._copy_region(out_name, parity)
+            y = self.dram[:, r.base:r.base + r.size]
+            self.out[g * self.batch:(g + 1) * self.batch] = \
+                y.reshape((self.batch,) + self.out.shape[1:])
+            self.consumed.add((out_name, g))
+        self.next_group[core] = g + 1
+        return g
+
+    def run(self) -> "MultiStreamRunner":
+        """The canonical schedule: in round r, core i takes group r - i."""
+        for rnd in range(self.n_groups + self.n_cores - 1):
+            for core in range(self.n_cores):
+                if 0 <= rnd - core < self.n_groups:
+                    self.step(core)
+        return self
+
+    def outputs(self) -> np.ndarray:
+        y = self.out[:self.n_frames].copy()
+        return y if self.batched else y[0]
+
+    def stats(self):
+        return [m.stats for m in self.cores]
+
+
+def run_multistream(ms, x_q, params: Sequence, return_stats: bool = False,
+                    batch: int = 1):
+    """Execute a ``compiler.MultiStreamProgram`` as the frame-pipelined
+    multi-core machine it compiles for: N cores share ONE physical DRAM
+    (the common off-chip port), each owns its SRAM scratch, and the
+    canonical schedule interleaves the streams round by round — in round
+    *r*, core *i* executes frame group *r - i*, so all N cores are busy
+    on N consecutive groups at once (the steady state
+    ``timing.analyze_multistream`` prices). ``batch`` sets the frames per
+    group (frame-level batching composed with the layer pipeline); the
+    result is bit-exact vs the single-stream compile per frame either way.
+
+    The double-buffer handoff is enforced, not assumed: see
+    :class:`MultiStreamRunner`, which this wraps.
+    """
+    runner = MultiStreamRunner(ms, x_q, params, batch=batch).run()
+    y = runner.outputs()
+    return (y, runner.stats()) if return_stats else y

@@ -41,7 +41,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 from repro.cfu import isa
 from repro.core.dsc import DSCBlockSpec
@@ -302,6 +302,11 @@ class Region:
                 and other.base < self.base + self.size)
 
 
+#: Suffix of the pong copy a double-buffered boundary region gets in the
+#: plan (the ping copy keeps the value's own name).
+PONG_SUFFIX = "~pong"
+
+
 @dataclasses.dataclass
 class Layout:
     """Where the compiler placed every feature map.
@@ -311,12 +316,18 @@ class Layout:
     ``add`` raises :class:`MemoryPlanError` when the new region overlaps a
     *live* one — address reuse is legal only after an explicit ``free``
     (which is how the planner encodes disjoint lifetimes).
+
+    ``dbuf`` maps a double-buffered boundary value's name to its *pong*
+    region (the ping copy is ``regions[name]``): multi-stream compilation
+    plans every inter-core boundary map twice, so a producer core can fill
+    one copy while the consumer core drains the other.
     """
 
     regions: Dict[str, Region] = dataclasses.field(default_factory=dict)
     dram_size: int = 0
     sram_size: int = 0          # high-water mark across the program
     live: Dict[str, Region] = dataclasses.field(default_factory=dict)
+    dbuf: Dict[str, Region] = dataclasses.field(default_factory=dict)
 
     def add(self, name: str, space: int, base: int, size: int) -> Region:
         r = Region(name, space, base, size)
@@ -376,7 +387,9 @@ class _SpaceAllocator:
         self.holes = merged
 
 
-def plan_memory(ir: IRProgram, *, pin_io: bool = False) -> Layout:
+def plan_memory(ir: IRProgram, *, pin_io: bool = False,
+                dbuf_values: Sequence[str] = (),
+                op_segments: Optional[Mapping[int, int]] = None) -> Layout:
     """Liveness-driven placement of every (non-port) value.
 
     Walks the op list in program order; at op *i* it first frees values
@@ -389,21 +402,65 @@ def plan_memory(ir: IRProgram, *, pin_io: bool = False) -> Layout:
     compilation's boundary maps must survive the whole frame, each stream
     owning a different pipeline stage.
 
-    The resulting :class:`Layout` is built through ``add``/``free``, so the
-    no-overlap-while-live invariant is checked on every placement.
+    ``dbuf_values`` names the *inter-core* boundary values (values whose
+    producer and consumer live in different pipeline-stage segments, plus
+    the host-facing program input/output): each gets TWO pinned regions —
+    the ping copy under its own name and a pong copy under
+    ``name + PONG_SUFFIX`` — recorded in ``Layout.dbuf``. Double-buffered
+    values must be DRAM-resident non-scratch (they cross cores; a core's
+    private SRAM cannot carry them) — anything else raises
+    :class:`MemoryPlanError`.
+
+    ``op_segments`` (op index -> pipeline-stage segment) switches DRAM
+    scratch to *per-segment arena* placement for the shared-DRAM
+    multi-core machine. Program-order liveness is WRONG there: every core
+    re-executes its segment each round, so a hole freed by core A's
+    scratch is concurrently relived while core B (or a pinned boundary
+    copy placed later) occupies it. Scratch may therefore reuse holes
+    only WITHIN its own segment's arena; the arenas sit above the pinned
+    values and each other, so nothing a different core touches can ever
+    alias. SRAM scratch keeps program-order reuse — SRAM is per-core
+    private in the machine, so cross-segment address reuse is physical
+    reality, not a hazard.
     """
     layout = Layout()
     allocs = {isa.SPACE_DRAM: _SpaceAllocator(),
               isa.SPACE_SRAM: _SpaceAllocator()}
 
+    dbuf = set(dbuf_values)
+    for name in dbuf:
+        v = ir.values.get(name)
+        if v is None:
+            raise MemoryPlanError(f"dbuf value {name!r} not in the IR")
+        if v.port_resident:
+            raise MemoryPlanError(
+                f"dbuf value {name!r} is port-resident (never in memory)")
+        if v.space != isa.SPACE_DRAM or v.scratch:
+            raise MemoryPlanError(
+                f"dbuf value {name!r} must be a DRAM boundary map, not "
+                f"{'scratch' if v.scratch else isa.SPACE_NAMES[v.space]}")
+
     vals = [v for v in ir.values.values() if not v.port_resident]
+
+    def in_arena(v: Value) -> bool:
+        return (op_segments is not None and v.scratch
+                and v.space == isa.SPACE_DRAM)
 
     def last_use_of(v: Value) -> Optional[int]:
         # pin is a planning-time view only — the IR's liveness is not
         # mutated, so the same IRProgram can be re-planned either way
+        if v.name in dbuf:
+            return None                      # both copies live to the end
         if pin_io and v.space == isa.SPACE_DRAM and not v.scratch:
             return None
         return v.last_use
+
+    def place(v: Value) -> None:
+        layout.add(v.name, v.space, allocs[v.space].alloc(v.size), v.size)
+        if v.name in dbuf:
+            pong = layout.add(v.name + PONG_SUFFIX, v.space,
+                              allocs[v.space].alloc(v.size), v.size)
+            layout.dbuf[v.name] = pong
 
     by_def: Dict[int, List[Value]] = {}
     for v in vals:
@@ -411,17 +468,43 @@ def plan_memory(ir: IRProgram, *, pin_io: bool = False) -> Layout:
     expiring: Dict[int, List[Value]] = {}
     for v in vals:
         lu = last_use_of(v)
-        if lu is not None:
+        if lu is not None and not in_arena(v):
             expiring.setdefault(lu, []).append(v)
 
     for v in by_def.get(-1, []):
-        layout.add(v.name, v.space, allocs[v.space].alloc(v.size), v.size)
+        place(v)
     for i in range(len(ir.ops)):
         for v in expiring.get(i - 1, []):
             r = layout.regions[v.name]
             layout.free(v.name)
             allocs[v.space].free(r.base, r.size)
         for v in by_def.get(i, []):
-            layout.add(v.name, v.space,
-                       allocs[v.space].alloc(v.size), v.size)
+            if not in_arena(v):
+                place(v)
+    if op_segments is None:
+        return layout
+
+    # --- per-segment DRAM scratch arenas (shared-DRAM multi-core) --------
+    base = layout.dram_size            # arenas sit above every pinned value
+    segments = sorted(set(op_segments.values()))
+    for seg in segments:
+        arena = _SpaceAllocator()
+        placed: List[Tuple[Value, int]] = []
+        for i in range(len(ir.ops)):
+            if op_segments.get(i) != seg:
+                continue
+            # scratch lifetime is its op: free the previous op's scratch
+            # first so consecutive blocks of ONE core share the arena
+            for v, off in list(placed):
+                if v.last_use is not None and v.last_use < i:
+                    r = layout.regions[v.name]
+                    layout.free(v.name)
+                    arena.free(r.base - base, r.size)
+                    placed.remove((v, off))
+            for v in by_def.get(i, []):
+                if in_arena(v):
+                    off = arena.alloc(v.size)
+                    layout.add(v.name, v.space, base + off, v.size)
+                    placed.append((v, off))
+        base = layout.dram_size        # next core's arena: fresh addresses
     return layout

@@ -53,6 +53,26 @@ halo are overwritten in place; halo rows carried between consecutive tiles
 (two rows at stride 1, one row at stride 2) are *reused*, never
 recomputed. ``rows = 0`` (and every ``CFG``) returns F1 to plain
 row-major addressing.
+
+Heterogeneous multi-stream extension (PR 4)
+-------------------------------------------
+Two CFG words carry the per-core configuration of a frame-pipelined
+multi-core compile *in the stream itself* (a stream stays a complete
+description of its hardware point):
+
+* ``CFG_CORE core, n_cores`` — which pipeline-stage slot this stream
+  occupies. Architecturally informational (the golden executor latches it
+  for diagnostics); it is what makes a segment stream self-describing when
+  dumped and reloaded on its own.
+* ``CFG_DBUF reg, space, base0, base1`` — bind a base register to a
+  *double-buffered* boundary region: the ping copy at ``base0`` and the
+  pong copy at ``base1``. The executing core resolves the pair against its
+  frame-parity latch (even rounds read/write ping, odd rounds pong), so a
+  producer core can fill one copy while its consumer drains the other —
+  the inter-stage streaming of Bai et al. (arXiv:1809.01536), here applied
+  to the inter-core boundary maps of a partitioned network. Addresses are
+  24-bit (the two of them must share the word with reg+space); the
+  compiler validates placements fit.
 """
 
 from __future__ import annotations
@@ -100,6 +120,8 @@ OPCODES: Dict[str, int] = {
     "GAP_FIN": 0x12,
     "CFG_PE": 0x13,
     "CFG_STRIP": 0x14,
+    "CFG_CORE": 0x15,
+    "CFG_DBUF": 0x16,
 }
 MNEMONICS = {v: k for k, v in OPCODES.items()}
 
@@ -126,6 +148,9 @@ FIELD_SPECS: Dict[str, List[Tuple[str, int]]] = {
     "GAP_FIN": [("n", 12)],        # pooled pixel count (divisor)
     "CFG_PE": [("exp_pes", 8), ("dw_lanes", 8), ("proj_engines", 8)],
     "CFG_STRIP": [("rows", 8)],    # F1 rolling-strip depth; 0 = row-major
+    "CFG_CORE": [("core", 8), ("n_cores", 8)],
+    # ping/pong bases share the word, so they are 24-bit (16 MB) each
+    "CFG_DBUF": [("reg", 2), ("space", 1), ("base0", 24), ("base1", 24)],
 }
 
 

@@ -16,6 +16,12 @@ the other ``benchmarks/bench_*`` modules):
   chain (bytes moved, SRAM peak, cycles per pipeline, energy), the data
   behind the README table and the CI fused-rowtile-vs-fused DRAM gate;
   ``schedule_comparison_md`` renders it as the README's markdown.
+* ``multistream_comparison`` — the heterogeneous frame-pipeline map: one
+  row per (streams, PE allocation, frame-group batch) point of the full
+  VWW fused stream, with the steady-state round interval, frames/cycle,
+  and energy/frame from ``timing.analyze_multistream``; rendered by
+  ``multistream_comparison_md`` for the README, swept + gated by
+  ``benchmarks/bench_scaling.py``.
 """
 
 from __future__ import annotations
@@ -225,6 +231,96 @@ def schedule_comparison(hw: Optional[int] = None,
             "energy_uj": best.energy_pj["total"] / 1e6,
         })
     return rows
+
+
+# --- heterogeneous multi-stream comparison (README + CI artifact/gate) -------
+
+
+def multistream_comparison(img_hw: int = 80,
+                           base_pe=None,
+                           streams_list: Sequence[int] = (1, 2, 3),
+                           batches: Sequence[int] = (1, 4),
+                           pipeline: str = "v3",
+                           ) -> List[Dict[str, object]]:
+    """The frame-pipeline design-space map of the full VWW fused stream.
+
+    One row per (streams N, PE allocation, frame-group batch B): N cores
+    each get ``base_pe`` worth of engine budget (so every N compares at
+    equal silicon per core count), allocated either homogeneously or by
+    the compiler's ``auto-hetero`` search; each round drives B frames in
+    lockstep. Reported: the steady-state round interval, per-frame cycles,
+    frames/cycle, energy/frame, handoff + contention + fill terms.
+
+    ``base_pe`` defaults to (5, 5, 28) — an area-constrained half of the
+    paper's arrays. That is deliberate: at the paper's full arrays the
+    2..3-core pipeline is DRAM-port-bound and PE allocation is moot; the
+    constrained budget is where the heterogeneity-aware partitioner
+    visibly wins (the auto-hetero rows), which is also what the CI gate in
+    ``benchmarks/bench_scaling.py`` pins.
+    """
+    from repro.cfu.compiler import (AUTO_HETERO, compile_vww_network)
+    from repro.cfu.timing import PEConfig, analyze, analyze_multistream
+    from repro.models.mobilenetv2 import block_specs
+    base_pe = base_pe or PEConfig(5, 5, 28)
+    specs = block_specs()
+    rows: List[Dict[str, object]] = []
+    for streams in streams_list:
+        allocs = [("homogeneous", None)]
+        if streams > 1:
+            allocs.append(("auto-hetero", AUTO_HETERO))
+        for alloc_name, ppc in allocs:
+            prog = compile_vww_network(specs, img_hw, CFUSchedule.FUSED,
+                                       pe=base_pe, streams=streams,
+                                       pe_per_core=ppc, pipeline=pipeline)
+            for batch in batches:
+                if streams == 1:
+                    rep = analyze(prog, pipeline, batch=batch)
+                    interval = rep.total_cycles
+                    row = {"handoff_cycles": 0.0,
+                           "dram_contention_cycles": 0.0,
+                           "pipeline_fill_cycles": 0.0,
+                           "pe_per_core": [base_pe],
+                           "energy_per_frame_uj":
+                               rep.energy_pj["total"] / batch / 1e6}
+                else:
+                    rep = analyze_multistream(prog, pipeline, batch=batch)
+                    interval = rep.interval_cycles
+                    row = {"handoff_cycles": rep.handoff_cycles,
+                           "dram_contention_cycles":
+                               rep.dram_contention_cycles,
+                           "pipeline_fill_cycles": rep.pipeline_fill_cycles,
+                           "pe_per_core": list(prog.meta["pe_per_core"]),
+                           "energy_per_frame_uj":
+                               rep.energy_per_frame_pj / 1e6}
+                rows.append({
+                    "img_hw": img_hw, "pipeline": pipeline,
+                    "streams": streams, "alloc": alloc_name, "batch": batch,
+                    "interval_cycles": interval,
+                    "cycles_per_frame": interval / batch,
+                    "frames_per_cycle": batch / interval,
+                    **row,
+                })
+    return rows
+
+
+def _pe_str(pe) -> str:
+    return f"{pe.exp_pes},{pe.dw_lanes},{pe.proj_engines}"
+
+
+def multistream_comparison_md(rows: List[Dict[str, object]]) -> List[str]:
+    """Render ``multistream_comparison`` rows as the README's markdown."""
+    out = ["| streams | PE/core | batch | interval (cyc) | frames/cycle | "
+           "energy/frame (uJ) |",
+           "|---:|---|---:|---:|---:|---:|"]
+    for r in rows:
+        pes = ";".join(_pe_str(p) for p in r["pe_per_core"])
+        label = pes if r["alloc"] == "homogeneous" or r["streams"] == 1 \
+            else f"{pes} (hetero)"
+        out.append(f"| {r['streams']} | `{label}` | {r['batch']} | "
+                   f"{r['interval_cycles']:.3g} | "
+                   f"{r['frames_per_cycle']:.3g} | "
+                   f"{r['energy_per_frame_uj']:.2f} |")
+    return out
 
 
 def schedule_comparison_md(rows: List[Dict[str, object]]) -> List[str]:

@@ -83,12 +83,34 @@ Rowtile + multi-stream (PR 3)
 strip depth), mirroring the executor, so the fused-rowtile schedule's
 SRAM strip traffic is metered against the strip buffer, not a full map.
 ``analyze_multistream`` models N cores running the segments of a
-``compiler.MultiStreamProgram`` on *consecutive frames*: the steady-state
-per-frame interval is ``max(slowest core, total DRAM-port time)`` — the
-shared off-chip port serializes across cores, and
-``dram_transfer_cycles`` (tracked per phase) is what it arbitrates. The
-static-energy term ``E_LEAK_PER_PE_CYCLE`` charges every engine for every
-cycle, which is what gives the energy-vs-PE sweep its minimum.
+``compiler.MultiStreamProgram`` on *consecutive frames*; the shared
+off-chip port serializes across cores, and ``dram_transfer_cycles``
+(tracked per phase) is what it arbitrates. The static-energy term
+``E_LEAK_PER_PE_CYCLE`` charges every engine for every cycle, which is
+what gives the energy-vs-PE sweep its minimum.
+
+Heterogeneous frame pipeline + batching (PR 4)
+----------------------------------------------
+The multi-stream model is no longer pure port contention:
+
+* **Per-core PE configs** — each stream's CFG_PE word may differ (the
+  compiler's heterogeneity-aware partitioner balances per-core *time*
+  under each core's own engine counts), so ``analyze_multistream`` walks
+  each stream under its own configuration unless ``pe=`` overrides all.
+* **Buffer handoff** — every double-buffered boundary a core touches
+  (its CFG_DBUF words) costs ``HANDOFF_SYNC_CYCLES`` per round: the
+  ping/pong swap plus the ready-flag check against the neighbour core.
+  A core's round time is ``total_cycles + handoff_cycles``.
+* **Frame batching** — ``analyze(batch=B)`` prices one stream driving B
+  frames in lockstep: per-iteration compute and all byte traffic scale
+  with B, but each phase's *pipeline-fill* cycles are paid once per phase
+  (the fill is a property of the stream, not of the data plane), so
+  batching amortizes fill — exactly what the batched executor does.
+* **Fill/drain** — the report separates the steady-state initiation
+  interval ``max(slowest round, serialized DRAM port)`` from the
+  ``(N-1)·interval`` pipeline fill; ``cycles_for_frames(F)`` composes
+  them, and ``frames_per_cycle`` / ``energy_per_frame_pj`` are the
+  steady-state throughput and per-frame energy the benchmarks sweep.
 """
 
 from __future__ import annotations
@@ -121,6 +143,11 @@ E_DRAM_BYTE = 160.0       # pJ per byte, off-chip DRAM
 # balanced design point (benchmarks/bench_scaling.py sweeps it).
 E_LEAK_PER_PE_CYCLE = 0.01   # pJ per engine per cycle
 
+# Per-round cost of one double-buffered boundary handoff: the ping/pong
+# swap plus the ready-flag exchange with the neighbour core (a handful of
+# uncached flag reads through the shared port).
+HANDOFF_SYNC_CYCLES = 64.0
+
 PIPELINES = ("v1", "v2", "v3")
 _FILL_ITERS = {"v1": 0, "v2": 2, "v3": 4}
 
@@ -148,7 +175,8 @@ class PEConfig:
 @dataclasses.dataclass
 class PhaseStats:
     n_iters: int = 0
-    compute_cycles: float = 0.0
+    compute_cycles: float = 0.0         # per-frame iteration body cycles
+    fill_cycles: float = 0.0            # pipeline fill, paid once per phase
     transfer_cycles: float = 0.0
     dram_transfer_cycles: float = 0.0   # DRAM-port share of transfer
     multi_stage: bool = False
@@ -170,6 +198,14 @@ class TimingReport:
     sram_buffer_bytes: int            # scratch high-water (Eq. 2 analogue)
     n_phases: int
     dram_transfer_cycles: float = 0.0  # DRAM-port busy time (contention in)
+    batch: int = 1                     # frames driven in lockstep
+    handoff_cycles: float = 0.0        # dbuf boundary sync, per round
+    n_dbuf_boundaries: int = 0         # distinct CFG_DBUF regions touched
+
+    @property
+    def frames_per_cycle(self) -> float:
+        """Throughput of one core re-running this stream back-to-back."""
+        return self.batch / self.total_cycles if self.total_cycles else 0.0
 
 
 class _Walker:
@@ -197,6 +233,7 @@ class _Walker:
         self.cur = PhaseStats()
         self.iter_stages: Dict[str, float] = {}
         self.last_exp_mode: Optional[int] = None
+        self.dbuf_bases: set = set()   # distinct double-buffered boundaries
 
     # --- map geometry (mirrors executor._map_shape) -------------------------
 
@@ -270,8 +307,11 @@ class _Walker:
     def _end_phase(self):
         self._end_iter()
         if self.cur.multi_stage:
-            self.cur.compute_cycles += (_FILL_ITERS[self.pipeline]
-                                        * self.cur.last_iter_cycles)
+            # fill is paid once per phase regardless of the data-plane
+            # batch: kept apart from the per-frame body so analyze(batch=B)
+            # can amortize it
+            self.cur.fill_cycles = (_FILL_ITERS[self.pipeline]
+                                    * self.cur.last_iter_cycles)
         if self.cur.n_iters or self.cur.transfer_cycles:
             self.phases.append(self.cur)
         self.cur = PhaseStats()
@@ -303,6 +343,15 @@ class _Walker:
             elif op == "SET_BASE":
                 reg, space, addr = ins.args
                 self.base[reg] = (space, addr)
+            elif op == "CFG_DBUF":
+                # bytes are parity-independent (equal-size copies), so the
+                # walker meters against the ping copy; the boundary itself
+                # is what costs a per-round handoff
+                reg, space, base0, base1 = ins.args
+                self.base[reg] = (space, base0)
+                self.dbuf_bases.add((space, base0, base1))
+            elif op == "CFG_CORE":
+                pass       # stream identity: informational, no cycles
             elif op == "LD_WGT":
                 which = ins.args[0]
                 nbytes = {isa.WGT_EXP: self.cin * self.cmid,
@@ -399,13 +448,22 @@ def _cyc_per_byte(space: int) -> float:
 class MultiStreamReport:
     """Timing of an N-core compile: per-core reports + pipelined totals.
 
-    ``latency_cycles`` is one frame end-to-end (cores run back-to-back for
-    a single frame). ``interval_cycles`` is the steady-state per-frame
-    initiation interval with all cores busy on consecutive frames:
-    ``max(max_i core_i, sum_i dram_port_i)`` — the second term is the
-    shared DRAM port serializing every core's off-chip transfers
-    (boundary maps are double-buffered, so only port *bandwidth* couples
-    the cores). ``dram_contention_cycles`` is the exposed excess.
+    ``latency_cycles`` is one frame group end-to-end (cores run
+    back-to-back, each paying its boundary handoffs). ``interval_cycles``
+    is the steady-state per-*round* initiation interval with all cores
+    busy on consecutive frame groups:
+    ``max(max_i (core_i + handoff_i), sum_i dram_port_i)`` — the first
+    term is the slowest core's round (compute/transfer plus its
+    double-buffer handoffs), the second the shared DRAM port serializing
+    every core's off-chip transfers (the ping/pong boundary copies
+    decouple the cores' *data* dependencies, so bandwidth and handoff are
+    all that couples them). ``dram_contention_cycles`` is the exposed
+    excess of the port over the slowest round.
+
+    Each round retires ``batch`` frames, so the steady-state throughput is
+    ``frames_per_cycle = batch / interval_cycles``; the pipeline fill
+    before steady state is ``(N-1)·interval`` (``pipeline_fill_cycles``),
+    and ``cycles_for_frames`` composes the two for a finite frame count.
     """
 
     pipeline: str
@@ -417,26 +475,52 @@ class MultiStreamReport:
     sram_bytes: int
     macs: int
     energy_pj: Dict[str, float]
+    batch: int = 1
+    handoff_cycles: float = 0.0        # summed over the cores, per round
+    pipeline_fill_cycles: float = 0.0  # (N-1) intervals before steady state
 
     @property
     def throughput_speedup_vs_single(self) -> float:
         return self.latency_cycles / self.interval_cycles
 
+    @property
+    def frames_per_cycle(self) -> float:
+        """Steady-state throughput: frames retired per cycle."""
+        return self.batch / self.interval_cycles if self.interval_cycles \
+            else 0.0
+
+    @property
+    def energy_per_frame_pj(self) -> float:
+        return self.energy_pj["total"] / self.batch
+
+    def cycles_for_frames(self, n_frames: int) -> float:
+        """Fill + steady state + drain for a finite frame sequence:
+        ``ceil(F / batch)`` rounds through an N-deep pipeline."""
+        rounds = -(-n_frames // self.batch)
+        return (rounds + len(self.per_stream) - 1) * self.interval_cycles
+
 
 def analyze_multistream(ms, pipeline: str = "v3",
-                        pe: Optional[PEConfig] = None) -> MultiStreamReport:
+                        pe: Optional[PEConfig] = None,
+                        batch: int = 1) -> MultiStreamReport:
     """Walk every stream of a ``compiler.MultiStreamProgram``.
+
+    Each stream is priced under its OWN CFG_PE word (per-core PE configs
+    ride in the streams); ``pe=`` overrides all of them at once. ``batch``
+    is the per-round frame-group size of the batched frame pipeline
+    (see ``analyze``): totals are per round, i.e. per ``batch`` frames.
 
     Energy: the dynamic terms (MAC/DRAM/SRAM) sum over the streams, but
     the static term is re-priced for the steady state the report models —
-    EVERY core leaks for the whole per-frame interval, including its
+    EVERY core leaks for the whole per-round interval, including its
     idle/stall share, so extra cores are never energetically free.
     """
-    reps = [analyze(p, pipeline, pe=pe) for p in ms.streams]
-    latency = sum(r.total_cycles for r in reps)
-    slowest = max(r.total_cycles for r in reps)
+    reps = [analyze(p, pipeline, pe=pe, batch=batch) for p in ms.streams]
+    latency = sum(r.total_cycles + r.handoff_cycles for r in reps)
+    slowest = max(r.total_cycles + r.handoff_cycles for r in reps)
     port = sum(r.dram_transfer_cycles for r in reps)
     interval = max(slowest, port)
+    handoff = sum(r.handoff_cycles for r in reps)
     energy: Dict[str, float] = {}
     for r in reps:
         for k, v in r.energy_pj.items():
@@ -457,25 +541,42 @@ def analyze_multistream(ms, pipeline: str = "v3",
         sram_bytes=sum(r.sram_bytes for r in reps),
         macs=sum(r.macs for r in reps),
         energy_pj=energy,
+        batch=batch,
+        handoff_cycles=handoff,
+        pipeline_fill_cycles=(len(reps) - 1) * interval,
     )
 
 
 def analyze(program: Program, pipeline: str = "v3",
-            pe: Optional[PEConfig] = None) -> TimingReport:
+            pe: Optional[PEConfig] = None, batch: int = 1) -> TimingReport:
     """Walk one compiled program and report cycles/traffic/energy.
 
     ``pe`` overrides the stream's CFG_PE engine counts (what-if analysis
     without recompiling); by default the stream's own word governs.
+
+    ``batch`` prices the stream driving B frames in lockstep (the batched
+    executor's data plane): per-iteration compute, byte traffic, MACs and
+    dynamic energy scale with B; each phase's pipeline-fill cycles are
+    paid once, so throughput per frame improves with batch. All totals
+    (cycles, bytes, energy) are for the whole batch.
     """
+    if batch < 1:
+        raise ValueError(f"batch must be >= 1, got {batch}")
     w = _Walker(pipeline, pe=pe)
     w.walk(program)
-    compute = sum(p.compute_cycles for p in w.phases)
-    transfer = sum(p.transfer_cycles for p in w.phases)
-    total = sum(max(p.compute_cycles, p.transfer_cycles) for p in w.phases)
-    dram_xfer = sum(p.dram_transfer_cycles for p in w.phases)
-    dram = w.bytes_rw[isa.SPACE_DRAM]
-    sram = w.bytes_rw[isa.SPACE_SRAM]
-    e_mac = w.macs * E_MAC_INT8
+    b = float(batch)
+    compute = sum(p.compute_cycles * b + p.fill_cycles for p in w.phases)
+    transfer = sum(p.transfer_cycles * b for p in w.phases)
+    total = sum(max(p.compute_cycles * b + p.fill_cycles,
+                    p.transfer_cycles * b) for p in w.phases)
+    dram_xfer = sum(p.dram_transfer_cycles * b for p in w.phases)
+    # weights are boot-resident: loaded once however many frames ride the
+    # data plane, so only the data share of DRAM traffic scales with batch
+    dram = ((w.bytes_rw[isa.SPACE_DRAM] - w.weight_bytes) * batch
+            + w.weight_bytes)
+    sram = w.bytes_rw[isa.SPACE_SRAM] * batch
+    macs = w.macs * batch
+    e_mac = macs * E_MAC_INT8
     e_dram = dram * E_DRAM_BYTE
     e_sram = sram * E_SRAM_BYTE
     n_pes = w.pe.exp_pes + w.pe.dw_lanes + w.pe.proj_engines
@@ -490,11 +591,14 @@ def analyze(program: Program, pipeline: str = "v3",
         dram_bytes=int(dram),
         sram_bytes=int(sram),
         weight_bytes=int(w.weight_bytes),
-        macs=int(w.macs),
+        macs=int(macs),
         energy_pj={"mac": e_mac, "dram": e_dram, "sram": e_sram,
                    "leak": e_leak,
                    "total": e_mac + e_dram + e_sram + e_leak},
         sram_buffer_bytes=int(layout.sram_size),
         n_phases=len(w.phases),
         dram_transfer_cycles=dram_xfer,
+        batch=batch,
+        handoff_cycles=HANDOFF_SYNC_CYCLES * len(w.dbuf_bases),
+        n_dbuf_boundaries=len(w.dbuf_bases),
     )

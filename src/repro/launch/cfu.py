@@ -31,8 +31,15 @@ DRAM-port contention, and verifies ``executor.run_multistream``
 bit-exactly.
 
 ``--pe`` sets the engine counts baked into the stream's CFG_PE word
-(default: the paper's 9,9,56); ``--json`` writes the timing reports to a
-file (``results/cfu/`` by convention, like launch.dryrun).
+(default: the paper's 9,9,56). With ``--streams N``, ``--pe-per-core``
+makes the frame pipeline heterogeneous: N semicolon-separated ``E,D,P``
+triples (one per core, pipeline order) or ``auto-hetero`` (search a
+small per-core allocation space under the homogeneous total engine
+budget — big stem core, small tail core). ``--batch`` doubles as the
+multi-stream frame-group size: each pipeline round drives a group of B
+frames per core in lockstep, and the printed steady-state throughput
+(frames/cycle) and energy/frame reflect it. ``--json`` writes the timing
+reports to a file (``results/cfu/`` by convention, like launch.dryrun).
 """
 
 from __future__ import annotations
@@ -47,9 +54,9 @@ import jax
 import numpy as np
 
 from repro.cfu import isa
-from repro.cfu.compiler import (AUTO_SCHEDULE, MultiStreamProgram,
-                                compile_network, compile_vww_network,
-                                schedule_names)
+from repro.cfu.compiler import (AUTO_HETERO, AUTO_SCHEDULE,
+                                MultiStreamProgram, compile_network,
+                                compile_vww_network, schedule_names)
 from repro.cfu.executor import run_multistream, run_program
 from repro.cfu.ir import SCHEDULES
 from repro.cfu.network import random_chain_params, vww_cfu_params
@@ -78,6 +85,17 @@ def _parse_pe(text) -> PEConfig:
     return PEConfig(*parts)
 
 
+def _parse_pe_per_core(text, streams: int):
+    """';'-separated E,D,P triples (one per core) or 'auto-hetero'."""
+    if text is None:
+        return None
+    if streams <= 1:
+        raise SystemExit("--pe-per-core needs --streams > 1")
+    if text == AUTO_HETERO:
+        return AUTO_HETERO
+    return [_parse_pe(t) for t in text.split(";")]
+
+
 def _dump_asm(prog, path: str):
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     with open(path, "w") as f:
@@ -96,23 +114,45 @@ def _describe_schedule(prog):
     return " ".join(f"{n}:{s}" for n, s in picks.items())
 
 
+def _runner_for(prog, args):
+    """Golden-executor entry matching the compile: the multi-stream runner
+    groups ``--batch`` frames per pipeline round (batching x pipelining)."""
+    if not isinstance(prog, MultiStreamProgram):
+        return run_program
+
+    def run(p, x, params):
+        in_ndim = len(p.meta["in_shape"])
+        n_frames = x.shape[0] if np.asarray(x).ndim > in_ndim else 1
+        return run_multistream(p, x, params,
+                               batch=max(1, min(args.batch, n_frames)))
+    return run
+
+
 def _report_of(prog, args):
     """Timing for either a single stream or a multi-stream compile."""
     if isinstance(prog, MultiStreamProgram):
-        rep = analyze_multistream(prog, args.pipeline)
+        rep = analyze_multistream(prog, args.pipeline, batch=args.batch)
         if prog.meta["streams"] != prog.meta["streams_requested"]:
             print(f"#   NOTE: {prog.meta['streams_requested']} streams "
                   f"requested, only {prog.meta['streams']} schedulable "
                   f"units — compiled {prog.meta['streams']} cores")
         for i, (p, r) in enumerate(zip(prog.streams, rep.per_stream)):
             ops = ",".join(prog.meta["partition"][i])
+            pe_i = prog.meta["pe_per_core"][i]
             print(f"#   stream {i}: {len(p)} instrs, "
-                  f"{r.total_cycles:.3e} cyc [{ops}]")
-        print(f"#   steady-state interval {rep.interval_cycles:.3e} cyc, "
-              f"DRAM-port contention {rep.dram_contention_cycles:.3e} cyc, "
-              f"throughput x{rep.throughput_speedup_vs_single:.2f} "
-              f"vs one core")
-        cycles = rep.interval_cycles
+                  f"pe=({pe_i.exp_pes},{pe_i.dw_lanes},{pe_i.proj_engines}),"
+                  f" {r.total_cycles:.3e} cyc [{ops}]")
+        print(f"#   steady-state interval {rep.interval_cycles:.3e} cyc "
+              f"(batch {rep.batch}/round, handoff {rep.handoff_cycles:.0f}"
+              f" cyc), DRAM-port contention "
+              f"{rep.dram_contention_cycles:.3e} cyc, throughput "
+              f"x{rep.throughput_speedup_vs_single:.2f} vs one core")
+        print(f"#   frames/cycle {rep.frames_per_cycle:.3e}, energy/frame "
+              f"{rep.energy_per_frame_pj / 1e6:.2f} uJ, pipeline fill "
+              f"{rep.pipeline_fill_cycles:.3e} cyc")
+        # per-frame steady-state cycles: comparable to the sw_v0 baseline
+        # (and to batch=1) whatever the frame-group size
+        cycles = rep.interval_cycles / rep.batch
         return rep, cycles
     rep = analyze(prog, args.pipeline)
     return rep, rep.total_cycles
@@ -125,6 +165,11 @@ def _asdict(rep, prog=None):
         # so a large --streams may clamp), next to the request
         d["streams"] = prog.meta["streams"]
         d["streams_requested"] = prog.meta["streams_requested"]
+        d["pe_per_core"] = [dataclasses.asdict(p)
+                            for p in prog.meta["pe_per_core"]]
+        d["hetero"] = prog.meta["hetero"]
+        d["frames_per_cycle"] = rep.frames_per_cycle
+        d["energy_per_frame_pj"] = rep.energy_per_frame_pj
     return d
 
 
@@ -143,7 +188,8 @@ def _run_vww(args, key, pe: PEConfig, schedules):
     print(f"# CFU simulation: full VWW inference ({hw}x{hw}x{VWW.img_ch}, "
           f"stem+{len(specs)} blocks+head+GAP+FC), batch={batch}, "
           f"pe=({pe.exp_pes},{pe.dw_lanes},{pe.proj_engines}), "
-          f"pipeline={args.pipeline}, streams={args.streams}")
+          f"pipeline={args.pipeline}, streams={args.streams}, "
+          f"pe_per_core={args.pe_per_core}")
     print("schedule,n_instr,cycles,speedup_vs_sw_v0,dram_bytes,sram_bytes,"
           "sram_buffer_bytes,energy_uJ,verified_b1,verified_bN,exec_s")
     results = {"target": f"vww {hw}x{hw}", "pipeline": args.pipeline,
@@ -164,14 +210,15 @@ def _run_vww(args, key, pe: PEConfig, schedules):
                                    head_ch=VWW.head_ch,
                                    n_classes=VWW.n_classes, pe=pe,
                                    streams=args.streams,
+                                   pe_per_core=_parse_pe_per_core(
+                                       args.pe_per_core, args.streams),
                                    pipeline=args.pipeline)
         if sched == AUTO_SCHEDULE:
             print(f"# auto picks: {_describe_schedule(prog)}")
         if args.asm:
             _dump_asm(prog, args.asm)
         rep, cycles = _report_of(prog, args)
-        runner = (run_multistream if isinstance(prog, MultiStreamProgram)
-                  else run_program)
+        runner = _runner_for(prog, args)
         v1 = vn = "-"
         exec_s = 0.0
         if not args.no_verify:
@@ -226,14 +273,15 @@ def _run_chain(args, key, pe: PEConfig, schedules):
     for sched in schedules:
         prog = compile_network(specs, hw, hw, sched, pe=pe,
                                streams=args.streams,
+                               pe_per_core=_parse_pe_per_core(
+                                   args.pe_per_core, args.streams),
                                pipeline=args.pipeline)
         if sched == AUTO_SCHEDULE:
             print(f"# auto picks: {_describe_schedule(prog)}")
         if args.asm:
             _dump_asm(prog, args.asm)
         rep, cycles = _report_of(prog, args)
-        runner = (run_multistream if isinstance(prog, MultiStreamProgram)
-                  else run_program)
+        runner = _runner_for(prog, args)
         verified, exec_s = "-", 0.0
         if not args.no_verify:
             rng = np.random.default_rng(args.seed)
@@ -281,6 +329,12 @@ def main():
     ap.add_argument("--streams", type=int, default=1,
                     help="partition the op chain across N CFU cores "
                          "sharing the DRAM port")
+    ap.add_argument("--pe-per-core", default=None,
+                    metavar="E,D,P;E,D,P|auto-hetero",
+                    help="per-core engine counts for --streams N "
+                         "(semicolon-separated triples in pipeline order) "
+                         "or 'auto-hetero' (search allocations under the "
+                         "homogeneous total budget)")
     ap.add_argument("--hw", type=int, default=40,
                     help="input feature-map size for --net (stem output)")
     ap.add_argument("--img-hw", type=int, default=VWW.img_hw,

@@ -13,9 +13,12 @@ import numpy as np
 import pytest
 
 from repro.cfu import isa
-from repro.cfu.compiler import (AUTO_SCHEDULE, CFUSchedule, compile_block,
-                                compile_network, compile_vww_network)
-from repro.cfu.executor import run_multistream, run_program, run_words
+from repro.cfu.compiler import (AUTO_HETERO, AUTO_SCHEDULE, CFUSchedule,
+                                compile_block, compile_network,
+                                compile_vww_network, hetero_pe_candidates,
+                                split_pe_budget)
+from repro.cfu.executor import (HandoffViolation, MultiStreamRunner,
+                                run_multistream, run_program, run_words)
 from repro.cfu.ir import Layout, MemoryPlanError
 from repro.cfu.network import random_chain_params, vww_cfu_params
 from repro.cfu.timing import (PEConfig, analyze, analyze_multistream)
@@ -219,15 +222,17 @@ def test_memory_planner_reuses_scratch_across_blocks():
 
 
 def test_multistream_plan_pins_boundaries_not_scratch():
-    """pin_io pins boundary maps for the frame pipeline but must NOT pin
-    scheduler scratch (single-op lifetime on a single core): layer-dram's
-    multi-stream DRAM footprint is the pinned IO sum plus ONE reused
-    scratch arena, not per-block scratch copies."""
+    """The shared-DRAM multi-core plan pins every IO map (the frame
+    pipeline needs them all, every round) and places DRAM scratch in
+    per-SEGMENT arenas: consecutive blocks of ONE core reuse their arena
+    (never per-block copies), but scratch can never alias another core's
+    data or a pinned boundary copy — every core re-executes its segment
+    each round, so program-order liveness would be a lie."""
     specs = block_specs()
     hw = 16
     ms = compile_network(specs, hw, hw, CFUSchedule.LAYER_DRAM, streams=2)
     lay = ms.meta["layout"]
-    io_sum = scratch_sum = scratch_max = 0
+    io_sum = scratch_sum = 0
     per_block = {}
     for r in lay.regions.values():
         if r.name.startswith(("f1@", "f2@")):
@@ -236,12 +241,49 @@ def test_multistream_plan_pins_boundaries_not_scratch():
             per_block[blk] = per_block.get(blk, 0) + r.size
         else:
             io_sum += r.size
-    scratch_max = max(per_block.values())
-    # every boundary map is pinned (the frame pipeline needs them all)...
+    # one reused arena per core: its high-water is its largest block
+    arena_sum = sum(max(per_block[b] for b in seg if b in per_block)
+                    for seg in ms.meta["partition"]
+                    if any(b in per_block for b in seg))
+    # every boundary map is pinned (ping AND pong count toward io_sum)...
     assert lay.dram_size >= io_sum
-    # ...but scratch is NOT: the arena is reused, never per-block copies
-    assert lay.dram_size <= io_sum + scratch_max
+    # ...scratch adds one reused arena per segment, not per-block copies
+    assert lay.dram_size <= io_sum + arena_sum
     assert lay.dram_size < io_sum + scratch_sum
+    # scratch may NEVER alias pinned data (boundary copies live across
+    # rounds; a core's scratch recurs every round)
+    pinned = [r for r in lay.regions.values()
+              if not r.name.startswith(("f1@", "f2@"))]
+    scratch = [r for r in lay.regions.values()
+               if r.name.startswith(("f1@", "f2@"))]
+    for s in scratch:
+        for p in pinned:
+            assert not s.overlaps(p), (s, p)
+
+
+def test_multistream_plan_double_buffers_boundaries():
+    """Every inter-core boundary (and the host-facing program IO) gets a
+    ping AND a pong copy: equal sizes, disjoint from each other and from
+    everything else in DRAM."""
+    specs = block_specs()
+    ms = compile_network(specs, 12, 12, CFUSchedule.FUSED, streams=3)
+    lay = ms.meta["layout"]
+    bnd = ms.meta["boundaries"]
+    # program input, program output, and N-1 inter-core maps
+    assert ms.meta["in_region"] in bnd and ms.meta["out_region"] in bnd
+    assert len(bnd) == len(ms.streams) + 1
+    for name in bnd:
+        ping, pong = lay.regions[name], lay.dbuf[name]
+        assert ping.size == pong.size
+        assert not ping.overlaps(pong)
+    # the streams actually bind them with CFG_DBUF words
+    for i, p in enumerate(ms.streams):
+        dbuf_words = [ins for ins in p.instrs if ins.op == "CFG_DBUF"]
+        assert dbuf_words, f"stream {i} binds no double-buffered boundary"
+    # ...and each stream opens with its core slot
+    for i, p in enumerate(ms.streams):
+        assert ("CFG_CORE", (i, len(ms.streams))) in [
+            (ins.op, ins.args) for ins in p.instrs[:3]]
 
 
 # --- multi-stream compilation ------------------------------------------------
@@ -304,16 +346,23 @@ def test_plan_memory_pin_is_not_destructive():
 
 
 def test_multistream_timing_interval_and_contention():
-    """Steady-state model: the frame interval is bounded below by the
-    slowest core and by the serialized DRAM port; total traffic equals the
-    single-stream compile's (partitioning moves no extra bytes)."""
+    """Steady-state model: the round interval is bounded below by the
+    slowest core's round (compute/transfer + its double-buffer handoffs)
+    and by the serialized DRAM port; total traffic equals the
+    single-stream compile's (partitioning moves no extra bytes — the
+    ping/pong copies alternate addresses, they don't duplicate traffic)."""
     specs = block_specs()
     hw = 12
     single = analyze(compile_network(specs, hw, hw, CFUSchedule.FUSED), "v3")
     ms = compile_network(specs, hw, hw, CFUSchedule.FUSED, streams=3)
     rep = analyze_multistream(ms, "v3")
     assert len(rep.per_stream) == 3
-    slowest = max(r.total_cycles for r in rep.per_stream)
+    # every core syncs on at least its in+out boundary, each round
+    assert all(r.n_dbuf_boundaries >= 2 for r in rep.per_stream)
+    assert rep.handoff_cycles == pytest.approx(
+        sum(r.handoff_cycles for r in rep.per_stream))
+    slowest = max(r.total_cycles + r.handoff_cycles
+                  for r in rep.per_stream)
     port = sum(r.dram_transfer_cycles for r in rep.per_stream)
     assert rep.interval_cycles == pytest.approx(max(slowest, port))
     assert rep.interval_cycles <= rep.latency_cycles
@@ -321,9 +370,199 @@ def test_multistream_timing_interval_and_contention():
         max(0.0, port - slowest))
     assert rep.dram_bytes == single.dram_bytes
     assert rep.throughput_speedup_vs_single > 1.0
-    # per-frame latency is the sum of the cores (they run back-to-back)
+    assert rep.pipeline_fill_cycles == pytest.approx(
+        2 * rep.interval_cycles)
+    # per-round latency is the sum of the cores (they run back-to-back)
     assert rep.latency_cycles == pytest.approx(
-        sum(r.total_cycles for r in rep.per_stream))
+        sum(r.total_cycles + r.handoff_cycles for r in rep.per_stream))
+
+
+# --- heterogeneous frame pipeline: handoff, batching, per-core PEs -----------
+
+
+def _ms_fixture(streams=2, hw=8, n_frames=4, seed=3):
+    specs = [("b0", DSCBlockSpec(cin=4, cmid=8, cout=6, stride=2)),
+             ("b1", DSCBlockSpec(cin=6, cmid=12, cout=5, stride=1)),
+             ("b2", DSCBlockSpec(cin=5, cmid=10, cout=7, stride=1))]
+    params = random_chain_params(jax.random.PRNGKey(seed), specs, hw,
+                                 seed=seed)
+    rng = np.random.default_rng(seed)
+    x_q = rng.integers(-128, 128, (n_frames, hw, hw, 4)).astype(np.int8)
+    single = compile_network(specs, hw, hw, CFUSchedule.FUSED)
+    ref = run_program(single, x_q, params)
+    ms = compile_network(specs, hw, hw, CFUSchedule.FUSED, streams=streams)
+    return ms, x_q, params, ref
+
+
+def test_handoff_violation_raises_not_stale_reads():
+    """A core may not read a boundary copy before its producer's round
+    retired: stepping the consumer first RAISES instead of silently
+    executing on stale (zero-initialized) data."""
+    ms, x_q, params, _ = _ms_fixture()
+    r = MultiStreamRunner(ms, x_q, params)
+    with pytest.raises(HandoffViolation, match="has not retired"):
+        r.step(1)
+    # ...and the producer may not run further than the two copies allow:
+    # groups 0 and 1 fill ping and pong, group 2 would clobber unconsumed
+    # ping data.
+    r.step(0)
+    r.step(0)
+    with pytest.raises(HandoffViolation, match="consumer has not drained"):
+        r.step(0)
+    # draining unblocks exactly one more producer round
+    r.step(1)
+    r.step(0)
+
+
+def test_handoff_legal_out_of_order_schedule_bit_exact():
+    """The double buffer admits schedules other than the canonical round
+    interleave (producer up to two groups ahead); any legal order reaches
+    the bit-exact result."""
+    ms, x_q, params, ref = _ms_fixture(n_frames=5)
+    r = MultiStreamRunner(ms, x_q, params)
+    # greedy: always step the most-starved ready core, producer-biased
+    while not r.done:
+        for core in (0, 1):
+            if r.ready(core):
+                r.step(core)
+                break
+        else:
+            pytest.fail("deadlock: no core ready")
+    np.testing.assert_array_equal(r.outputs(), ref)
+
+
+@pytest.mark.parametrize("batch", [1, 2, 3, 4])
+def test_multistream_batched_grouping_bit_exact(batch):
+    """Frame-level batching x layer pipelining: grouping B frames per
+    round (incl. ragged tails) never changes a single output byte."""
+    ms, x_q, params, ref = _ms_fixture(n_frames=4)
+    y = run_multistream(ms, x_q, params, batch=batch)
+    np.testing.assert_array_equal(y, ref, err_msg=f"batch={batch}")
+
+
+def test_pe_per_core_rides_in_the_streams():
+    """Explicit per-core PEConfigs land in each stream's own CFG_PE word,
+    change per-core timing, and never change values."""
+    specs = block_specs()
+    hw = 12
+    params = random_chain_params(jax.random.PRNGKey(2), specs, hw)
+    pes = [PEConfig(18, 18, 112), PEConfig(3, 3, 14)]
+    ms = compile_network(specs, hw, hw, CFUSchedule.FUSED, streams=2,
+                         pe_per_core=pes)
+    assert ms.meta["pe_per_core"] == pes and ms.meta["hetero"]
+    for p, pe in zip(ms.streams, pes):
+        assert p.instrs[0].op == "CFG_PE"
+        assert p.instrs[0].args == (pe.exp_pes, pe.dw_lanes,
+                                    pe.proj_engines)
+        assert p.meta["pe"] == pe
+    rep = analyze_multistream(ms, "v3")
+    # the big core is faster per op than the small core would be: swap
+    # the configs and the same segments time differently
+    swapped = compile_network(specs, hw, hw, CFUSchedule.FUSED, streams=2,
+                              pe_per_core=pes[::-1])
+    assert (rep.per_stream[0].total_cycles
+            != pytest.approx(
+                analyze_multistream(swapped, "v3")
+                .per_stream[0].total_cycles))
+    rng = np.random.default_rng(0)
+    x_q = rng.integers(-128, 128, (2, hw, hw, specs[0][1].cin)) \
+        .astype(np.int8)
+    homo = compile_network(specs, hw, hw, CFUSchedule.FUSED, streams=2)
+    np.testing.assert_array_equal(run_multistream(ms, x_q, params),
+                                  run_multistream(homo, x_q, params))
+
+
+def test_split_pe_budget_exact_and_floored():
+    """Budget splits are exact per axis (equal total MACs by construction)
+    with a one-engine floor per core."""
+    for fracs in ((1.0, 1.0), (1.25, 0.75), (1.5, 1.0, 0.5),
+                  (0.5, 0.75, 1.25, 1.5)):
+        total = (9 * len(fracs), 9 * len(fracs), 56 * len(fracs))
+        pes = split_pe_budget(total, fracs)
+        assert sum(p.exp_pes for p in pes) == total[0]
+        assert sum(p.dw_lanes for p in pes) == total[1]
+        assert sum(p.proj_engines for p in pes) == total[2]
+        assert all(p.exp_pes >= 1 and p.dw_lanes >= 1
+                   and p.proj_engines >= 1 for p in pes)
+    with pytest.raises(ValueError):
+        split_pe_budget((2, 9, 56), (1.0, 1.0, 1.0))   # 2 engines, 3 cores
+
+
+def test_auto_hetero_never_worse_than_homogeneous():
+    """The searched allocation space always contains the homogeneous
+    split, so the auto-hetero pick's modeled steady-state interval is
+    never worse at equal total engine budget."""
+    specs = block_specs()
+    hw = 24
+    base = PEConfig(5, 5, 28)
+    for streams in (2, 3):
+        cands = hetero_pe_candidates(streams, base)
+        assert cands[0] == [base] * streams       # homogeneous is in-space
+        homo = compile_network(specs, hw, hw, CFUSchedule.FUSED,
+                               pe=base, streams=streams)
+        het = compile_network(specs, hw, hw, CFUSchedule.FUSED, pe=base,
+                              streams=streams, pe_per_core=AUTO_HETERO)
+        pes = het.meta["pe_per_core"]
+        assert sum(p.exp_pes for p in pes) == base.exp_pes * streams
+        assert sum(p.dw_lanes for p in pes) == base.dw_lanes * streams
+        assert sum(p.proj_engines for p in pes) \
+            == base.proj_engines * streams
+        r_homo = analyze_multistream(homo, "v3")
+        r_het = analyze_multistream(het, "v3")
+        assert r_het.interval_cycles <= r_homo.interval_cycles * (1 + 1e-9)
+
+
+def test_timing_batch_amortizes_pipeline_fill():
+    """analyze(batch=B): per-frame traffic and iteration compute scale
+    with B, the per-phase pipeline fill does not — so per-frame cycles
+    fall with batch, approaching the fill-free bound."""
+    spec, hw = DSCBlockSpec(cin=8, cmid=48, cout=8, stride=1), 10
+    prog = compile_block(spec, hw, hw, CFUSchedule.FUSED)
+    r1 = analyze(prog, "v3", batch=1)
+    r4 = analyze(prog, "v3", batch=4)
+    assert r4.batch == 4
+    # weights load once; data traffic scales exactly
+    assert r4.weight_bytes == r1.weight_bytes
+    assert (r4.dram_bytes - r4.weight_bytes
+            == 4 * (r1.dram_bytes - r1.weight_bytes))
+    assert r4.macs == 4 * r1.macs
+    # fill amortizes: 4 frames in one walk beat 4 independent walks
+    assert r4.total_cycles < 4 * r1.total_cycles
+    assert r4.frames_per_cycle > r1.frames_per_cycle
+    # v1 has no fill -> nothing to amortize, scaling is exact
+    s1 = analyze(prog, "v1", batch=1)
+    s4 = analyze(prog, "v1", batch=4)
+    assert s4.total_cycles == pytest.approx(4 * s1.total_cycles)
+
+
+def test_multistream_report_throughput_and_energy_per_frame():
+    """analyze_multistream reports steady-state frames/cycle and
+    energy/frame, and composes fill + rounds for finite frame counts."""
+    specs = block_specs()
+    ms = compile_network(specs, 12, 12, CFUSchedule.FUSED, streams=2)
+    r1 = analyze_multistream(ms, "v3", batch=1)
+    r4 = analyze_multistream(ms, "v3", batch=4)
+    assert r1.frames_per_cycle == pytest.approx(1 / r1.interval_cycles)
+    assert r4.frames_per_cycle == pytest.approx(4 / r4.interval_cycles)
+    assert r4.frames_per_cycle > r1.frames_per_cycle   # fill amortized
+    assert r4.energy_per_frame_pj == pytest.approx(
+        r4.energy_pj["total"] / 4)
+    assert r4.energy_per_frame_pj < r1.energy_per_frame_pj
+    # 8 frames at batch 4 = 2 rounds through a 2-deep pipeline = 3 rounds
+    assert r4.cycles_for_frames(8) == pytest.approx(
+        3 * r4.interval_cycles)
+    assert r1.cycles_for_frames(1) == pytest.approx(
+        2 * r1.interval_cycles)
+
+
+def test_cfg_dbuf_and_cfg_core_roundtrip():
+    """The PR-4 CFG words assemble/disassemble and text-roundtrip like
+    every other opcode (the hypothesis layer covers arbitrary operands)."""
+    for ins in (isa.Instr("CFG_DBUF", (isa.REG_IN, isa.SPACE_DRAM,
+                                       0x123456, 0xABCDEF)),
+                isa.Instr("CFG_CORE", (2, 5))):
+        assert isa.disassemble(isa.assemble(ins)) == ins
+        assert isa.asm_to_instr(isa.instr_to_asm(ins)) == ins
 
 
 # --- ISA round trips ---------------------------------------------------------
@@ -523,6 +762,15 @@ def _vww_golden_actual():
     img = rng.standard_normal((80, 80, 3)).astype(np.float32)
     img_q = np.asarray(quant.quantize(img, net.qp_img))
     logits = run_program(fused, img_q, params)
+    # heterogeneous 2-core frame pipeline: FIXED tail-heavy allocation of
+    # the 2x-paper engine budget (deterministic, independent of the
+    # auto-hetero search so cost-model tuning can't silently move it)
+    het_pes = split_pe_budget((18, 18, 112), (0.75, 1.25))
+    ms = compile_vww_network(net_specs, 80, CFUSchedule.FUSED, streams=2,
+                             pe_per_core=het_pes)
+    ms_rep = analyze_multistream(ms, "v3")
+    ms_rep4 = analyze_multistream(ms, "v3", batch=4)
+    ms_logits = run_multistream(ms, img_q, params)
     return {
         "img_hw": 80,
         "fused": {
@@ -541,6 +789,16 @@ def _vww_golden_actual():
                        "sram_bytes": ls.sram_bytes,
                        "sram_buffer_bytes": ls.sram_buffer_bytes},
         "logits_q": np.asarray(logits).astype(int).tolist(),
+        "multistream_hetero_2core": {
+            "pe_per_core": [[p.exp_pes, p.dw_lanes, p.proj_engines]
+                            for p in het_pes],
+            "partition": ms.meta["partition"],
+            "interval_cycles_v3": ms_rep.interval_cycles,
+            "handoff_cycles": ms_rep.handoff_cycles,
+            "dram_bytes": ms_rep.dram_bytes,
+            "frames_per_cycle_b4": ms_rep4.frames_per_cycle,
+            "logits_q": np.asarray(ms_logits).astype(int).tolist(),
+        },
     }
 
 
@@ -575,3 +833,42 @@ def test_vww_golden_vectors():
         want["layer_dram"]["cycles"], rel=1e-9)
     assert got["layer_sram"]["cycles"] == pytest.approx(
         want["layer_sram"]["cycles"], rel=1e-9)
+    ms_got, ms_want = (got["multistream_hetero_2core"],
+                       want["multistream_hetero_2core"])
+    for key, val in ms_want.items():
+        if key in ("interval_cycles_v3", "frames_per_cycle_b4"):
+            assert ms_got[key] == pytest.approx(val, rel=1e-9), key
+        else:
+            assert ms_got[key] == val, key
+
+
+# The PR-3 fingerprint of the homogeneous streams=1 goldens. The golden
+# FILE may grow new sections (REGEN_GOLDEN), but these literals must stay
+# byte-identical — they anchor the Table III(A)-calibrated model (the
+# 27.4x/46.3x/59.3x progression rides on the fused v1/v2/v3 cycles).
+_PR3_GOLDEN_FINGERPRINT = {
+    ("fused", "cycles", "v1"): 12651351.200000323,
+    ("fused", "cycles", "v2"): 9442754.400000235,
+    ("fused", "cycles", "v3"): 8559034.400000181,
+    ("fused", "dram_bytes"): 221346,
+    ("fused", "macs"): 26788256,
+    ("fused", "n_instr"): 29946,
+    ("layer_dram", "cycles"): 46357051.19999898,
+    ("layer_dram", "dram_bytes"): 1097346,
+    ("layer_sram", "cycles"): 10430861.200000247,
+    ("layer_sram", "dram_bytes"): 221346,
+    ("logits_q",): [-90, -93],
+}
+
+
+def test_golden_streams1_byte_identical_to_pr3():
+    """Regression gate for the REGEN_GOLDEN flow itself: whatever new
+    sections land in the golden file, the homogeneous streams=1 entries
+    must remain exactly the PR-3 values."""
+    with open(GOLDEN_PATH) as f:
+        want = json.load(f)
+    for path, val in _PR3_GOLDEN_FINGERPRINT.items():
+        node = want
+        for k in path:
+            node = node[k]
+        assert node == val, path

@@ -6,6 +6,16 @@ encoded words; outputs must equal ``core.dsc.dsc_block_reference`` with
 EXACT integer equality, per image, at every batch size. The full VWW
 network gets the same treatment against ``forward_int8``.
 
+The cross-schedule x multi-stream MATRIX (`test_matrix_*`) is the
+equivalence claim as one table: every registered schedule (plus the
+``auto`` cost-model policy) x streams in {1, 2, 3} x homogeneous /
+heterogeneous per-core PE allocation x frame-group batch, each point
+executed from encoded words and asserted bit-exact vs the ``core/dsc.py``
+chained reference (chain matrix) and vs
+``models.mobilenetv2.forward_int8`` (VWW matrix). This is the CI fast
+tier (``-k matrix``): one parameterized sweep instead of scattered
+per-feature tests.
+
 Plain pytest, so it runs on every environment; the hypothesis-driven
 property layer over the same invariants lives in
 ``tests/test_cfu_properties.py`` (own module because importorskip is
@@ -21,10 +31,13 @@ import jax
 import numpy as np
 import pytest
 
-from repro.cfu.compiler import (CFUSchedule, compile_block, compile_network,
-                                compile_vww_network)
+from repro.cfu.compiler import (AUTO_HETERO, AUTO_SCHEDULE, CFUSchedule,
+                                MultiStreamProgram, compile_block,
+                                compile_network, compile_vww_network,
+                                schedule_names)
 from repro.cfu.executor import run_multistream, run_program
 from repro.cfu.network import vww_cfu_params
+from repro.cfu.timing import PEConfig
 from repro.core import dsc, quant
 from repro.core.dsc import DSCBlockSpec
 
@@ -130,6 +143,117 @@ def test_vww_network_bit_exact_vs_forward_int8(batch):
         y = run_program(prog, imgs_q if batch > 1 else imgs_q[0], params)
         np.testing.assert_array_equal(y, ref if batch > 1 else ref[0],
                                       err_msg=str(sched))
+
+
+# --- cross-schedule x multi-stream differential matrix -----------------------
+#
+# streams=1 x "hetero" runs the single stream under a non-paper PEConfig
+# (engine counts must never change values); streams>1 x "hetero" uses the
+# compiler's auto-hetero searched allocation.
+
+MATRIX_SCHEDULES = schedule_names(include_auto=True)
+MATRIX_STREAMS = (1, 2, 3)
+MATRIX_PE = ("homo", "hetero")
+
+
+def _matrix_chain(seed: int):
+    """A fixed seeded random 4-block chain, its params and reference."""
+    from repro.cfu.network import random_chain_params
+    rng = np.random.default_rng(seed)
+    hw, n_blocks = 6, 4
+    specs = []
+    for i in range(n_blocks):
+        cin = int(rng.integers(2, 6)) if i == 0 else specs[-1][1].cout
+        spec = DSCBlockSpec(cin=cin, cmid=cin * int(rng.integers(1, 4)),
+                            cout=int(rng.integers(2, 7)),
+                            stride=int(rng.choice([1, 2])))
+        specs.append((f"b{i}", spec))
+    params = random_chain_params(jax.random.PRNGKey(seed), specs, hw,
+                                 seed=seed)
+    frames = rng.standard_normal((3, hw, hw, specs[0][1].cin)) \
+        .astype(np.float32)
+    x_q = np.asarray(quant.quantize(frames, params[0].qp_in))
+    ref = x_q
+    for qp in params:
+        ref = np.stack([np.asarray(dsc.dsc_block_reference(x, qp))
+                        for x in ref])
+    return specs, params, hw, x_q, ref
+
+
+_MATRIX_CHAIN = functools.lru_cache(maxsize=None)(_matrix_chain)
+
+
+def _compile_matrix_point(compile_fn, sched, streams, pe_mode):
+    kw = {}
+    if streams == 1:
+        # non-paper engine counts: time changes, values must not
+        kw["pe"] = PEConfig(4, 12, 20) if pe_mode == "hetero" else None
+    else:
+        kw["streams"] = streams
+        kw["pe_per_core"] = AUTO_HETERO if pe_mode == "hetero" else None
+    return compile_fn(sched, **kw)
+
+
+@pytest.mark.parametrize("pe_mode", MATRIX_PE)
+@pytest.mark.parametrize("streams", MATRIX_STREAMS)
+@pytest.mark.parametrize("sched", MATRIX_SCHEDULES)
+def test_matrix_chain_bit_exact(sched, streams, pe_mode):
+    """Chain matrix: (schedule x streams x PE allocation x batch grouping)
+    == core/dsc.py chained reference, exact int equality per frame."""
+    specs, params, hw, x_q, ref = _MATRIX_CHAIN(31)
+
+    def compile_fn(s, **kw):
+        return compile_network(specs, hw, hw, s, **kw)
+
+    prog = _compile_matrix_point(compile_fn, sched, streams, pe_mode)
+    if isinstance(prog, MultiStreamProgram):
+        for batch in (1, 2):       # batching x pipelining, incl. ragged tail
+            y = run_multistream(prog, x_q, params, batch=batch)
+            np.testing.assert_array_equal(
+                y, ref, err_msg=f"{sched} streams={streams} {pe_mode} "
+                                f"batch={batch}")
+    else:
+        np.testing.assert_array_equal(
+            run_program(prog, x_q, params), ref,
+            err_msg=f"{sched} streams={streams} {pe_mode}")
+
+
+@pytest.mark.parametrize("pe_mode", MATRIX_PE)
+@pytest.mark.parametrize("streams", (1, 2))
+@pytest.mark.parametrize("sched", MATRIX_SCHEDULES)
+def test_matrix_vww_bit_exact_vs_forward_int8(sched, streams, pe_mode):
+    """VWW matrix: the COMPLETE inference under every (schedule x streams
+    x PE allocation x batch) == forward_int8's int8 logits per image."""
+    specs, params, img_hw, imgs_q, ref = _vww_matrix_net()
+
+    def compile_fn(s, **kw):
+        return compile_vww_network(specs, img_hw, s, **kw)
+
+    prog = _compile_matrix_point(compile_fn, sched, streams, pe_mode)
+    if isinstance(prog, MultiStreamProgram):
+        for batch in (1, 2):
+            y = run_multistream(prog, imgs_q, params, batch=batch)
+            np.testing.assert_array_equal(
+                y, ref, err_msg=f"{sched} streams={streams} {pe_mode} "
+                                f"batch={batch}")
+    else:
+        np.testing.assert_array_equal(
+            run_program(prog, imgs_q, params), ref,
+            err_msg=f"{sched} streams={streams} {pe_mode}")
+
+
+@functools.lru_cache(maxsize=None)
+def _vww_matrix_net():
+    from repro.models import mobilenetv2 as mnv2
+    img_hw = 12
+    net = mnv2.init_and_quantize(jax.random.PRNGKey(7), img_hw=img_hw)
+    specs = mnv2.block_specs()
+    params = vww_cfu_params(net)
+    rng = np.random.default_rng(7)
+    imgs = rng.standard_normal((3, img_hw, img_hw, 3)).astype(np.float32)
+    imgs_q = np.asarray(quant.quantize(imgs, net.qp_img))
+    ref = np.asarray(mnv2.forward_batch(imgs, net, return_quantized=True))
+    return specs, params, img_hw, imgs_q, ref
 
 
 def test_batched_equals_per_image_execution():

@@ -10,15 +10,30 @@ Properties:
   (channels, stride, expansion, batch) geometry, compiled under all
   schedules, executes bit-exactly vs ``core.dsc.dsc_block_reference``;
 * ISA totality — assemble/disassemble and text round-trips hold for every
-  opcode with arbitrary in-range operands, and arbitrary 64-bit words
-  either decode canonically or raise (never mis-parse silently);
-* compiled programs of any geometry round-trip through binary and text.
+  opcode with arbitrary in-range operands (the PR-4 CFG_CORE/CFG_DBUF
+  words ride in ``isa.FIELD_SPECS`` and are drawn like any other), and
+  arbitrary 64-bit words either decode canonically or raise (never
+  mis-parse silently);
+* compiled programs of any geometry round-trip through binary and text;
+* heterogeneity-aware partitions (PR 4) are contiguous, cover every op
+  exactly once, preserve the total engine budget per axis, and the
+  auto-hetero pick's modeled steady-state interval is never worse than
+  the homogeneous allocation of the same budget;
+* the double-buffer handoff protocol (PR 4) holds under ARBITRARY round
+  interleavings: any generated schedule either completes bit-exactly
+  (legal steps only) or raises ``HandoffViolation`` at the first illegal
+  step — stale reads/clobbers are structurally impossible.
 """
 
+import numpy as np
 import pytest
 
 from repro.cfu import isa
-from repro.cfu.compiler import CFUSchedule, compile_block
+from repro.cfu.compiler import (AUTO_HETERO, CFUSchedule, compile_block,
+                                compile_network, hetero_pe_candidates)
+from repro.cfu.executor import (HandoffViolation, MultiStreamRunner,
+                                run_program)
+from repro.cfu.timing import PEConfig, analyze_multistream
 from repro.core.dsc import DSCBlockSpec
 from tests.test_cfu_differential import _check_block_all_schedules
 
@@ -92,3 +107,91 @@ def test_property_compiled_program_roundtrips(cin, t, cout, stride, hw,
     assert isa.decode_words(isa.encode_program(prog)) == prog.instrs
     assert (isa.program_from_asm(isa.program_to_asm(prog)).instrs
             == prog.instrs)
+
+
+# --- heterogeneous frame pipeline (PR 4) -------------------------------------
+
+
+def _random_chain(rng, n_blocks, hw):
+    from repro.cfu.network import random_chain_params
+    import jax
+    specs = []
+    for i in range(n_blocks):
+        cin = int(rng.integers(2, 5)) if i == 0 else specs[-1][1].cout
+        specs.append((f"b{i}", DSCBlockSpec(
+            cin=cin, cmid=cin * int(rng.integers(1, 4)),
+            cout=int(rng.integers(2, 6)),
+            stride=int(rng.choice([1, 2])))))
+    seed = int(rng.integers(0, 1 << 30))
+    params = random_chain_params(jax.random.PRNGKey(seed), specs, hw,
+                                 seed=seed)
+    return specs, params
+
+
+@_SLOW
+@given(seed=st.integers(0, 10 ** 6), n_blocks=st.integers(2, 5),
+       streams=st.integers(2, 4))
+def test_property_hetero_partition_contiguous_covers_never_worse(
+        seed, n_blocks, streams):
+    """Auto-hetero partitions are contiguous, cover every op exactly once
+    in program order, conserve the engine budget per axis, and are never
+    worse (modeled steady-state interval) than the homogeneous allocation
+    of the same total MACs."""
+    rng = np.random.default_rng(seed)
+    hw = int(rng.integers(4, 7))
+    specs, params = _random_chain(rng, n_blocks, hw)
+    base = PEConfig(4, 4, 16)
+    het = compile_network(specs, hw, hw, CFUSchedule.FUSED, pe=base,
+                          streams=streams, pe_per_core=AUTO_HETERO)
+    homo = compile_network(specs, hw, hw, CFUSchedule.FUSED, pe=base,
+                           streams=streams)
+    n = len(het.streams)
+    # contiguity + exact cover: concatenated segments == the op chain
+    flat = [nm for seg in het.meta["partition"] for nm in seg]
+    assert flat == [nm for nm, _ in specs]
+    assert all(seg for seg in het.meta["partition"])
+    # budget conservation per axis
+    pes = het.meta["pe_per_core"]
+    assert sum(p.exp_pes for p in pes) == base.exp_pes * n
+    assert sum(p.dw_lanes for p in pes) == base.dw_lanes * n
+    assert sum(p.proj_engines for p in pes) == base.proj_engines * n
+    # homogeneous is candidate 0 of the search space
+    assert hetero_pe_candidates(n, base)[0] == [base] * n
+    r_het = analyze_multistream(het, "v3")
+    r_homo = analyze_multistream(homo, "v3")
+    assert (r_het.interval_cycles
+            <= r_homo.interval_cycles * (1 + 1e-9))
+
+
+@_SLOW
+@given(seed=st.integers(0, 10 ** 6), streams=st.integers(2, 3),
+       batch=st.integers(1, 3), data=st.data())
+def test_property_handoff_holds_for_arbitrary_interleavings(
+        seed, streams, batch, data):
+    """Any interleaving of core steps either respects the double-buffer
+    protocol (and ends bit-exact vs the single-stream compile) or raises
+    HandoffViolation at the first illegal step; legal schedules always
+    exist until every core retires (no deadlock)."""
+    rng = np.random.default_rng(seed)
+    hw = int(rng.integers(4, 7))
+    specs, params = _random_chain(rng, 3, hw)
+    n_frames = int(rng.integers(1, 6))
+    x_q = rng.integers(-128, 128, (n_frames, hw, hw, specs[0][1].cin)) \
+        .astype(np.int8)
+    single = compile_network(specs, hw, hw, CFUSchedule.FUSED)
+    ref = run_program(single, x_q, params)
+    ms = compile_network(specs, hw, hw, CFUSchedule.FUSED, streams=streams)
+    runner = MultiStreamRunner(ms, x_q, params, batch=batch)
+    n = len(ms.streams)
+    while not runner.done:
+        ready = [c for c in range(n) if runner.ready(c)]
+        blocked = [c for c in range(n) if not runner.ready(c)]
+        assert ready, "deadlock: double buffering must always admit a step"
+        # stepping ANY non-ready core must raise, and must not corrupt
+        # the run (we continue afterwards and still finish bit-exact)
+        if blocked and data.draw(st.booleans(), label="try_illegal"):
+            bad = data.draw(st.sampled_from(blocked), label="illegal_core")
+            with pytest.raises(HandoffViolation):
+                runner.step(bad)
+        runner.step(data.draw(st.sampled_from(ready), label="core"))
+    np.testing.assert_array_equal(runner.outputs(), ref)
