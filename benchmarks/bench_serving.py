@@ -1,0 +1,175 @@
+"""Request-level serving benchmark: dynamic batching vs SLO.
+
+The deployment-level counterpart of ``bench_scaling``'s device sweep:
+for a grid of device configs (single core, homogeneous 2-core pipeline,
+auto-hetero 2-core pipeline — all at the same total engine budget) and
+batching policies (immediate batch=1, fixed-size-with-timeout, adaptive
+window), find the MAX SUSTAINABLE QPS under a 30 ms p99 SLO at 300 MHz
+by bisection of full discrete-event simulations (``cfu.serve``), plus a
+p99-vs-offered-rate curve on the reference config.
+
+The REFERENCE GATE CONFIG is fixed (like bench_scaling's hetero gate):
+VWW at 24x24, 2 cores of a (4,4,21) engine budget allocated by the
+compiler's auto-hetero search — a compute-bound design point where the
+pipeline-fill amortization that batching buys is a double-digit share
+of the round, so dynamic batching has real throughput to win (at the
+paper's full arrays the pipeline is port-bound and batching is ~free of
+benefit — which the single-core/full-PE rows of the sweep show).
+
+``--gate-timeout-vs-immediate`` is the CI regression gate: on the
+reference config, fixed-size-with-timeout batching (cap 2, 2 ms) must
+sustain STRICTLY more QPS under the SLO than batch=1 immediate
+dispatch. ``--json`` writes the whole payload (CI artifact).
+
+    python -m benchmarks.run serving
+    python -m benchmarks.bench_serving --json results/serving.json \
+        --gate-timeout-vs-immediate
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from repro.cfu.serve.planner import (build_vww_service,
+                                     max_sustainable_qps, p99_curve)
+from repro.cfu.timing import PEConfig
+
+# The fixed gate geometry (see module docstring). 24x24 keeps every
+# bisection probe sub-second while staying compute-bound at this budget.
+GATE_IMG_HW = 24
+GATE_BASE_PE = PEConfig(4, 4, 21)       # per-core budget
+SLO_MS = 30.0                           # the gate SLO ...
+FREQ_MHZ = 300.0                        # ... at the paper's clock
+N_REQUESTS = 600
+TIMEOUT_MS = 2.0                        # the timeout policy's fill-wait
+SEED = 0
+
+POLICY_GRID = (
+    {"name": "immediate", "batch_cap": 1},
+    {"name": "timeout", "batch_cap": 2},
+    {"name": "adaptive", "batch_cap": 8},
+)
+
+
+def devices():
+    """The device grid: equal total engine budget, three organizations."""
+    total = PEConfig(2 * GATE_BASE_PE.exp_pes, 2 * GATE_BASE_PE.dw_lanes,
+                     2 * GATE_BASE_PE.proj_engines)
+    freq_hz = FREQ_MHZ * 1e6
+    return {
+        "single-core": build_vww_service(
+            GATE_IMG_HW, streams=1, pe=total, freq_hz=freq_hz),
+        "homo-2core": build_vww_service(
+            GATE_IMG_HW, streams=2, pe=GATE_BASE_PE, freq_hz=freq_hz),
+        "hetero-2core": build_vww_service(
+            GATE_IMG_HW, streams=2, pe=GATE_BASE_PE,
+            pe_per_core="auto-hetero", freq_hz=freq_hz),
+    }
+
+
+def sweep(report):
+    freq_hz = FREQ_MHZ * 1e6
+    slo_cycles = SLO_MS * 1e-3 * freq_hz
+    timeout_cycles = TIMEOUT_MS * 1e-3 * freq_hz
+    devs = devices()
+    report(f"# serving sweep: VWW {GATE_IMG_HW}x{GATE_IMG_HW}, SLO "
+           f"{SLO_MS:.0f} ms p99 @ {FREQ_MHZ:.0f} MHz, "
+           f"{N_REQUESTS} Poisson requests per probe")
+    report("device,policy,batch_cap,max_qps,ceiling_qps,p99_ms_at_max,"
+           "mean_batch,energy_uj_per_frame")
+    cells = []
+    for dev_label, svc in devs.items():
+        for spec in POLICY_GRID:
+            row = max_sustainable_qps(
+                svc, spec["name"], slo_cycles, n_requests=N_REQUESTS,
+                seed=SEED, batch_cap=spec["batch_cap"],
+                timeout_cycles=timeout_cycles)
+            row["device"] = dev_label
+            row["batch_cap"] = spec["batch_cap"]
+            cells.append(row)
+            at = row["at_max"]
+            report(f"{dev_label},{row['policy']},{spec['batch_cap']},"
+                   f"{row['max_qps']:.1f},"
+                   f"{row['service_ceiling_qps']:.1f},"
+                   f"{at.get('latency_p99_ms', float('nan')):.1f},"
+                   f"{at.get('mean_batch', 1.0):.2f},"
+                   f"{at.get('energy_per_frame_uj', float('nan')):.2f}")
+    # p99-vs-rate curves on the reference config (the README figure)
+    ref = devs["hetero-2core"]
+    ref_cells = [c for c in cells if c["device"] == "hetero-2core"]
+    top = 1.1 * max(c["max_qps"] for c in ref_cells)
+    rates = [round(top * f, 1) for f in (0.4, 0.6, 0.75, 0.9, 1.0)]
+    curves = {}
+    report("# p99 vs offered rate, hetero-2core reference:")
+    report("policy,rate_qps,p50_ms,p99_ms,mean_batch,energy_uj")
+    for spec in POLICY_GRID:
+        curves[spec["name"]] = p99_curve(
+            ref, spec["name"], rates, slo_cycles, n_requests=N_REQUESTS,
+            seed=SEED, batch_cap=spec["batch_cap"],
+            timeout_cycles=timeout_cycles)
+        for r in curves[spec["name"]]:
+            p50 = r["p50_ms"]
+            p99 = r["p99_ms"]
+            report(f"{spec['name']},{r['rate_qps']},"
+                   f"{p50 if p50 is None else round(p50, 1)},"
+                   f"{p99 if p99 is None else round(p99, 1)},"
+                   f"{r['mean_batch']:.2f},"
+                   f"{r['energy_per_frame_uj']:.2f}")
+    return {"img_hw": GATE_IMG_HW, "slo_ms": SLO_MS,
+            "freq_mhz": FREQ_MHZ, "n_requests": N_REQUESTS,
+            "base_pe": {"exp_pes": GATE_BASE_PE.exp_pes,
+                        "dw_lanes": GATE_BASE_PE.dw_lanes,
+                        "proj_engines": GATE_BASE_PE.proj_engines},
+            "cells": cells, "p99_curves": curves}
+
+
+def gate_numbers(result):
+    """The CI gate cells: timeout-cap2 vs immediate-cap1 on the
+    reference auto-hetero 2-core config."""
+    ref = {c["policy"]: c for c in result["cells"]
+           if c["device"] == "hetero-2core"}
+    return ref["timeout"]["max_qps"], ref["immediate"]["max_qps"]
+
+
+def run(report):
+    result = sweep(report)
+    to, im = gate_numbers(result)
+    margin = (f"{'+' if to > im else ''}{(to / im - 1) * 100:.1f}%"
+              if im > 0 else "immediate sustains NOTHING under the SLO")
+    report(f"# gate numbers (hetero-2core): timeout {to:.1f} QPS vs "
+           f"immediate {im:.1f} QPS ({margin})")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--json", default=None,
+                    help="write the sweep payload to this path "
+                         "(CI artifact)")
+    ap.add_argument("--gate-timeout-vs-immediate", action="store_true",
+                    help="fail unless timeout batching sustains strictly "
+                         "more QPS than batch=1 immediate under the "
+                         f"{SLO_MS:.0f} ms @ {FREQ_MHZ:.0f} MHz SLO on "
+                         "the reference hetero 2-core config")
+    args = ap.parse_args()
+    result = run(print)
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(result, f, indent=2, default=str)
+        print(f"# wrote {args.json}")
+    if args.gate_timeout_vs_immediate:
+        to, im = gate_numbers(result)
+        if not to > im:
+            raise SystemExit(
+                f"SERVING GATE FAILURE: timeout batching sustains "
+                f"{to:.1f} QPS, immediate batch=1 sustains {im:.1f} QPS "
+                f"— batching must win strictly on the reference hetero "
+                f"2-core config")
+        print(f"# serving gate OK: {to:.1f} > {im:.1f} QPS")
+
+
+if __name__ == "__main__":
+    main()

@@ -11,7 +11,8 @@ import argparse
 import time
 
 from benchmarks import (bench_cfu, bench_energy, bench_ffn_fusion,
-                        bench_scaling, bench_speedup, bench_traffic)
+                        bench_scaling, bench_serving, bench_speedup,
+                        bench_traffic)
 
 BENCHES = {
     "speedup": bench_speedup,        # Fig. 14 / Table III(A)
@@ -20,6 +21,7 @@ BENCHES = {
     "ffn_fusion": bench_ffn_fusion,  # Table VII / LM generalization
     "cfu": bench_cfu,                # Tables III/V/VI from the CFU simulator
     "scaling": bench_scaling,        # cycles-vs-PE sweep (full VWW stream)
+    "serving": bench_serving,        # request-level QPS-under-SLO frontier
 }
 
 

@@ -1,0 +1,148 @@
+"""Differential spot checks: the serving numbers stay anchored to the
+golden model.
+
+A queueing simulation is only as honest as its service model. The
+dispatcher therefore periodically takes a *sampled dispatched batch* and
+actually executes it: fresh random frames, quantized, driven through the
+compiled words by the golden executor (``run_program`` for one core,
+``MultiStreamRunner`` for the pipeline), and compared bit-exactly
+against ``models.mobilenetv2.forward_int8``. On top of bit-exactness it
+asserts the scheduler's FRAME ACCOUNTING matches the executor's:
+
+* the executor retires exactly the dispatched ``B`` frames (no ragged
+  padding leaking into the count),
+* the runner needed exactly the round structure the cost model priced —
+  ``ceil(B / B) = 1`` group per core, i.e. ``n_cores`` steps total, the
+  same rounds ``timing.MultiStreamReport.cycles_for_frames(B)`` charges
+  (one entry round + ``N - 1`` drain rounds).
+
+A failure raises :class:`SpotCheckError` — the simulation aborts rather
+than report throughput numbers the hardware model would not honour.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Tuple
+
+import numpy as np
+
+from repro.cfu.compiler import MultiStreamProgram
+from repro.cfu.executor import MultiStreamRunner, run_program
+
+
+class SpotCheckError(AssertionError):
+    """A sampled dispatched batch diverged from the golden executor."""
+
+
+@dataclasses.dataclass
+class SpotCheckRecord:
+    batch_id: int
+    size: int
+    bit_exact: bool
+    groups_executed: int
+    groups_modeled: int
+
+
+# sample(rng, n) -> (quantized input frames (n,H,W,C) int8,
+#                    expected quantized outputs per frame)
+SampleFn = Callable[[np.random.Generator, int],
+                    Tuple[np.ndarray, np.ndarray]]
+
+
+def vww_sampler(net, img_hw: int, img_ch: int = 3) -> SampleFn:
+    """Sampler for a ``compile_vww_network`` program: random float
+    images, quantized for the executor, referenced through the SAME
+    quantized network's int8 inference."""
+    from repro.core import quant
+    from repro.models import mobilenetv2 as mnv2
+
+    def sample(rng, n):
+        imgs = rng.standard_normal(
+            (n, img_hw, img_hw, img_ch)).astype(np.float32)
+        frames_q = np.asarray(quant.quantize(imgs, net.qp_img))
+        ref = np.asarray(mnv2.forward_batch(imgs, net,
+                                            return_quantized=True))
+        return frames_q, ref
+
+    return sample
+
+
+class DifferentialSpotCheck:
+    """Executes sampled dispatched batches bit-exactly.
+
+    ``every`` sets the sampling cadence (every k-th dispatched batch is
+    executed) and ``max_checks`` bounds the total executor work; both
+    keep the discrete-event loop fast while still pinning it to the
+    golden model.
+    """
+
+    def __init__(self, prog, params, sample: SampleFn,
+                 every: int = 8, max_checks: int = 3, seed: int = 0):
+        if every < 1:
+            raise ValueError(f"every must be >= 1, got {every}")
+        self.prog = prog
+        self.params = params
+        self.sample = sample
+        self.every = every
+        self.max_checks = max_checks
+        self.rng = np.random.default_rng(seed)
+        self.records: List[SpotCheckRecord] = []
+        self._dispatches = 0
+
+    @classmethod
+    def for_vww(cls, prog, net, params, img_hw: int, img_ch: int = 3,
+                **kw) -> "DifferentialSpotCheck":
+        return cls(prog, params, vww_sampler(net, img_hw, img_ch), **kw)
+
+    # --- sampling ---------------------------------------------------------
+
+    def wants(self, batch_id: int) -> bool:
+        """Deterministic cadence: every k-th dispatch, bounded total."""
+        self._dispatches += 1
+        return (len(self.records) < self.max_checks
+                and (self._dispatches - 1) % self.every == 0)
+
+    # --- the check itself -------------------------------------------------
+
+    def check(self, batch_id: int, size: int) -> SpotCheckRecord:
+        frames_q, ref = self.sample(self.rng, size)
+        groups_modeled = -(-size // size)          # ceil(B / batch=B) = 1
+        if isinstance(self.prog, MultiStreamProgram):
+            runner = MultiStreamRunner(self.prog, frames_q, self.params,
+                                       batch=size).run()
+            y = runner.outputs()
+            groups_executed = runner.n_groups
+            steps = int(sum(runner.next_group))
+            if steps != runner.n_groups * runner.n_cores:
+                raise SpotCheckError(
+                    f"batch {batch_id}: executor ran {steps} core-steps, "
+                    f"accounting wants "
+                    f"{runner.n_groups * runner.n_cores}")
+        else:
+            y = run_program(self.prog, frames_q, self.params)
+            groups_executed = 1
+        if y.shape[0] != size:
+            raise SpotCheckError(
+                f"batch {batch_id}: executor retired {y.shape[0]} frames "
+                f"for a dispatched group of {size}")
+        if groups_executed != groups_modeled:
+            raise SpotCheckError(
+                f"batch {batch_id}: executor needed {groups_executed} "
+                f"groups, the cost model priced {groups_modeled}")
+        bit_exact = bool(np.array_equal(y, ref))
+        rec = SpotCheckRecord(batch_id=batch_id, size=size,
+                              bit_exact=bit_exact,
+                              groups_executed=groups_executed,
+                              groups_modeled=groups_modeled)
+        self.records.append(rec)
+        if not bit_exact:
+            raise SpotCheckError(
+                f"batch {batch_id} (size {size}): executor output is NOT "
+                f"bit-exact vs the int8 reference inference")
+        return rec
+
+    def summary(self) -> dict:
+        return {"n_checks": len(self.records),
+                "all_bit_exact": all(r.bit_exact for r in self.records),
+                "checked_sizes": [r.size for r in self.records]}

@@ -1,0 +1,126 @@
+"""Serving metrics: latency percentiles, throughput, utilization, energy.
+
+Collected incrementally by the dispatcher (per arrival / dispatch /
+completion) and summarized once at the end. Latency is request
+completion minus request arrival — queueing + batching wait + the
+group's modeled pipeline traversal — in cycles, converted to ms at the
+configured clock. Utilization is per-core busy time over the simulated
+horizon (a 2-core pipeline serving stem-heavy groups shows the imbalance
+directly). Energy is frame-weighted over the dispatched groups, so
+bigger batches show their amortization (weights loaded once per group,
+leak scaled by occupancy).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    rid: int
+    t_arrival: float
+    t_dispatch: Optional[float] = None
+    t_complete: Optional[float] = None
+    batch_id: Optional[int] = None
+
+    @property
+    def latency(self) -> Optional[float]:
+        if self.t_complete is None:
+            return None
+        return self.t_complete - self.t_arrival
+
+
+@dataclasses.dataclass
+class BatchRecord:
+    bid: int
+    size: int
+    t_entry: float
+    t_complete: float
+    energy_pj: float
+    rids: List[int]
+
+
+class MetricsCollector:
+    def __init__(self, n_cores: int, freq_hz: float):
+        self.n_cores = n_cores
+        self.freq_hz = freq_hz
+        self.requests: List[RequestRecord] = []
+        self.batches: List[BatchRecord] = []
+        self.core_busy = [0.0] * n_cores
+        self.queue_trace: List[tuple] = []   # (time, depth) at each change
+
+    # --- recording --------------------------------------------------------
+
+    def on_arrival(self, rid: int, t: float, depth: int) -> None:
+        assert rid == len(self.requests), "rids must be dense and ordered"
+        self.requests.append(RequestRecord(rid=rid, t_arrival=t))
+        self.queue_trace.append((t, depth))
+
+    def on_dispatch(self, bid: int, rids: List[int], t_entry: float,
+                    t_complete: float, energy_pj: float,
+                    busy_cycles: List[float], depth: int) -> None:
+        self.batches.append(BatchRecord(
+            bid=bid, size=len(rids), t_entry=t_entry,
+            t_complete=t_complete, energy_pj=energy_pj, rids=list(rids)))
+        for rid in rids:
+            self.requests[rid].t_dispatch = t_entry
+            self.requests[rid].batch_id = bid
+        for i, b in enumerate(busy_cycles):
+            self.core_busy[i] += b
+        self.queue_trace.append((t_entry, depth))
+
+    def on_complete(self, rids: List[int], t: float) -> None:
+        for rid in rids:
+            self.requests[rid].t_complete = t
+
+    # --- summary ----------------------------------------------------------
+
+    def summary(self) -> Dict[str, object]:
+        lat = np.array([r.latency for r in self.requests
+                        if r.latency is not None])
+        served = int(lat.size)
+        n_arr = len(self.requests)
+        horizon = max((b.t_complete for b in self.batches),
+                      default=0.0)
+        ms = 1e3 / self.freq_hz
+        out: Dict[str, object] = {
+            "n_arrivals": n_arr,
+            "n_served": served,
+            "drained": served == n_arr,
+            "n_batches": len(self.batches),
+            "horizon_cycles": horizon,
+            "horizon_s": horizon / self.freq_hz,
+        }
+        if served:
+            pct = {p: float(np.percentile(lat, p)) for p in (50, 95, 99)}
+            out.update({
+                "latency_p50_cycles": pct[50],
+                "latency_p95_cycles": pct[95],
+                "latency_p99_cycles": pct[99],
+                "latency_p50_ms": pct[50] * ms,
+                "latency_p95_ms": pct[95] * ms,
+                "latency_p99_ms": pct[99] * ms,
+                "latency_mean_ms": float(lat.mean()) * ms,
+                "latency_max_ms": float(lat.max()) * ms,
+            })
+        if horizon > 0:
+            out["throughput_qps"] = served * self.freq_hz / horizon
+            out["utilization"] = [b / horizon for b in self.core_busy]
+        if self.batches:
+            sizes = np.array([b.size for b in self.batches])
+            frames = int(sizes.sum())
+            out["mean_batch"] = float(sizes.mean())
+            out["batch_hist"] = {
+                int(s): int(n) for s, n in
+                zip(*np.unique(sizes, return_counts=True))}
+            out["energy_per_frame_uj"] = float(
+                sum(b.energy_pj for b in self.batches) / frames / 1e6)
+        if self.queue_trace:
+            depths = np.array([d for _, d in self.queue_trace])
+            out["queue_depth_mean"] = float(depths.mean())
+            out["queue_depth_max"] = int(depths.max())
+        return out

@@ -1,0 +1,226 @@
+"""Capacity planning: max sustainable QPS under a latency SLO.
+
+``max_sustainable_qps`` answers the deployment question for ONE device
+config + policy: the highest Poisson arrival rate at which the simulated
+p99 latency still meets the SLO (and the queue drains), found by
+geometric bisection between a near-zero load and the device's saturated
+service ceiling. Every probe is a full seeded simulation, so queueing
+and batching-wait effects are in the number — not just the service-time
+ceiling.
+
+``plan_capacity`` sweeps it over a grid: arrival process x policy x
+device config (streams, per-core PE allocation, batch cap), emitting one
+JSON-able row per cell plus a p99-vs-rate curve for the winning cell —
+the figure a serving paper plots. ``build_vww_service`` compiles the
+device configs (timing needs no weights, so planning never touches
+params; the differential anchoring lives in the simulator's spot checks
+and in ``tests/test_cfu_serve.py``).
+
+Determinism: per-probe seeds are derived with ``zlib.crc32`` over the
+config labels (stable across processes, unlike ``hash``), so a planner
+run is exactly reproducible from its base seed.
+"""
+
+from __future__ import annotations
+
+import zlib
+from typing import Dict, List, Optional, Sequence
+
+from repro.cfu.serve.arrivals import DEFAULT_FREQ_HZ, make_arrivals
+from repro.cfu.serve.dispatcher import ServingSimulator
+from repro.cfu.serve.policies import make_policy
+from repro.cfu.serve.service import ServiceModel
+
+DEFAULT_SLO_MS = 30.0           # the CI gate's SLO: 30 ms @ 300 MHz
+DEFAULT_N_REQUESTS = 400
+
+
+def derive_seed(base: int, *labels) -> int:
+    """Stable sub-seed from a base seed + string-able labels."""
+    text = ":".join(str(x) for x in (base,) + labels)
+    return zlib.crc32(text.encode()) & 0x7FFFFFFF
+
+
+def build_vww_service(img_hw: int, streams: int = 1,
+                      pe=None, pe_per_core=None,
+                      schedule: str = "fused", pipeline: str = "v3",
+                      freq_hz: float = DEFAULT_FREQ_HZ,
+                      max_batch: int = 16,
+                      sram_port_bytes: Optional[int] = None,
+                      ) -> ServiceModel:
+    """Compile a full-VWW device config into a :class:`ServiceModel`."""
+    from repro.cfu.compiler import compile_vww_network
+    from repro.configs.vww import VWW
+    from repro.models.mobilenetv2 import block_specs
+    prog = compile_vww_network(block_specs(), img_hw, schedule,
+                               img_ch=VWW.img_ch, head_ch=VWW.head_ch,
+                               n_classes=VWW.n_classes, pe=pe,
+                               streams=streams, pe_per_core=pe_per_core,
+                               pipeline=pipeline)
+    return ServiceModel(prog, pipeline, freq_hz=freq_hz,
+                        max_batch=max_batch,
+                        sram_port_bytes=sram_port_bytes)
+
+
+def simulate(service: ServiceModel, policy_name: str, rate_qps: float,
+             n_requests: int = DEFAULT_N_REQUESTS, seed: int = 0,
+             arrival_kind: str = "poisson",
+             trace_path: Optional[str] = None,
+             slo_cycles: Optional[float] = None,
+             batch_cap: Optional[int] = None,
+             timeout_cycles: Optional[float] = None,
+             spot_check=None):
+    """One seeded simulation at a fixed rate (the planner's probe)."""
+    policy = make_policy(policy_name, service=service,
+                         batch_cap=batch_cap,
+                         timeout_cycles=timeout_cycles,
+                         slo_cycles=slo_cycles)
+    arrivals = make_arrivals(arrival_kind, rate_qps, n_requests,
+                             freq_hz=service.freq_hz, seed=seed,
+                             trace_path=trace_path)
+    sim = ServingSimulator(service, policy, arrivals,
+                           spot_check=spot_check)
+    res = sim.run()
+    res.summary["rate_qps"] = rate_qps
+    res.summary["arrival_kind"] = arrival_kind
+    res.summary["seed"] = seed
+    return res
+
+
+def _feasible(summary: Dict[str, object], slo_cycles: float) -> bool:
+    return bool(summary.get("drained")) and \
+        summary.get("latency_p99_cycles", float("inf")) <= slo_cycles
+
+
+def max_sustainable_qps(service: ServiceModel, policy_name: str,
+                        slo_cycles: float,
+                        n_requests: int = DEFAULT_N_REQUESTS,
+                        seed: int = 0, tol: float = 0.02,
+                        arrival_kind: str = "poisson",
+                        batch_cap: Optional[int] = None,
+                        timeout_cycles: Optional[float] = None,
+                        ) -> Dict[str, object]:
+    """Geometric bisection for the highest SLO-feasible arrival rate.
+
+    The bracket starts at [2% , 105%] of the device's saturated service
+    ceiling (the best fixed-batch rate the policy's cap allows); each
+    probe is one full simulation. Returns the frontier row: the max rate,
+    the summary AT that rate, and the probe ladder for inspection.
+    """
+    if arrival_kind == "trace":
+        raise ValueError("rate bisection over a fixed trace is "
+                         "meaningless — replay the trace with simulate()")
+    # the ceiling must price batches the policy can actually dispatch:
+    # read the cap off a throwaway policy so defaults stay in one place
+    cap = make_policy(policy_name, service=service,
+                      batch_cap=batch_cap,
+                      slo_cycles=slo_cycles).batch_cap
+    ceiling = max(service.service_rate_qps(b)
+                  for b in range(1, min(cap, service.max_batch) + 1))
+
+    def probe(rate: float):
+        s = derive_seed(seed, policy_name, f"{rate:.6f}")
+        return simulate(service, policy_name, rate,
+                        n_requests=n_requests, seed=s,
+                        arrival_kind=arrival_kind,
+                        slo_cycles=slo_cycles, batch_cap=batch_cap,
+                        timeout_cycles=timeout_cycles).summary
+
+    lo, hi = 0.02 * ceiling, 1.05 * ceiling
+    best_summary = probe(lo)
+    if not _feasible(best_summary, slo_cycles):
+        return {"policy": policy_name, "max_qps": 0.0,
+                "service_ceiling_qps": ceiling, "at_max": best_summary,
+                "probes": [{"rate_qps": lo, "feasible": False}]}
+    probes = [{"rate_qps": lo, "feasible": True}]
+    lo_qps = lo
+    while hi / lo_qps > 1 + tol:
+        mid = (lo_qps * hi) ** 0.5
+        s = probe(mid)
+        ok = _feasible(s, slo_cycles)
+        probes.append({"rate_qps": mid, "feasible": ok,
+                       "p99_ms": s.get("latency_p99_ms")})
+        if ok:
+            lo_qps, best_summary = mid, s
+        else:
+            hi = mid
+    return {"policy": policy_name, "max_qps": lo_qps,
+            "service_ceiling_qps": ceiling,
+            "slo_cycles": slo_cycles,
+            "at_max": best_summary, "probes": probes}
+
+
+def p99_curve(service: ServiceModel, policy_name: str,
+              rates: Sequence[float], slo_cycles: float,
+              n_requests: int = DEFAULT_N_REQUESTS, seed: int = 0,
+              batch_cap: Optional[int] = None,
+              timeout_cycles: Optional[float] = None,
+              ) -> List[Dict[str, object]]:
+    """p99 (and mean batch / energy) vs offered rate — the report figure."""
+    rows = []
+    for rate in rates:
+        s = simulate(service, policy_name, rate, n_requests=n_requests,
+                     seed=derive_seed(seed, "curve", policy_name,
+                                      f"{rate:.6f}"),
+                     slo_cycles=slo_cycles, batch_cap=batch_cap,
+                     timeout_cycles=timeout_cycles).summary
+        rows.append({
+            "rate_qps": rate,
+            "p50_ms": s.get("latency_p50_ms"),
+            "p99_ms": s.get("latency_p99_ms"),
+            "throughput_qps": s.get("throughput_qps"),
+            "mean_batch": s.get("mean_batch"),
+            "energy_per_frame_uj": s.get("energy_per_frame_uj"),
+            "drained": s.get("drained"),
+        })
+    return rows
+
+
+def plan_capacity(devices: Dict[str, ServiceModel],
+                  policies: Sequence[Dict[str, object]],
+                  slo_cycles: float,
+                  n_requests: int = DEFAULT_N_REQUESTS,
+                  seed: int = 0,
+                  curve_points: int = 6) -> Dict[str, object]:
+    """The full sweep: device config x policy -> max sustainable QPS.
+
+    ``policies`` rows are ``{"name": ..., "batch_cap": ..,
+    "timeout_cycles": ..}`` dicts (missing keys = policy defaults). The
+    result carries one frontier row per cell, the winning cell, and a
+    p99-vs-rate curve for the winner's device under every policy (the
+    comparison figure).
+    """
+    cells = []
+    for dev_label, service in devices.items():
+        for spec in policies:
+            row = max_sustainable_qps(
+                service, spec["name"], slo_cycles,
+                n_requests=n_requests,
+                seed=derive_seed(seed, dev_label, spec["name"]),
+                batch_cap=spec.get("batch_cap"),
+                timeout_cycles=spec.get("timeout_cycles"))
+            row["device"] = dev_label
+            row["device_info"] = service.describe()
+            cells.append(row)
+    best = max(cells, key=lambda r: r["max_qps"])
+    curves = {}
+    if best["max_qps"] > 0:      # nothing is SLO-feasible: no curve to plot
+        win_dev = devices[best["device"]]
+        top = 1.1 * max(r["max_qps"] for r in cells
+                        if r["device"] == best["device"])
+        rates = [top * (i + 1) / (curve_points + 1)
+                 for i in range(curve_points)]
+        for spec in policies:
+            curves[spec["name"]] = p99_curve(
+                win_dev, spec["name"], rates, slo_cycles,
+                n_requests=n_requests,
+                seed=derive_seed(seed, "curve", best["device"]),
+                batch_cap=spec.get("batch_cap"),
+                timeout_cycles=spec.get("timeout_cycles"))
+    return {"slo_cycles": slo_cycles, "n_requests": n_requests,
+            "cells": cells,
+            "best": {"device": best["device"],
+                     "policy": best["policy"],
+                     "max_qps": best["max_qps"]},
+            "p99_curves_device": best["device"],
+            "p99_curves": curves}

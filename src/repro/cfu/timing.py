@@ -111,6 +111,17 @@ The multi-stream model is no longer pure port contention:
   ``(N-1)·interval`` pipeline fill; ``cycles_for_frames(F)`` composes
   them, and ``frames_per_cycle`` / ``energy_per_frame_pj`` are the
   steady-state throughput and per-frame energy the benchmarks sweep.
+
+Batch-cost API + SRAM port width (PR 5)
+---------------------------------------
+The instruction walk is batch-independent, so ``BatchCostModel`` /
+``MultiStreamCostModel`` walk once and price ANY batch from the cached
+phases — ``analyze``/``analyze_multistream`` delegate to them, and the
+request-level serving simulator (``cfu.serve``) prices thousands of
+dispatched batches against them at event-loop speed. The scratch port
+is parameterized (``sram_port_bytes``, default the paper's 1 B/cycle —
+golden numbers byte-identical): a W-byte port divides SRAM transfer
+cycles by W without touching byte counts.
 """
 
 from __future__ import annotations
@@ -128,7 +139,13 @@ from repro.core.fusion import (C_DW, C_DWQ, C_EX_PER_IN_CH, C_EXQ, C_PR,
 
 # Memory-port costs (cycles per byte), see module docstring.
 CYC_PER_DRAM_BYTE = SW_CYCLES_PER_XFER_BYTE     # CPU-mediated off-chip port
-CYC_PER_SRAM_BYTE = 1.0                         # single-port on-chip scratch
+# On-chip scratch port width in bytes per cycle. The paper's scratch is a
+# single-port byte-wide SRAM (1 B/cycle); ``analyze(sram_port_bytes=W)``
+# prices a W-byte port instead (SRAM transfer cycles = bytes / W). The
+# default keeps every golden cycle number byte-identical: 1/1 == 1.0 and
+# the walker multiplies by exactly that constant.
+SRAM_PORT_BYTES = 1
+CYC_PER_SRAM_BYTE = 1.0 / SRAM_PORT_BYTES       # derived: default port
 
 # pJ per op / per byte (Horowitz ISSCC'14-derived, int8, ~28-40 nm class).
 # Canonical definitions — benchmarks/bench_energy.py imports these.
@@ -209,12 +226,17 @@ class TimingReport:
 
 
 class _Walker:
-    def __init__(self, pipeline: str, pe: Optional[PEConfig] = None):
+    def __init__(self, pipeline: str, pe: Optional[PEConfig] = None,
+                 sram_port_bytes: Optional[int] = None):
         if pipeline not in PIPELINES:
             raise ValueError(f"pipeline must be one of {PIPELINES}")
         self.pipeline = pipeline
         self.pe = pe or PEConfig()
         self.pe_locked = pe is not None      # analyze() override wins
+        w = sram_port_bytes if sram_port_bytes is not None else SRAM_PORT_BYTES
+        if w < 1:
+            raise ValueError(f"sram_port_bytes must be >= 1, got {w}")
+        self.cyc_per_sram_byte = 1.0 / w
         # the stream may override via CFG_PE unless the caller pinned it
         # CFG / base state
         self.cin = self.cmid = self.cout = 0
@@ -263,16 +285,20 @@ class _Walker:
         if new:
             seg[:] = True
             self.bytes_rw[space] += new
-            self.cur.transfer_cycles += new * _cyc_per_byte(space)
+            self.cur.transfer_cycles += new * self._cyc_per_byte(space)
             if space == isa.SPACE_DRAM:
-                self.cur.dram_transfer_cycles += new * _cyc_per_byte(space)
+                self.cur.dram_transfer_cycles += new * CYC_PER_DRAM_BYTE
 
     def _write(self, reg: int, n: int):
         space, _ = self.base[reg]
         self.bytes_rw[space] += n
-        self.cur.transfer_cycles += n * _cyc_per_byte(space)
+        self.cur.transfer_cycles += n * self._cyc_per_byte(space)
         if space == isa.SPACE_DRAM:
-            self.cur.dram_transfer_cycles += n * _cyc_per_byte(space)
+            self.cur.dram_transfer_cycles += n * CYC_PER_DRAM_BYTE
+
+    def _cyc_per_byte(self, space: int) -> float:
+        return (CYC_PER_DRAM_BYTE if space == isa.SPACE_DRAM
+                else self.cyc_per_sram_byte)
 
     # --- cycle helpers ------------------------------------------------------
 
@@ -439,9 +465,118 @@ class _Walker:
         self._end_phase()  # in case HALT was omitted
 
 
-def _cyc_per_byte(space: int) -> float:
-    return (CYC_PER_DRAM_BYTE if space == isa.SPACE_DRAM
-            else CYC_PER_SRAM_BYTE)
+class BatchCostModel:
+    """Price one compiled stream at any batch size without re-walking.
+
+    The instruction walk is batch-independent (every address is static),
+    so the walker runs ONCE at construction; :meth:`report` then scales
+    the per-frame phase terms for any ``batch`` — the aggregation is the
+    exact code ``analyze`` always ran, so reports are float-identical to
+    a fresh ``analyze(program, ..., batch=B)`` call. This is what lets a
+    request-level serving simulator (``cfu.serve``) price thousands of
+    dispatched batches against the calibrated model at event-loop speed.
+    """
+
+    def __init__(self, program: Program, pipeline: str = "v3",
+                 pe: Optional[PEConfig] = None,
+                 sram_port_bytes: Optional[int] = None):
+        w = _Walker(pipeline, pe=pe, sram_port_bytes=sram_port_bytes)
+        w.walk(program)
+        self._w = w
+        self._layout = program.meta["layout"]
+        self.pipeline = pipeline
+
+    def report(self, batch: int = 1) -> TimingReport:
+        if batch < 1:
+            raise ValueError(f"batch must be >= 1, got {batch}")
+        w = self._w
+        b = float(batch)
+        compute = sum(p.compute_cycles * b + p.fill_cycles for p in w.phases)
+        transfer = sum(p.transfer_cycles * b for p in w.phases)
+        total = sum(max(p.compute_cycles * b + p.fill_cycles,
+                        p.transfer_cycles * b) for p in w.phases)
+        dram_xfer = sum(p.dram_transfer_cycles * b for p in w.phases)
+        # weights are boot-resident: loaded once however many frames ride
+        # the data plane, so only the data share of DRAM traffic scales
+        dram = ((w.bytes_rw[isa.SPACE_DRAM] - w.weight_bytes) * batch
+                + w.weight_bytes)
+        sram = w.bytes_rw[isa.SPACE_SRAM] * batch
+        macs = w.macs * batch
+        e_mac = macs * E_MAC_INT8
+        e_dram = dram * E_DRAM_BYTE
+        e_sram = sram * E_SRAM_BYTE
+        n_pes = w.pe.exp_pes + w.pe.dw_lanes + w.pe.proj_engines
+        e_leak = n_pes * total * E_LEAK_PER_PE_CYCLE
+        return TimingReport(
+            pipeline=self.pipeline,
+            total_cycles=total,
+            compute_cycles=compute,
+            transfer_cycles=transfer,
+            stall_cycles=total - compute,
+            dram_bytes=int(dram),
+            sram_bytes=int(sram),
+            weight_bytes=int(w.weight_bytes),
+            macs=int(macs),
+            energy_pj={"mac": e_mac, "dram": e_dram, "sram": e_sram,
+                       "leak": e_leak,
+                       "total": e_mac + e_dram + e_sram + e_leak},
+            sram_buffer_bytes=int(self._layout.sram_size),
+            n_phases=len(w.phases),
+            dram_transfer_cycles=dram_xfer,
+            batch=batch,
+            handoff_cycles=HANDOFF_SYNC_CYCLES * len(w.dbuf_bases),
+            n_dbuf_boundaries=len(w.dbuf_bases),
+        )
+
+
+class MultiStreamCostModel:
+    """Batch-cost model of a ``compiler.MultiStreamProgram``: every stream
+    walked once, any batch priced from the cached walks (float-identical
+    to ``analyze_multistream(ms, ..., batch=B)``)."""
+
+    def __init__(self, ms, pipeline: str = "v3",
+                 pe: Optional[PEConfig] = None,
+                 sram_port_bytes: Optional[int] = None):
+        self.models = [BatchCostModel(p, pipeline, pe=pe,
+                                      sram_port_bytes=sram_port_bytes)
+                       for p in ms.streams]
+        self.pipeline = pipeline
+
+    @property
+    def n_cores(self) -> int:
+        return len(self.models)
+
+    def report(self, batch: int = 1) -> MultiStreamReport:
+        reps = [m.report(batch) for m in self.models]
+        latency = sum(r.total_cycles + r.handoff_cycles for r in reps)
+        slowest = max(r.total_cycles + r.handoff_cycles for r in reps)
+        port = sum(r.dram_transfer_cycles for r in reps)
+        interval = max(slowest, port)
+        handoff = sum(r.handoff_cycles for r in reps)
+        energy: Dict[str, float] = {}
+        for r in reps:
+            for k, v in r.energy_pj.items():
+                energy[k] = energy.get(k, 0.0) + v
+        # per-stream leak was n_pes_i * total_i * C; steady state charges
+        # n_pes_i * interval instead (leak_i / total_i recovers the rate).
+        leak = sum(r.energy_pj["leak"] / r.total_cycles
+                   for r in reps if r.total_cycles) * interval
+        energy["total"] += leak - energy.get("leak", 0.0)
+        energy["leak"] = leak
+        return MultiStreamReport(
+            pipeline=self.pipeline,
+            per_stream=reps,
+            latency_cycles=latency,
+            interval_cycles=interval,
+            dram_contention_cycles=max(0.0, interval - slowest),
+            dram_bytes=sum(r.dram_bytes for r in reps),
+            sram_bytes=sum(r.sram_bytes for r in reps),
+            macs=sum(r.macs for r in reps),
+            energy_pj=energy,
+            batch=batch,
+            handoff_cycles=handoff,
+            pipeline_fill_cycles=(len(reps) - 1) * interval,
+        )
 
 
 @dataclasses.dataclass
@@ -502,53 +637,33 @@ class MultiStreamReport:
 
 def analyze_multistream(ms, pipeline: str = "v3",
                         pe: Optional[PEConfig] = None,
-                        batch: int = 1) -> MultiStreamReport:
+                        batch: int = 1,
+                        sram_port_bytes: Optional[int] = None,
+                        ) -> MultiStreamReport:
     """Walk every stream of a ``compiler.MultiStreamProgram``.
 
     Each stream is priced under its OWN CFG_PE word (per-core PE configs
     ride in the streams); ``pe=`` overrides all of them at once. ``batch``
     is the per-round frame-group size of the batched frame pipeline
     (see ``analyze``): totals are per round, i.e. per ``batch`` frames.
+    ``sram_port_bytes`` widens every core's scratch port (see ``analyze``).
 
     Energy: the dynamic terms (MAC/DRAM/SRAM) sum over the streams, but
     the static term is re-priced for the steady state the report models —
     EVERY core leaks for the whole per-round interval, including its
     idle/stall share, so extra cores are never energetically free.
+
+    Repeated what-if pricing of the SAME program at many batch sizes
+    should build a :class:`MultiStreamCostModel` once instead.
     """
-    reps = [analyze(p, pipeline, pe=pe, batch=batch) for p in ms.streams]
-    latency = sum(r.total_cycles + r.handoff_cycles for r in reps)
-    slowest = max(r.total_cycles + r.handoff_cycles for r in reps)
-    port = sum(r.dram_transfer_cycles for r in reps)
-    interval = max(slowest, port)
-    handoff = sum(r.handoff_cycles for r in reps)
-    energy: Dict[str, float] = {}
-    for r in reps:
-        for k, v in r.energy_pj.items():
-            energy[k] = energy.get(k, 0.0) + v
-    # per-stream leak was n_pes_i * total_i * C; steady state charges
-    # n_pes_i * interval instead (leak_i / total_i recovers the rate).
-    leak = sum(r.energy_pj["leak"] / r.total_cycles
-               for r in reps if r.total_cycles) * interval
-    energy["total"] += leak - energy.get("leak", 0.0)
-    energy["leak"] = leak
-    return MultiStreamReport(
-        pipeline=pipeline,
-        per_stream=reps,
-        latency_cycles=latency,
-        interval_cycles=interval,
-        dram_contention_cycles=max(0.0, interval - slowest),
-        dram_bytes=sum(r.dram_bytes for r in reps),
-        sram_bytes=sum(r.sram_bytes for r in reps),
-        macs=sum(r.macs for r in reps),
-        energy_pj=energy,
-        batch=batch,
-        handoff_cycles=handoff,
-        pipeline_fill_cycles=(len(reps) - 1) * interval,
-    )
+    return MultiStreamCostModel(ms, pipeline, pe=pe,
+                                sram_port_bytes=sram_port_bytes
+                                ).report(batch)
 
 
 def analyze(program: Program, pipeline: str = "v3",
-            pe: Optional[PEConfig] = None, batch: int = 1) -> TimingReport:
+            pe: Optional[PEConfig] = None, batch: int = 1,
+            sram_port_bytes: Optional[int] = None) -> TimingReport:
     """Walk one compiled program and report cycles/traffic/energy.
 
     ``pe`` overrides the stream's CFG_PE engine counts (what-if analysis
@@ -559,46 +674,17 @@ def analyze(program: Program, pipeline: str = "v3",
     dynamic energy scale with B; each phase's pipeline-fill cycles are
     paid once, so throughput per frame improves with batch. All totals
     (cycles, bytes, energy) are for the whole batch.
+
+    ``sram_port_bytes`` widens the on-chip scratch port (bytes moved per
+    cycle; default ``SRAM_PORT_BYTES`` = 1, the paper's byte-wide
+    single-port scratch, which keeps all golden cycle numbers
+    byte-identical). Byte COUNTS never change — only the cycles the SRAM
+    share of each phase's transfer takes, so a wider port only helps
+    where a phase is scratch-bound.
+
+    Repeated what-if pricing of the SAME program at many batch sizes
+    should build a :class:`BatchCostModel` once instead (one walk, any
+    batch) — this function re-walks per call.
     """
-    if batch < 1:
-        raise ValueError(f"batch must be >= 1, got {batch}")
-    w = _Walker(pipeline, pe=pe)
-    w.walk(program)
-    b = float(batch)
-    compute = sum(p.compute_cycles * b + p.fill_cycles for p in w.phases)
-    transfer = sum(p.transfer_cycles * b for p in w.phases)
-    total = sum(max(p.compute_cycles * b + p.fill_cycles,
-                    p.transfer_cycles * b) for p in w.phases)
-    dram_xfer = sum(p.dram_transfer_cycles * b for p in w.phases)
-    # weights are boot-resident: loaded once however many frames ride the
-    # data plane, so only the data share of DRAM traffic scales with batch
-    dram = ((w.bytes_rw[isa.SPACE_DRAM] - w.weight_bytes) * batch
-            + w.weight_bytes)
-    sram = w.bytes_rw[isa.SPACE_SRAM] * batch
-    macs = w.macs * batch
-    e_mac = macs * E_MAC_INT8
-    e_dram = dram * E_DRAM_BYTE
-    e_sram = sram * E_SRAM_BYTE
-    n_pes = w.pe.exp_pes + w.pe.dw_lanes + w.pe.proj_engines
-    e_leak = n_pes * total * E_LEAK_PER_PE_CYCLE
-    layout = program.meta["layout"]
-    return TimingReport(
-        pipeline=pipeline,
-        total_cycles=total,
-        compute_cycles=compute,
-        transfer_cycles=transfer,
-        stall_cycles=total - compute,
-        dram_bytes=int(dram),
-        sram_bytes=int(sram),
-        weight_bytes=int(w.weight_bytes),
-        macs=int(macs),
-        energy_pj={"mac": e_mac, "dram": e_dram, "sram": e_sram,
-                   "leak": e_leak,
-                   "total": e_mac + e_dram + e_sram + e_leak},
-        sram_buffer_bytes=int(layout.sram_size),
-        n_phases=len(w.phases),
-        dram_transfer_cycles=dram_xfer,
-        batch=batch,
-        handoff_cycles=HANDOFF_SYNC_CYCLES * len(w.dbuf_bases),
-        n_dbuf_boundaries=len(w.dbuf_bases),
-    )
+    return BatchCostModel(program, pipeline, pe=pe,
+                          sram_port_bytes=sram_port_bytes).report(batch)

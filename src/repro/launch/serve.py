@@ -4,6 +4,13 @@ image classification (MobileNetV2, the paper's own deployment).
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-14b --smoke \
         --batch 4 --prompt-len 32 --gen 16
     PYTHONPATH=src python -m repro.launch.serve --mobilenet --batch 8
+
+``--mobilenet`` measures the JAX-backend wall-clock throughput of the
+int8 network across batch sizes (one jitted forward, traced once per
+shape). For REQUEST-level serving of the same network on the simulated
+CFU accelerator — arrival processes, dynamic batching policies, p99
+latency SLOs, max sustainable QPS — use ``python -m
+repro.launch.serve_cfu`` (the ``cfu.serve`` discrete-event simulator).
 """
 
 from __future__ import annotations
@@ -67,30 +74,47 @@ def serve_lm(args):
 
 
 def serve_mobilenet(args):
+    """Batch-size throughput sweep of the int8 network on the JAX backend
+    (the CFU-simulated serving path lives in repro.launch.serve_cfu)."""
     from repro.core.fusion import Schedule
     from repro.models import mobilenetv2 as mnv2
     net = mnv2.init_and_quantize(jax.random.PRNGKey(args.seed), img_hw=80)
     rng = np.random.default_rng(args.seed)
     imgs = rng.standard_normal((args.batch, 80, 80, 3)).astype(np.float32)
+    # ONE jitted forward reused across the whole sweep: jax.jit caches
+    # compiled traces per input shape, so each batch size traces exactly
+    # once (warmup call) — re-wrapping jax.jit inside the loop would
+    # throw that cache away and re-trace per size.
     fwd = jax.jit(lambda im: mnv2.forward_batch(
         im, net, schedule=Schedule.V3_INTRA_STAGE))
-    logits = fwd(imgs)
-    logits.block_until_ready()
-    t0 = time.perf_counter()
-    logits = fwd(imgs)
-    logits.block_until_ready()
-    dt = time.perf_counter() - t0
-    preds = np.argmax(np.asarray(logits), axis=-1)
-    print(f"[serve] MobileNetV2 int8 (fused v3 schedule): batch "
-          f"{args.batch} in {dt * 1e3:.1f} ms "
-          f"({args.batch / dt:.1f} img/s); preds={preds.tolist()}")
+    sizes = sorted({1 << i for i in range(args.batch.bit_length())
+                    if 1 << i <= args.batch} | {args.batch})
+    preds = None
+    for b in sizes:
+        batch = imgs[:b]
+        fwd(batch).block_until_ready()        # trace + warm this shape
+        t0 = time.perf_counter()
+        logits = fwd(batch)
+        logits.block_until_ready()
+        dt = time.perf_counter() - t0
+        preds = np.argmax(np.asarray(logits), axis=-1)
+        print(f"[serve] MobileNetV2 int8 (fused v3 schedule): batch "
+              f"{b} in {dt * 1e3:.1f} ms ({b / dt:.1f} img/s)")
+    print(f"[serve] preds (batch {sizes[-1]}): {preds.tolist()}")
+    print("[serve] request-level serving on the simulated CFU: "
+          "python -m repro.launch.serve_cfu --help")
     return preds
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=registry.ARCH_NAMES)
-    ap.add_argument("--mobilenet", action="store_true")
+    ap.add_argument("--mobilenet", action="store_true",
+                    help="batch-size throughput sweep of the int8 "
+                         "MobileNetV2-VWW network on the JAX backend; "
+                         "for request-level serving on the simulated CFU "
+                         "(arrivals, batching policies, latency SLOs) "
+                         "see python -m repro.launch.serve_cfu")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
