@@ -1,0 +1,202 @@
+"""Perf-regression gate: consolidated key metrics vs a committed baseline.
+
+    python -m benchmarks.check_regression                    # compare
+    python -m benchmarks.check_regression --update-baseline  # re-pin
+
+Collects the repo's load-bearing performance fingerprints into ONE flat
+payload — the paper's block-3 v1/v2/v3 speedup progression (27.4x /
+46.3x / 59.3x), the VWW fused-schedule cycle/byte/MAC counts from the
+CFU cost model, the 2-core auto-hetero frame-pipeline throughput at the
+serving gate geometry, and the serving simulator's service ceiling plus
+one fixed-rate seeded simulation — writes it to
+``results/perf_baseline.json``, and compares it against the committed
+``benchmarks/perf_baseline.json``:
+
+* **exact keys** (byte counts, MAC counts, instruction counts, batch
+  counts, speedup ratios of the calibrated model) must match bit-for-bit
+  — they are architectural invariants, not measurements;
+* **cycle/QPS/latency keys** get an explicit relative tolerance
+  (``CYCLE_TOL`` = 2%) — and the gate is symmetric: an unexplained
+  *improvement* is also a divergence (fingerprints move only with a
+  deliberate ``--update-baseline`` in the same change).
+
+Everything here is a deterministic model/simulator quantity (no
+wall-clock), so CI flake is structurally impossible: a mismatch means
+the performance model changed. Exit status is the CI contract: 0 clean,
+1 on any divergence or a missing baseline.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+BASELINE_PATH = os.path.join(os.path.dirname(__file__),
+                             "perf_baseline.json")
+RESULTS_PATH = os.path.join("results", "perf_baseline.json")
+
+CYCLE_TOL = 0.02       # relative, for cycles / QPS / latency keys
+
+# Leaf-key suffixes that must match exactly (counts, not measurements).
+EXACT_SUFFIXES = ("_bytes", "macs", "n_instr", "n_batches", "n_served",
+                  "batch", "n_cores", "img_hw")
+
+# Geometry of the measured configs (mirrors benchmarks/bench_serving.py's
+# gate: compute-bound 2-core budget where batching/pipelining matter).
+IMG_HW = 24
+BASE_PE = (4, 4, 21)
+FREQ_MHZ = 300.0
+SERVE_RATE_QPS = 150.0
+SERVE_REQUESTS = 200
+SEED = 0
+
+
+def collect() -> dict:
+    """Compute every fingerprint fresh (deterministic, no wall-clock)."""
+    from repro.cfu.report import PAPER_LAYERS
+    from repro.cfu.serve.planner import build_vww_service, simulate
+    from repro.cfu.timing import PEConfig, analyze, analyze_multistream
+    from repro.core.fusion import speedup_table
+
+    # 1) the paper's Table III(A) progression on block 3 (calibrated
+    #    model — the 27.4x/46.3x/59.3x headline)
+    spec3, hw3 = {n: (s, hw) for n, s, hw in PAPER_LAYERS}["3rd"]
+    tbl = speedup_table(spec3, hw3, hw3)
+    block3 = {f"speedup_{s}": round(tbl[s].speedup_vs_v0, 6)
+              for s in ("v1", "v2", "v3")}
+    block3["cycles_v3"] = tbl["v3"].cycles
+
+    # 2) VWW fused-schedule fingerprints from the CFU compiler + cost
+    #    model (cycles per pipelining mode, bytes, MACs, stream length)
+    from repro.cfu.compiler import compile_vww_network
+    from repro.configs.vww import VWW
+    from repro.models.mobilenetv2 import block_specs
+    prog = compile_vww_network(block_specs(), IMG_HW, "fused",
+                               img_ch=VWW.img_ch, head_ch=VWW.head_ch,
+                               n_classes=VWW.n_classes)
+    vww = {"img_hw": IMG_HW, "n_instr": len(prog)}
+    for pl in ("v1", "v2", "v3"):
+        vww[f"cycles_{pl}"] = analyze(prog, pl).total_cycles
+    rep = analyze(prog, "v3")
+    vww.update(dram_bytes=rep.dram_bytes, sram_bytes=rep.sram_bytes,
+               weight_bytes=rep.weight_bytes, macs=rep.macs)
+
+    # 3) 2-core auto-hetero frame pipeline at the gate budget
+    pe = PEConfig(*BASE_PE)
+    ms = compile_vww_network(block_specs(), IMG_HW, "fused",
+                             img_ch=VWW.img_ch, head_ch=VWW.head_ch,
+                             n_classes=VWW.n_classes, pe=pe, streams=2,
+                             pe_per_core="auto-hetero")
+    msr = analyze_multistream(ms, "v3", batch=4)
+    multicore = {"interval_cycles": msr.interval_cycles,
+                 "frames_per_cycle": msr.frames_per_cycle,
+                 "handoff_cycles": msr.handoff_cycles,
+                 "dram_bytes": msr.dram_bytes}
+
+    # 4) serving: the device's saturated service ceiling and one seeded
+    #    fixed-rate simulation (queueing + batching effects included)
+    service = build_vww_service(IMG_HW, streams=2, pe=pe,
+                                pe_per_core="auto-hetero",
+                                freq_hz=FREQ_MHZ * 1e6)
+    ceiling = max(service.service_rate_qps(b) for b in range(1, 9))
+    res = simulate(service, "timeout", SERVE_RATE_QPS,
+                   n_requests=SERVE_REQUESTS, seed=SEED)
+    s = res.summary
+    serving = {"service_ceiling_qps": ceiling,
+               "rate_qps": SERVE_RATE_QPS,
+               "n_served": s["n_served"],
+               "n_batches": s["n_batches"],
+               "throughput_qps": s.get("throughput_qps", 0.0),
+               "latency_p99_ms": s.get("latency_p99_ms", 0.0)}
+
+    return {"block3": block3, "vww_fused": vww, "multicore": multicore,
+            "serving": serving}
+
+
+def _leaves(d: dict, prefix=""):
+    for k, v in d.items():
+        path = f"{prefix}.{k}" if prefix else k
+        if isinstance(v, dict):
+            yield from _leaves(v, path)
+        else:
+            yield path, v
+
+
+def compare(baseline: dict, current: dict, tol: float = CYCLE_TOL):
+    """Every divergence as (path, baseline, current, kind) rows."""
+    base = dict(_leaves(baseline))
+    cur = dict(_leaves(current))
+    rows = []
+    for path in sorted(set(base) | set(cur)):
+        if path not in base:
+            rows.append((path, None, cur[path], "missing-in-baseline"))
+            continue
+        if path not in cur:
+            rows.append((path, base[path], None, "missing-in-current"))
+            continue
+        b, c = base[path], cur[path]
+        if path.endswith(EXACT_SUFFIXES) or path.split(".")[-1].startswith(
+                "speedup_"):
+            if b != c:
+                rows.append((path, b, c, "exact-mismatch"))
+        else:
+            ref = max(abs(b), abs(c), 1e-12)
+            if abs(b - c) / ref > tol:
+                rows.append((path, b, c, f"beyond-{tol:.0%}"))
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__.splitlines()[0],
+        formatter_class=argparse.ArgumentDefaultsHelpFormatter)
+    ap.add_argument("--baseline", default=BASELINE_PATH,
+                    help="committed baseline to compare against")
+    ap.add_argument("--out", default=RESULTS_PATH,
+                    help="where the freshly measured payload is written")
+    ap.add_argument("--tol", type=float, default=CYCLE_TOL,
+                    help="relative tolerance for cycle/QPS/latency keys")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="overwrite the committed baseline with the "
+                         "current measurements (deliberate re-pin)")
+    args = ap.parse_args(argv)
+
+    print("# collecting perf fingerprints (deterministic model runs)")
+    current = collect()
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(current, f, indent=2, sort_keys=True)
+    print(f"# wrote {args.out}")
+
+    if args.update_baseline:
+        with open(args.baseline, "w") as f:
+            json.dump(current, f, indent=2, sort_keys=True)
+        print(f"# baseline re-pinned -> {args.baseline}")
+        return 0
+
+    if not os.path.exists(args.baseline):
+        print(f"# ERROR: no committed baseline at {args.baseline} — "
+              f"run with --update-baseline and commit it", file=sys.stderr)
+        return 1
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    rows = compare(baseline, current, tol=args.tol)
+    if rows:
+        print(f"# PERF REGRESSION GATE: {len(rows)} divergence(s) vs "
+              f"{args.baseline}", file=sys.stderr)
+        for path, b, c, kind in rows:
+            print(f"#   {path}: baseline={b} current={c} [{kind}]",
+                  file=sys.stderr)
+        print("# if intentional, re-pin with --update-baseline and "
+              "commit the new baseline", file=sys.stderr)
+        return 1
+    n = len(list(_leaves(current)))
+    print(f"# perf gate OK: {n} fingerprints within tolerance "
+          f"(cycles/QPS {args.tol:.0%}, counts exact)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

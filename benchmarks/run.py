@@ -5,10 +5,21 @@
 
 Output is CSV-ish lines (comment rows start with '#') so downstream
 tooling can parse it; see EXPERIMENTS.md for the interpreted tables.
+
+A failing sub-bench no longer aborts the harness: every requested bench
+runs, per-bench status (ok/failed + runtime) is collected into a
+consolidated ``results/index.json`` manifest — alongside an inventory of
+every artifact currently under ``results/`` — and the process exits
+non-zero if ANY bench failed, so CI reports the full picture instead of
+stopping at the first crash.
 """
 
 import argparse
+import json
+import os
+import sys
 import time
+import traceback
 
 from benchmarks import (bench_cfu, bench_energy, bench_ffn_fusion,
                         bench_scaling, bench_serving, bench_speedup,
@@ -24,17 +35,56 @@ BENCHES = {
     "serving": bench_serving,        # request-level QPS-under-SLO frontier
 }
 
+RESULTS_DIR = "results"
+INDEX_PATH = os.path.join(RESULTS_DIR, "index.json")
+
+
+def _artifact_inventory() -> list:
+    """Everything currently under results/ (path + size), sorted."""
+    rows = []
+    for root, _, files in os.walk(RESULTS_DIR):
+        for name in sorted(files):
+            path = os.path.join(root, name)
+            rows.append({"path": path.replace(os.sep, "/"),
+                         "bytes": os.path.getsize(path)})
+    return sorted(rows, key=lambda r: r["path"])
+
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("only", nargs="?", choices=list(BENCHES))
     args = ap.parse_args()
     todo = [args.only] if args.only else list(BENCHES)
+    statuses = {}
     for name in todo:
         print(f"\n===== bench: {name} =====")
         t0 = time.time()
-        BENCHES[name].run(print)
-        print(f"===== {name} done in {time.time() - t0:.1f}s =====")
+        try:
+            BENCHES[name].run(print)
+            statuses[name] = {"status": "ok",
+                              "seconds": round(time.time() - t0, 1)}
+            print(f"===== {name} done in {time.time() - t0:.1f}s =====")
+        except Exception as e:
+            traceback.print_exc()
+            statuses[name] = {"status": "failed",
+                              "seconds": round(time.time() - t0, 1),
+                              "error": f"{type(e).__name__}: {e}"}
+            print(f"===== {name} FAILED after {time.time() - t0:.1f}s "
+                  f"=====")
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    manifest = {"benches": statuses,
+                "requested": todo,
+                "artifacts": _artifact_inventory()}
+    with open(INDEX_PATH, "w") as f:
+        json.dump(manifest, f, indent=2)
+    failed = sorted(n for n, s in statuses.items()
+                    if s["status"] != "ok")
+    print(f"\n# manifest -> {INDEX_PATH} "
+          f"({len(manifest['artifacts'])} artifacts)")
+    if failed:
+        print(f"# FAILED benches: {', '.join(failed)}", file=sys.stderr)
+        sys.exit(1)
+    print(f"# all {len(statuses)} bench(es) ok")
 
 
 if __name__ == "__main__":

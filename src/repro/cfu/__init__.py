@@ -154,8 +154,10 @@ from repro.cfu.executor import (HandoffViolation, MultiStreamRunner,
                                 run_multistream, run_program, run_words)
 from repro.cfu.network import (CFUFCParams, CFUHeadParams, CFUStemParams,
                                vww_cfu_params)
-from repro.cfu.timing import (MultiStreamReport, PEConfig, TimingReport,
+from repro.cfu.timing import (BatchCostModel, MultiStreamCostModel,
+                              MultiStreamReport, PEConfig, TimingReport,
                               analyze, analyze_multistream)
+from repro.cfu.trace import (NULL_TRACER, CounterBank, NullTracer, Tracer)
 
 __all__ = [
     "Instr", "Program", "assemble", "disassemble", "encode_program",
@@ -170,4 +172,6 @@ __all__ = [
     "TimingReport", "MultiStreamReport", "analyze", "analyze_multistream",
     "PEConfig", "CFUStemParams", "CFUHeadParams", "CFUFCParams",
     "vww_cfu_params",
+    "BatchCostModel", "MultiStreamCostModel",
+    "Tracer", "NullTracer", "NULL_TRACER", "CounterBank",
 ]

@@ -74,6 +74,8 @@ import numpy as np
 
 from repro.cfu import isa
 from repro.cfu.isa import Instr
+from repro.cfu.trace import (CAT_EXEC, CAT_MARK, NULL_TRACER, CounterBank,
+                             Tracer)
 
 INT8_MIN, INT8_MAX = -128, 127
 
@@ -141,9 +143,53 @@ class _BlockWeights:
 
 @dataclasses.dataclass
 class ExecStats:
+    """Executed-stream counters, field-aligned with ``timing.TimingReport``.
+
+    Units follow the cost model's convention so the two are DIRECTLY
+    diffable (``tests/test_cfu_trace.py`` pins the equality): data bytes
+    are line-buffered *unique* bytes per phase, summed over the whole
+    lockstep batch; weight bytes count once per LD_WGT executed
+    (boot-resident streaming, never scaled by batch); ``counts`` is the
+    per-opcode retired-instruction histogram (batch-independent — one
+    stream drives the whole batch); ``macs_by_engine`` splits ``n_macs``
+    across the exp/conv/dw/proj arrays.
+    """
+
     n_instr: int = 0
     n_macs: int = 0          # executed MACs, summed over the whole batch
     counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+    macs_by_engine: Dict[str, int] = dataclasses.field(default_factory=dict)
+    dram_rd_bytes: int = 0
+    dram_wr_bytes: int = 0
+    sram_rd_bytes: int = 0
+    sram_wr_bytes: int = 0
+    weight_bytes: int = 0
+    weight_reloads: int = 0      # LD_WGT re-streaming an already-seen set
+
+    @property
+    def retired(self) -> Dict[str, int]:
+        """Alias: per-opcode retired-instruction counts."""
+        return self.counts
+
+    @property
+    def dram_bytes(self) -> int:
+        return self.dram_rd_bytes + self.dram_wr_bytes
+
+    @property
+    def sram_bytes(self) -> int:
+        return self.sram_rd_bytes + self.sram_wr_bytes
+
+    def counter_bank(self) -> CounterBank:
+        """Render into the CSR-style bank (stall/handoff stay 0 — the
+        executor has no clock; those live on the cost-model side)."""
+        return CounterBank(
+            retired=dict(self.counts), macs=dict(self.macs_by_engine),
+            dram_rd_bytes=self.dram_rd_bytes,
+            dram_wr_bytes=self.dram_wr_bytes,
+            sram_rd_bytes=self.sram_rd_bytes,
+            sram_wr_bytes=self.sram_wr_bytes,
+            weight_bytes=self.weight_bytes,
+            weight_reloads=self.weight_reloads)
 
 
 class CFUMachine:
@@ -151,10 +197,13 @@ class CFUMachine:
 
     def __init__(self, params: Sequence, dram_size: int, sram_size: int,
                  batch: int = 1,
-                 dram_mem: Optional[np.ndarray] = None):
+                 dram_mem: Optional[np.ndarray] = None,
+                 tracer: Optional[Tracer] = None, pid: int = 0):
         self.params = list(params)
         self._wcache: Dict[int, _BlockWeights] = {}
         self.batch = batch
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.pid = pid
         # ``dram_mem`` shares one off-chip image between machines — the
         # multi-stream runner's common DRAM port (each core keeps its own
         # SRAM scratch).
@@ -186,6 +235,66 @@ class CFUMachine:
         self.gap = None          # (B,M) int32 pooling accumulator
         self.res = None          # last requant result (int8, (B,ch))
         self.stats = ExecStats()
+        # traffic meter: line-buffered unique-read accounting, mirroring
+        # timing._Walker._read byte for byte (the exactness invariant) —
+        # one touched-bitmap per (space, stream) pair, cleared at BAR
+        self._touched: Dict[Tuple[int, str], np.ndarray] = {}
+        self._wgt_seen: set = set()          # (block, engine) ever streamed
+        self._phase_idx = 0
+        self._phase_start = 0                # n_instr at phase start
+        self._phase_label = ""
+
+    # --- traffic meter (mirrors timing._Walker byte accounting) -------------
+
+    def _meter_read(self, reg: int, y: int, x: int, stream: str):
+        """Count the unique bytes this channel-vector read moves."""
+        space, base = self.base[reg]
+        hm, wm, ch = self._map_shape(reg)
+        if not (0 <= y < hm and 0 <= x < wm):
+            return          # on-the-fly padding: no memory access
+        if reg == isa.REG_F1 and self.strip_rows:
+            y = y % self.strip_rows
+        key = (space, stream)
+        t = self._touched.get(key)
+        if t is None:
+            t = self._touched[key] = np.zeros(self.mem[space].shape[1], bool)
+        off = base + (y * wm + x) * ch
+        seg = t[off:off + ch]
+        new = ch - int(seg.sum())
+        if new:
+            seg[:] = True
+            n = new * self.batch          # every lockstep frame moves it
+            if space == isa.SPACE_DRAM:
+                self.stats.dram_rd_bytes += n
+            else:
+                self.stats.sram_rd_bytes += n
+
+    def _meter_write(self, reg: int, n: int):
+        space, _ = self.base[reg]
+        n *= self.batch
+        if space == isa.SPACE_DRAM:
+            self.stats.dram_wr_bytes += n
+        else:
+            self.stats.sram_wr_bytes += n
+
+    def _meter_macs(self, engine: str, n: int):
+        self.stats.n_macs += n
+        self.stats.macs_by_engine[engine] = \
+            self.stats.macs_by_engine.get(engine, 0) + n
+
+    def _end_phase(self):
+        """BAR/HALT: reset the line-buffer trackers, emit the phase span
+        (executor time axis = retired instructions)."""
+        self._touched.clear()
+        start, end = self._phase_start, self.stats.n_instr
+        if end > start:
+            self.tracer.span(
+                self._phase_label or f"phase{self._phase_idx}",
+                start, end - start, pid=self.pid, tid=0, cat=CAT_EXEC,
+                args={"n_instr": end - start})
+        self._phase_idx += 1
+        self._phase_start = end
+        self._phase_label = ""
 
     # --- address helpers ----------------------------------------------------
 
@@ -252,10 +361,12 @@ class CFUMachine:
         return self.stats
 
     def _op_halt(self):
-        pass
+        self._end_phase()
 
     def _op_bar(self, phase):
-        pass  # pipeline drain; architectural state is unaffected
+        # pipeline drain; architectural state is unaffected, but the
+        # line-buffer trackers reset (a new phase re-fetches its maps)
+        self._end_phase()
 
     def _op_cfg(self, cin, cmid, cout, stride, h, w):
         self.cin, self.cmid, self.cout = cin, cmid, cout
@@ -287,6 +398,20 @@ class CFUMachine:
             self.cur_block = block
             self.wgt_loaded = set()
         self.wgt_loaded.add(which)
+        # weight-streamer traffic (mirrors timing._Walker's LD_WGT sizes;
+        # boot-resident, so never scaled by the data-plane batch)
+        k2 = isa.KERNEL * isa.KERNEL
+        nbytes = {isa.WGT_EXP: self.cin * self.cmid,
+                  isa.WGT_DW: k2 * self.cmid,
+                  isa.WGT_PROJ: self.cmid * self.cout,
+                  isa.WGT_CONV: k2 * self.cin * self.cmid}[which]
+        self.stats.weight_bytes += nbytes
+        self.stats.dram_rd_bytes += nbytes
+        if (block, which) in self._wgt_seen:
+            self.stats.weight_reloads += 1
+        self._wgt_seen.add((block, which))
+        if not self._phase_label:
+            self._phase_label = f"block{block}"
 
     def _need_wgt(self, which, engine: str):
         if which not in self.wgt_loaded:
@@ -295,9 +420,14 @@ class CFUMachine:
                 f"(block {self.cur_block})")
 
     def _op_ld_win(self, oy, ox):
+        for dy in range(isa.KERNEL):
+            for dx in range(isa.KERNEL):
+                self._meter_read(isa.REG_IN, oy * self.stride + dy - 1,
+                                 ox * self.stride + dx - 1, "win")
         self.win, self.win_valid = self._gather_window(isa.REG_IN, oy, ox)
 
     def _op_ld_vec(self, reg, y, x):
+        self._meter_read(reg, y, x, f"vec{reg}")
         v = self._vec_slice(reg, y, x).copy()
         if reg == isa.REG_F2:
             self.f2v = v     # projection input port
@@ -307,6 +437,10 @@ class CFUMachine:
     def _op_ld_tile(self, reg, oy, ox):
         # Materialized-F1 window: pad value IS the F1 zero point, exactly
         # what the reference's jnp.pad(..., constant_values=zp_f1) provides.
+        for dy in range(isa.KERNEL):
+            for dx in range(isa.KERNEL):
+                self._meter_read(reg, oy * self.stride + dy - 1,
+                                 ox * self.stride + dx - 1, "tile")
         self.f1t, _ = self._gather_window(reg, oy, ox)
 
     def _op_exp_mac(self, mode):
@@ -316,7 +450,7 @@ class CFUMachine:
         self.acc = (np.einsum("...c,cm->...m", src.astype(np.int32),
                               cw.w_exp) + cw.b_exp)
         self.acc_src = "exp_win" if mode == isa.MODE_WIN else "exp_vec"
-        self.stats.n_macs += src.size * self.cmid
+        self._meter_macs("exp", src.size * self.cmid)
 
     def _op_conv_mac(self):
         self._need_wgt(isa.WGT_CONV, "stem conv")
@@ -324,7 +458,7 @@ class CFUMachine:
         self.acc = (np.einsum("byxc,yxcm->bm", self.win.astype(np.int32),
                               cw.w_conv) + cw.b_conv)
         self.acc_src = "conv"
-        self.stats.n_macs += self.win.size * self.cmid
+        self._meter_macs("conv", self.win.size * self.cmid)
 
     def _op_dw_mac(self):
         self._need_wgt(isa.WGT_DW, "depthwise")
@@ -332,7 +466,7 @@ class CFUMachine:
         prod = self.f1t.astype(np.int32) * cw.w_dw
         self.acc = prod.sum(axis=(-3, -2)) + cw.b_dw
         self.acc_src = "dw"
-        self.stats.n_macs += self.f1t.size
+        self._meter_macs("dw", self.f1t.size)
 
     def _op_proj_mac(self):
         self._need_wgt(isa.WGT_PROJ, "projection")
@@ -340,7 +474,7 @@ class CFUMachine:
         self.acc = (np.einsum("...m,mn->...n", self.f2v.astype(np.int32),
                               cw.w_proj) + cw.b_proj)
         self.acc_src = "proj"
-        self.stats.n_macs += self.f2v.size * self.cout
+        self._meter_macs("proj", self.f2v.size * self.cout)
 
     def _op_requant(self, stage):
         cw, p = self.cur, self.cur.p
@@ -380,13 +514,16 @@ class CFUMachine:
         self.res = g
 
     def _op_res_add(self, oy, ox):
+        self._meter_read(isa.REG_IN, oy, ox, "res")
         x_px = self._vec_slice(isa.REG_IN, oy, ox)
         self.res = _residual_add_np(self.res, x_px, self.cur.p)
 
     def _op_st_px(self, oy, ox):
+        self._meter_write(isa.REG_OUT, self.cout)
         self._vec_slice(isa.REG_OUT, oy, ox)[:] = self.res
 
     def _op_st_vec(self, reg, y, x):
+        self._meter_write(reg, self._map_shape(reg)[2])
         self._vec_slice(reg, y, x)[:] = self.res
 
 
@@ -429,32 +566,38 @@ def _read_output(dram_mem: np.ndarray, sram_mem: Optional[np.ndarray],
 
 def run_words(words: Sequence[int], x_q, params: Sequence,
               meta: Dict[str, object],
-              return_stats: bool = False):
+              return_stats: bool = False,
+              tracer: Optional[Tracer] = None):
     """Execute an encoded program on ``x_q``: (H, W, C) int8 or a batch
     (B, H, W, C) — one instruction stream drives the whole batch.
 
     ``meta`` is the Program.meta of the compiled stream (memory layout +
     input/output binding); the architectural behaviour is fully determined
-    by the words themselves.
+    by the words themselves. ``tracer`` records per-phase spans (time axis
+    = retired instructions) and a final counter-bank dump; it never
+    affects any computed value.
     """
     layout = meta["layout"]
     x_q, batched = _bind_input(x_q, meta)
     m = CFUMachine(params, layout.dram_size, layout.sram_size,
-                   batch=x_q.shape[0])
+                   batch=x_q.shape[0], tracer=tracer)
     r_in = layout.regions[meta["in_region"]]
     m.mem[r_in.space][:, r_in.base:r_in.base + r_in.size] = \
         x_q.reshape(x_q.shape[0], -1)
     stats = m.execute(isa.decode_words(words))
+    m.tracer.process_name(m.pid, "cfu-exec (instr time)")
+    m.tracer.counter_bank(stats.counter_bank(), stats.n_instr, pid=m.pid)
     y = _read_output(m.mem[isa.SPACE_DRAM], m.mem[isa.SPACE_SRAM],
                      meta, batched)
     return (y, stats) if return_stats else y
 
 
 def run_program(program, x_q, params: Sequence,
-                return_stats: bool = False):
+                return_stats: bool = False,
+                tracer: Optional[Tracer] = None):
     """Encode then execute — every run exercises the binary format."""
     return run_words(isa.encode_program(program), x_q, params, program.meta,
-                     return_stats=return_stats)
+                     return_stats=return_stats, tracer=tracer)
 
 
 class HandoffViolation(RuntimeError):
@@ -487,10 +630,13 @@ class MultiStreamRunner:
     ``tests/test_cfu_properties.py``).
     """
 
-    def __init__(self, ms, x_q, params: Sequence, batch: int = 1):
+    def __init__(self, ms, x_q, params: Sequence, batch: int = 1,
+                 tracer: Optional[Tracer] = None):
         if batch < 1:
             raise ValueError(f"batch must be >= 1, got {batch}")
         self.ms = ms
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self._step_seq = 0           # scheduler step index: the time axis
         self.layout = ms.meta["layout"]
         x_q, self.batched = _bind_input(x_q, ms.meta)
         self.n_frames = x_q.shape[0]
@@ -510,8 +656,11 @@ class MultiStreamRunner:
         self.dram = np.zeros((batch, max(self.layout.dram_size, 1)), np.int8)
         self.cores = [CFUMachine(params, self.layout.dram_size,
                                  self.layout.sram_size, batch=batch,
-                                 dram_mem=self.dram)
-                      for _ in ms.streams]
+                                 dram_mem=self.dram,
+                                 tracer=self.tracer, pid=i)
+                      for i, _ in enumerate(ms.streams)]
+        for i in range(self.n_cores):
+            self.tracer.process_name(i, f"core{i}-exec (step time)")
         self.next_group = [0] * self.n_cores
         self.copy_holds: Dict[Tuple[str, int], int] = {}  # copy -> group
         self.consumed: set = set()                        # (name, group)
@@ -564,6 +713,12 @@ class MultiStreamRunner:
         protocol does not permit the step yet."""
         why = self._blocker(core)
         if why is not None:
+            # the wait event a hardware ready-flag probe would log: the
+            # core polled its boundary out of turn and was refused
+            self.tracer.instant(
+                "handoff_violation", self.cores[core].stats.n_instr,
+                pid=core, tid=1, cat=CAT_MARK,
+                args={"why": why, "group": self.next_group[core]})
             raise HandoffViolation(why)
         g = self.next_group[core]
         parity = g & 1
@@ -576,7 +731,15 @@ class MultiStreamRunner:
             self.copy_holds[(in_name, parity)] = g
         m = self.cores[core]
         m.frame_parity = parity
+        t0 = m.stats.n_instr
         m.execute(self.words[core])
+        self._step_seq += 1
+        self.tracer.span(f"group{g}", t0, m.stats.n_instr - t0,
+                         pid=core, tid=1, cat=CAT_EXEC,
+                         args={"group": g, "parity": parity,
+                               "step": self._step_seq})
+        self.tracer.counter("handoffs_retired", m.stats.n_instr, g + 1,
+                            pid=core, series=in_name)
         self.consumed.add((in_name, g))
         self.copy_holds[(out_name, parity)] = g
         if core == self.n_cores - 1:   # host drains the program output
@@ -605,7 +768,7 @@ class MultiStreamRunner:
 
 
 def run_multistream(ms, x_q, params: Sequence, return_stats: bool = False,
-                    batch: int = 1):
+                    batch: int = 1, tracer: Optional[Tracer] = None):
     """Execute a ``compiler.MultiStreamProgram`` as the frame-pipelined
     multi-core machine it compiles for: N cores share ONE physical DRAM
     (the common off-chip port), each owns its SRAM scratch, and the
@@ -619,6 +782,7 @@ def run_multistream(ms, x_q, params: Sequence, return_stats: bool = False,
     The double-buffer handoff is enforced, not assumed: see
     :class:`MultiStreamRunner`, which this wraps.
     """
-    runner = MultiStreamRunner(ms, x_q, params, batch=batch).run()
+    runner = MultiStreamRunner(ms, x_q, params, batch=batch,
+                               tracer=tracer).run()
     y = runner.outputs()
     return (y, runner.stats()) if return_stats else y

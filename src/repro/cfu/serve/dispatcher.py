@@ -67,7 +67,8 @@ class ServingSimulator:
     def __init__(self, service: ServiceModel, policy: Policy,
                  arrivals: np.ndarray,
                  spot_check: Optional[DifferentialSpotCheck] = None,
-                 max_events: Optional[int] = None):
+                 max_events: Optional[int] = None,
+                 tracer=None, slo_cycles: Optional[float] = None):
         self.service = service
         self.policy = policy
         self.arrivals = np.asarray(arrivals, dtype=float)
@@ -76,6 +77,8 @@ class ServingSimulator:
         if np.any(np.diff(self.arrivals) < 0):
             raise ValueError("arrivals must be sorted")
         self.spot_check = spot_check
+        self.tracer = tracer           # observes only; None = no tracing
+        self.slo_cycles = slo_cycles   # SLO-violation instants + summary
         # every request needs an arrival, a dispatch consult, a share of
         # one completion, and possibly a poll: 8x + slack is generous,
         # and hitting it means a policy is livelocking — fail loudly.
@@ -86,7 +89,9 @@ class ServingSimulator:
         queue: collections.deque = collections.deque()   # rids, FIFO
         arrival_time: List[float] = list(self.arrivals)
         metrics = MetricsCollector(n_cores=self.service.n_stages,
-                                   freq_hz=self.service.freq_hz)
+                                   freq_hz=self.service.freq_hz,
+                                   tracer=self.tracer,
+                                   slo_cycles=self.slo_cycles)
         log: List[LogEntry] = []
         next_entry = 0.0          # earliest cycle the device can accept
         next_bid = 0

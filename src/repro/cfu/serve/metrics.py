@@ -18,6 +18,12 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.cfu.trace import CAT_SERVE, NULL_TRACER, Tracer
+
+#: Trace pid of the serving layer — offset far above the per-core model
+#: pids so device timeline and request timeline coexist in one file.
+SERVE_PID = 1000
+
 
 @dataclasses.dataclass
 class RequestRecord:
@@ -45,13 +51,24 @@ class BatchRecord:
 
 
 class MetricsCollector:
-    def __init__(self, n_cores: int, freq_hz: float):
+    def __init__(self, n_cores: int, freq_hz: float,
+                 tracer: Optional[Tracer] = None,
+                 slo_cycles: Optional[float] = None):
         self.n_cores = n_cores
         self.freq_hz = freq_hz
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.slo_cycles = slo_cycles
+        self.slo_violations = 0
         self.requests: List[RequestRecord] = []
         self.batches: List[BatchRecord] = []
         self.core_busy = [0.0] * n_cores
         self.queue_trace: List[tuple] = []   # (time, depth) at each change
+        # in-flight batch slots for trace rendering: slot i is free again
+        # at _slot_free[i]; a dispatched group takes the first free slot,
+        # so overlapping in-flight groups land on separate thread rows
+        self._slot_free: List[float] = []
+        self.tracer.process_name(SERVE_PID, "serving (sim-cycle time)")
+        self.tracer.thread_name(SERVE_PID, 0, "markers")
 
     # --- recording --------------------------------------------------------
 
@@ -59,6 +76,19 @@ class MetricsCollector:
         assert rid == len(self.requests), "rids must be dense and ordered"
         self.requests.append(RequestRecord(rid=rid, t_arrival=t))
         self.queue_trace.append((t, depth))
+        self.tracer.counter("queue_depth", t, depth, pid=SERVE_PID,
+                            series="depth")
+
+    def _alloc_slot(self, t_entry: float, t_complete: float) -> int:
+        for i, free in enumerate(self._slot_free):
+            if free <= t_entry:
+                self._slot_free[i] = t_complete
+                return i
+        self._slot_free.append(t_complete)
+        slot = len(self._slot_free) - 1
+        self.tracer.thread_name(SERVE_PID, slot + 1,
+                                f"in-flight slot {slot}")
+        return slot
 
     def on_dispatch(self, bid: int, rids: List[int], t_entry: float,
                     t_complete: float, energy_pj: float,
@@ -72,10 +102,27 @@ class MetricsCollector:
         for i, b in enumerate(busy_cycles):
             self.core_busy[i] += b
         self.queue_trace.append((t_entry, depth))
+        self.tracer.counter("queue_depth", t_entry, depth, pid=SERVE_PID,
+                            series="depth")
+        slot = self._alloc_slot(t_entry, t_complete)
+        self.tracer.span(f"batch{bid} (B={len(rids)})", t_entry,
+                         t_complete - t_entry, pid=SERVE_PID, tid=slot + 1,
+                         cat=CAT_SERVE,
+                         args={"bid": bid, "size": len(rids),
+                               "energy_pj": energy_pj})
 
     def on_complete(self, rids: List[int], t: float) -> None:
         for rid in rids:
             self.requests[rid].t_complete = t
+            if self.slo_cycles is not None:
+                lat = self.requests[rid].latency
+                if lat is not None and lat > self.slo_cycles:
+                    self.slo_violations += 1
+                    self.tracer.instant(
+                        "slo_violation", t, pid=SERVE_PID, tid=0,
+                        cat=CAT_SERVE,
+                        args={"rid": rid, "latency_cycles": lat,
+                              "slo_cycles": self.slo_cycles})
 
     # --- summary ----------------------------------------------------------
 
@@ -123,4 +170,7 @@ class MetricsCollector:
             depths = np.array([d for _, d in self.queue_trace])
             out["queue_depth_mean"] = float(depths.mean())
             out["queue_depth_max"] = int(depths.max())
+        if self.slo_cycles is not None:
+            out["slo_cycles"] = self.slo_cycles
+            out["slo_violations"] = self.slo_violations
         return out

@@ -47,6 +47,7 @@ def build_vww_service(img_hw: int, streams: int = 1,
                       freq_hz: float = DEFAULT_FREQ_HZ,
                       max_batch: int = 16,
                       sram_port_bytes: Optional[int] = None,
+                      handoff_sync_cycles: Optional[float] = None,
                       ) -> ServiceModel:
     """Compile a full-VWW device config into a :class:`ServiceModel`."""
     from repro.cfu.compiler import compile_vww_network
@@ -59,7 +60,8 @@ def build_vww_service(img_hw: int, streams: int = 1,
                                pipeline=pipeline)
     return ServiceModel(prog, pipeline, freq_hz=freq_hz,
                         max_batch=max_batch,
-                        sram_port_bytes=sram_port_bytes)
+                        sram_port_bytes=sram_port_bytes,
+                        handoff_sync_cycles=handoff_sync_cycles)
 
 
 def simulate(service: ServiceModel, policy_name: str, rate_qps: float,
@@ -69,8 +71,13 @@ def simulate(service: ServiceModel, policy_name: str, rate_qps: float,
              slo_cycles: Optional[float] = None,
              batch_cap: Optional[int] = None,
              timeout_cycles: Optional[float] = None,
-             spot_check=None):
-    """One seeded simulation at a fixed rate (the planner's probe)."""
+             spot_check=None, tracer=None):
+    """One seeded simulation at a fixed rate (the planner's probe).
+
+    ``tracer`` (a ``repro.cfu.trace.Tracer``) records the request-level
+    timeline — queue depth, batch spans, SLO instants — without touching
+    any simulated number.
+    """
     policy = make_policy(policy_name, service=service,
                          batch_cap=batch_cap,
                          timeout_cycles=timeout_cycles,
@@ -79,7 +86,8 @@ def simulate(service: ServiceModel, policy_name: str, rate_qps: float,
                              freq_hz=service.freq_hz, seed=seed,
                              trace_path=trace_path)
     sim = ServingSimulator(service, policy, arrivals,
-                           spot_check=spot_check)
+                           spot_check=spot_check, tracer=tracer,
+                           slo_cycles=slo_cycles)
     res = sim.run()
     res.summary["rate_qps"] = rate_qps
     res.summary["arrival_kind"] = arrival_kind

@@ -42,7 +42,8 @@ class ServiceModel:
                  pe: Optional[PEConfig] = None,
                  freq_hz: float = 300e6,
                  max_batch: int = 64,
-                 sram_port_bytes: Optional[int] = None):
+                 sram_port_bytes: Optional[int] = None,
+                 handoff_sync_cycles: Optional[float] = None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         self.prog = prog
@@ -52,13 +53,25 @@ class ServiceModel:
         self.is_multistream = isinstance(prog, MultiStreamProgram)
         if self.is_multistream:
             self._cost = MultiStreamCostModel(
-                prog, pipeline, pe=pe, sram_port_bytes=sram_port_bytes)
+                prog, pipeline, pe=pe, sram_port_bytes=sram_port_bytes,
+                handoff_sync_cycles=handoff_sync_cycles)
             self.n_stages = self._cost.n_cores
         else:
             self._cost = BatchCostModel(
-                prog, pipeline, pe=pe, sram_port_bytes=sram_port_bytes)
+                prog, pipeline, pe=pe, sram_port_bytes=sram_port_bytes,
+                handoff_sync_cycles=handoff_sync_cycles)
             self.n_stages = 1
         self._reports: Dict[int, Report] = {}
+
+    def emit_model_trace(self, tracer, batch: int = 1, *,
+                         pid_base: int = 0) -> float:
+        """Emit the device's modeled per-phase timeline (one frame group
+        at ``batch``) into ``tracer`` — the reference lane a serving trace
+        is read against. Returns the end timestamp."""
+        if self.is_multistream:
+            return self._cost.emit_trace(tracer, batch, pid_base=pid_base)
+        tracer.process_name(pid_base, "core0-model (cycle time)")
+        return self._cost.emit_trace(tracer, batch, pid=pid_base)
 
     # --- pricing ----------------------------------------------------------
 

@@ -133,6 +133,7 @@ import numpy as np
 
 from repro.cfu import isa
 from repro.cfu.isa import Program
+from repro.cfu.trace import CAT_PHASE, CounterBank, Tracer
 from repro.core.fusion import (C_DW, C_DWQ, C_EX_PER_IN_CH, C_EXQ, C_PR,
                                C_PX_FIXED, PROJECTION_ENGINES,
                                SW_CYCLES_PER_XFER_BYTE)
@@ -191,6 +192,14 @@ class PEConfig:
 
 @dataclasses.dataclass
 class PhaseStats:
+    """One BAR-delimited phase of the instruction walk.
+
+    Cycle fields are per-frame (scaled by batch at report time); byte
+    fields use the executor-aligned rd/wr split — per-phase sums equal
+    the report totals exactly, which is what lets the trace exporter
+    attribute every byte and cycle to a phase span.
+    """
+
     n_iters: int = 0
     compute_cycles: float = 0.0         # per-frame iteration body cycles
     fill_cycles: float = 0.0            # pipeline fill, paid once per phase
@@ -198,6 +207,12 @@ class PhaseStats:
     dram_transfer_cycles: float = 0.0   # DRAM-port share of transfer
     multi_stage: bool = False
     last_iter_cycles: float = 0.0
+    label: str = ""                     # e.g. "block3" (first LD_WGT seen)
+    dram_rd_bytes: int = 0              # per-frame data + weight reads
+    dram_wr_bytes: int = 0
+    sram_rd_bytes: int = 0
+    sram_wr_bytes: int = 0
+    weight_bytes: int = 0               # share of dram_rd that is weights
 
 
 @dataclasses.dataclass
@@ -218,11 +233,36 @@ class TimingReport:
     batch: int = 1                     # frames driven in lockstep
     handoff_cycles: float = 0.0        # dbuf boundary sync, per round
     n_dbuf_boundaries: int = 0         # distinct CFG_DBUF regions touched
+    # executor-aligned counter splits (dram_bytes == rd + wr, etc.) and
+    # per-opcode retired counts — ``ExecStats`` carries the same fields in
+    # the same units, so modeled-vs-executed is a field-for-field diff
+    dram_rd_bytes: int = 0
+    dram_wr_bytes: int = 0
+    sram_rd_bytes: int = 0
+    sram_wr_bytes: int = 0
+    retired: Dict[str, int] = dataclasses.field(default_factory=dict)
+    macs_by_engine: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     @property
     def frames_per_cycle(self) -> float:
         """Throughput of one core re-running this stream back-to-back."""
         return self.batch / self.total_cycles if self.total_cycles else 0.0
+
+    @property
+    def n_instr(self) -> int:
+        return sum(self.retired.values())
+
+    def counter_bank(self) -> CounterBank:
+        """The CSR-style view (diffable against ``ExecStats``'s)."""
+        return CounterBank(
+            retired=dict(self.retired), macs=dict(self.macs_by_engine),
+            dram_rd_bytes=self.dram_rd_bytes,
+            dram_wr_bytes=self.dram_wr_bytes,
+            sram_rd_bytes=self.sram_rd_bytes,
+            sram_wr_bytes=self.sram_wr_bytes,
+            weight_bytes=self.weight_bytes,
+            stall_cycles=self.stall_cycles,
+            handoff_cycles=self.handoff_cycles)
 
 
 class _Walker:
@@ -247,9 +287,12 @@ class _Walker:
         # traffic
         self.touched: Dict[Tuple[int, str], np.ndarray] = {}
         self.space_sizes = {isa.SPACE_DRAM: 0, isa.SPACE_SRAM: 0}
-        self.bytes_rw = {isa.SPACE_DRAM: 0, isa.SPACE_SRAM: 0}
+        self.bytes_rd = {isa.SPACE_DRAM: 0, isa.SPACE_SRAM: 0}
+        self.bytes_wr = {isa.SPACE_DRAM: 0, isa.SPACE_SRAM: 0}
         self.weight_bytes = 0
         self.macs = 0
+        self.retired: Dict[str, int] = {}     # per-opcode, mirrors ExecStats
+        self.macs_by_engine: Dict[str, int] = {}
         # cycles
         self.phases: List[PhaseStats] = []
         self.cur = PhaseStats()
@@ -284,17 +327,27 @@ class _Walker:
         new = ch - int(seg.sum())
         if new:
             seg[:] = True
-            self.bytes_rw[space] += new
+            self.bytes_rd[space] += new
             self.cur.transfer_cycles += new * self._cyc_per_byte(space)
             if space == isa.SPACE_DRAM:
                 self.cur.dram_transfer_cycles += new * CYC_PER_DRAM_BYTE
+                self.cur.dram_rd_bytes += new
+            else:
+                self.cur.sram_rd_bytes += new
 
     def _write(self, reg: int, n: int):
         space, _ = self.base[reg]
-        self.bytes_rw[space] += n
+        self.bytes_wr[space] += n
         self.cur.transfer_cycles += n * self._cyc_per_byte(space)
         if space == isa.SPACE_DRAM:
             self.cur.dram_transfer_cycles += n * CYC_PER_DRAM_BYTE
+            self.cur.dram_wr_bytes += n
+        else:
+            self.cur.sram_wr_bytes += n
+
+    def _mac(self, engine: str, n: int):
+        self.macs += n
+        self.macs_by_engine[engine] = self.macs_by_engine.get(engine, 0) + n
 
     def _cyc_per_byte(self, space: int) -> float:
         return (CYC_PER_DRAM_BYTE if space == isa.SPACE_DRAM
@@ -338,7 +391,10 @@ class _Walker:
             # can amortize it
             self.cur.fill_cycles = (_FILL_ITERS[self.pipeline]
                                     * self.cur.last_iter_cycles)
-        if self.cur.n_iters or self.cur.transfer_cycles:
+        if self.cur.n_iters or self.cur.transfer_cycles \
+                or self.cur.weight_bytes:
+            # weight-only phases carry 0 cycles (max(0, 0)) — kept so every
+            # byte lands in some phase span, without moving any golden total
             self.phases.append(self.cur)
         self.cur = PhaseStats()
         self.touched.clear()
@@ -355,6 +411,7 @@ class _Walker:
         k2 = isa.KERNEL * isa.KERNEL
         for ins in program.instrs:
             op = ins.op
+            self.retired[op] = self.retired.get(op, 0) + 1
             if op == "CFG":
                 cin, cmid, cout, stride, h, w = ins.args
                 self.cin, self.cmid, self.cout = cin, cmid, cout
@@ -379,13 +436,17 @@ class _Walker:
             elif op == "CFG_CORE":
                 pass       # stream identity: informational, no cycles
             elif op == "LD_WGT":
-                which = ins.args[0]
+                which, block = ins.args
                 nbytes = {isa.WGT_EXP: self.cin * self.cmid,
                           isa.WGT_DW: k2 * self.cmid,
                           isa.WGT_PROJ: self.cmid * self.cout,
                           isa.WGT_CONV: k2 * self.cin * self.cmid}[which]
                 self.weight_bytes += nbytes
-                self.bytes_rw[isa.SPACE_DRAM] += nbytes
+                self.bytes_rd[isa.SPACE_DRAM] += nbytes
+                self.cur.dram_rd_bytes += nbytes
+                self.cur.weight_bytes += nbytes
+                if not self.cur.label:
+                    self.cur.label = f"block{block}"
                 # boot-resident: no per-frame transfer cycles
             elif op == "BAR":
                 self._end_phase()
@@ -412,7 +473,7 @@ class _Walker:
             elif op == "EXP_MAC":
                 mode = ins.args[0]
                 pixels = k2 if mode == isa.MODE_WIN else 1
-                self.macs += pixels * self.cin * self.cmid
+                self._mac("exp", pixels * self.cin * self.cmid)
                 self.iter_stages["ex_mac"] = (
                     C_EX_PER_IN_CH * self.cin * self.cmid * pixels / k2
                     * (k2 / self.pe.exp_pes))
@@ -420,17 +481,17 @@ class _Walker:
                 # Standard 3x3 conv on the expansion array: k2*cin*cmid
                 # MACs, one tap per window engine — WIN-mode expansion cost,
                 # but only ONE output vector to requantize (VEC-mode quant).
-                self.macs += k2 * self.cin * self.cmid
+                self._mac("conv", k2 * self.cin * self.cmid)
                 self.iter_stages["ex_mac"] = (
                     C_EX_PER_IN_CH * self.cin * self.cmid
                     * (k2 / self.pe.exp_pes))
                 self.last_exp_mode = isa.MODE_VEC
             elif op == "DW_MAC":
-                self.macs += k2 * self.cmid
+                self._mac("dw", k2 * self.cmid)
                 self.iter_stages["dw_mac"] = (C_DW * self.cmid
                                               * (k2 / self.pe.dw_lanes))
             elif op == "PROJ_MAC":
-                self.macs += self.cmid * self.cout
+                self._mac("proj", self.cmid * self.cout)
                 groups = -(-self.cout // self.pe.proj_engines)
                 self.iter_stages["pr_mac"] = C_PR * self.cmid * groups
             elif op == "REQUANT":
@@ -479,12 +540,24 @@ class BatchCostModel:
 
     def __init__(self, program: Program, pipeline: str = "v3",
                  pe: Optional[PEConfig] = None,
-                 sram_port_bytes: Optional[int] = None):
+                 sram_port_bytes: Optional[int] = None,
+                 handoff_sync_cycles: Optional[float] = None):
         w = _Walker(pipeline, pe=pe, sram_port_bytes=sram_port_bytes)
         w.walk(program)
         self._w = w
         self._layout = program.meta["layout"]
         self.pipeline = pipeline
+        self.handoff_sync_cycles = (HANDOFF_SYNC_CYCLES
+                                    if handoff_sync_cycles is None
+                                    else float(handoff_sync_cycles))
+
+    @staticmethod
+    def _phase_cycles(p: PhaseStats, b: float) -> float:
+        """One phase's cycles at batch b — THE expression of the cycle
+        model (compute/transfer overlap); trace spans reuse it verbatim so
+        span durations sum to ``total_cycles`` bit-for-bit."""
+        return max(p.compute_cycles * b + p.fill_cycles,
+                   p.transfer_cycles * b)
 
     def report(self, batch: int = 1) -> TimingReport:
         if batch < 1:
@@ -493,14 +566,17 @@ class BatchCostModel:
         b = float(batch)
         compute = sum(p.compute_cycles * b + p.fill_cycles for p in w.phases)
         transfer = sum(p.transfer_cycles * b for p in w.phases)
-        total = sum(max(p.compute_cycles * b + p.fill_cycles,
-                        p.transfer_cycles * b) for p in w.phases)
+        total = sum(self._phase_cycles(p, b) for p in w.phases)
         dram_xfer = sum(p.dram_transfer_cycles * b for p in w.phases)
         # weights are boot-resident: loaded once however many frames ride
         # the data plane, so only the data share of DRAM traffic scales
-        dram = ((w.bytes_rw[isa.SPACE_DRAM] - w.weight_bytes) * batch
-                + w.weight_bytes)
-        sram = w.bytes_rw[isa.SPACE_SRAM] * batch
+        dram_rd = ((w.bytes_rd[isa.SPACE_DRAM] - w.weight_bytes) * batch
+                   + w.weight_bytes)
+        dram_wr = w.bytes_wr[isa.SPACE_DRAM] * batch
+        sram_rd = w.bytes_rd[isa.SPACE_SRAM] * batch
+        sram_wr = w.bytes_wr[isa.SPACE_SRAM] * batch
+        dram = dram_rd + dram_wr
+        sram = sram_rd + sram_wr
         macs = w.macs * batch
         e_mac = macs * E_MAC_INT8
         e_dram = dram * E_DRAM_BYTE
@@ -524,9 +600,66 @@ class BatchCostModel:
             n_phases=len(w.phases),
             dram_transfer_cycles=dram_xfer,
             batch=batch,
-            handoff_cycles=HANDOFF_SYNC_CYCLES * len(w.dbuf_bases),
+            handoff_cycles=self.handoff_sync_cycles * len(w.dbuf_bases),
             n_dbuf_boundaries=len(w.dbuf_bases),
+            dram_rd_bytes=int(dram_rd),
+            dram_wr_bytes=int(dram_wr),
+            sram_rd_bytes=int(sram_rd),
+            sram_wr_bytes=int(sram_wr),
+            retired=dict(w.retired),
+            macs_by_engine={k: v * batch
+                            for k, v in w.macs_by_engine.items()},
         )
+
+    def emit_trace(self, tracer: Tracer, batch: int = 1, *, pid: int = 0,
+                   t0: float = 0.0) -> float:
+        """Emit the modeled timeline: one span per BAR-delimited phase.
+
+        Span durations use :meth:`_phase_cycles` — the exact per-phase
+        expression ``report`` sums — so the emitted spans add up to
+        ``total_cycles`` with no rounding slack (the exactness invariant
+        tests/test_cfu_trace.py pins). Cumulative byte counters ride the
+        same timeline; returns the end timestamp so callers can stack
+        streams end-to-end. Tracing never feeds back into the report.
+        """
+        w = self._w
+        b = float(batch)
+        tracer.thread_name(pid, 0, "phases (cycle time)")
+        t = t0
+        cum = {"dram_rd": 0.0, "dram_wr": 0.0,
+               "sram_rd": 0.0, "sram_wr": 0.0}
+        for i, p in enumerate(w.phases):
+            dur = self._phase_cycles(p, b)
+            drd = (p.dram_rd_bytes - p.weight_bytes) * batch + p.weight_bytes
+            cum["dram_rd"] += drd
+            cum["dram_wr"] += p.dram_wr_bytes * batch
+            cum["sram_rd"] += p.sram_rd_bytes * batch
+            cum["sram_wr"] += p.sram_wr_bytes * batch
+            tracer.span(
+                p.label or f"phase{i}", t, dur, pid=pid, tid=0,
+                cat=CAT_PHASE,
+                args={"compute_cycles": p.compute_cycles * b + p.fill_cycles,
+                      "transfer_cycles": p.transfer_cycles * b,
+                      "stall_cycles": dur - (p.compute_cycles * b
+                                             + p.fill_cycles),
+                      "fill_cycles": p.fill_cycles,
+                      "n_iters": p.n_iters,
+                      "dram_rd_bytes": drd,
+                      "dram_wr_bytes": p.dram_wr_bytes * batch,
+                      "sram_rd_bytes": p.sram_rd_bytes * batch,
+                      "sram_wr_bytes": p.sram_wr_bytes * batch,
+                      "weight_bytes": p.weight_bytes})
+            t += dur
+            tracer.counter("model.bytes", t, dict(cum), pid=pid)
+        # per-boundary handoff cost as a counter track (satellite: the
+        # ROADMAP's calibration hook made visible)
+        tracer.counter("model.handoff_cycles", t,
+                       {"per_round": self.handoff_sync_cycles
+                        * len(w.dbuf_bases),
+                        "n_boundaries": len(w.dbuf_bases)}, pid=pid)
+        rep = self.report(batch)
+        tracer.counter_bank(rep.counter_bank(), t, pid=pid)
+        return t
 
 
 class MultiStreamCostModel:
@@ -536,15 +669,29 @@ class MultiStreamCostModel:
 
     def __init__(self, ms, pipeline: str = "v3",
                  pe: Optional[PEConfig] = None,
-                 sram_port_bytes: Optional[int] = None):
+                 sram_port_bytes: Optional[int] = None,
+                 handoff_sync_cycles: Optional[float] = None):
         self.models = [BatchCostModel(p, pipeline, pe=pe,
-                                      sram_port_bytes=sram_port_bytes)
+                                      sram_port_bytes=sram_port_bytes,
+                                      handoff_sync_cycles=handoff_sync_cycles)
                        for p in ms.streams]
         self.pipeline = pipeline
 
     @property
     def n_cores(self) -> int:
         return len(self.models)
+
+    def emit_trace(self, tracer: Tracer, batch: int = 1, *,
+                   pid_base: int = 0, t0: float = 0.0) -> float:
+        """Modeled timeline of one frame group: core i's phase spans on
+        pid ``pid_base + i``, stacked end-to-end in time (the end-to-end
+        latency view; steady state overlaps rounds across cores)."""
+        t = t0
+        for i, m in enumerate(self.models):
+            pid = pid_base + i
+            tracer.process_name(pid, f"core{i}-model (cycle time)")
+            t = m.emit_trace(tracer, batch, pid=pid, t0=t)
+        return t
 
     def report(self, batch: int = 1) -> MultiStreamReport:
         reps = [m.report(batch) for m in self.models]
@@ -639,6 +786,7 @@ def analyze_multistream(ms, pipeline: str = "v3",
                         pe: Optional[PEConfig] = None,
                         batch: int = 1,
                         sram_port_bytes: Optional[int] = None,
+                        handoff_sync_cycles: Optional[float] = None,
                         ) -> MultiStreamReport:
     """Walk every stream of a ``compiler.MultiStreamProgram``.
 
@@ -653,17 +801,23 @@ def analyze_multistream(ms, pipeline: str = "v3",
     EVERY core leaks for the whole per-round interval, including its
     idle/stall share, so extra cores are never energetically free.
 
+    ``handoff_sync_cycles`` calibrates the per-boundary double-buffer
+    handoff cost (default ``HANDOFF_SYNC_CYCLES`` = 64): each core's round
+    pays it once per CFG_DBUF boundary it touches.
+
     Repeated what-if pricing of the SAME program at many batch sizes
     should build a :class:`MultiStreamCostModel` once instead.
     """
     return MultiStreamCostModel(ms, pipeline, pe=pe,
-                                sram_port_bytes=sram_port_bytes
+                                sram_port_bytes=sram_port_bytes,
+                                handoff_sync_cycles=handoff_sync_cycles
                                 ).report(batch)
 
 
 def analyze(program: Program, pipeline: str = "v3",
             pe: Optional[PEConfig] = None, batch: int = 1,
-            sram_port_bytes: Optional[int] = None) -> TimingReport:
+            sram_port_bytes: Optional[int] = None,
+            handoff_sync_cycles: Optional[float] = None) -> TimingReport:
     """Walk one compiled program and report cycles/traffic/energy.
 
     ``pe`` overrides the stream's CFG_PE engine counts (what-if analysis
@@ -687,4 +841,6 @@ def analyze(program: Program, pipeline: str = "v3",
     batch) — this function re-walks per call.
     """
     return BatchCostModel(program, pipeline, pe=pe,
-                          sram_port_bytes=sram_port_bytes).report(batch)
+                          sram_port_bytes=sram_port_bytes,
+                          handoff_sync_cycles=handoff_sync_cycles
+                          ).report(batch)

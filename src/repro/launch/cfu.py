@@ -61,7 +61,9 @@ from repro.cfu.executor import run_multistream, run_program
 from repro.cfu.ir import SCHEDULES
 from repro.cfu.network import random_chain_params, vww_cfu_params
 from repro.cfu.report import PAPER_LAYERS, modeled_network_sw_cycles
-from repro.cfu.timing import PEConfig, analyze, analyze_multistream
+from repro.cfu.timing import (BatchCostModel, MultiStreamCostModel,
+                              PEConfig, analyze, analyze_multistream)
+from repro.cfu.trace import Tracer
 from repro.configs.vww import VWW
 from repro.core import dsc, quant
 from repro.core.fusion import Schedule, modeled_cycles, run_block
@@ -114,24 +116,42 @@ def _describe_schedule(prog):
     return " ".join(f"{n}:{s}" for n, s in picks.items())
 
 
-def _runner_for(prog, args):
+def _runner_for(prog, args, tracer=None):
     """Golden-executor entry matching the compile: the multi-stream runner
     groups ``--batch`` frames per pipeline round (batching x pipelining)."""
     if not isinstance(prog, MultiStreamProgram):
-        return run_program
+        def run1(p, x, params):
+            return run_program(p, x, params, tracer=tracer)
+        return run1
 
     def run(p, x, params):
         in_ndim = len(p.meta["in_shape"])
         n_frames = x.shape[0] if np.asarray(x).ndim > in_ndim else 1
         return run_multistream(p, x, params,
-                               batch=max(1, min(args.batch, n_frames)))
+                               batch=max(1, min(args.batch, n_frames)),
+                               tracer=tracer)
     return run
+
+
+def _emit_model_trace(tracer, prog, args, batch: int):
+    """Modeled per-phase timeline on pids 100+ (executor lanes sit at
+    0..N-1), so one file diffs modeled vs executed side by side."""
+    hsc = args.handoff_sync_cycles
+    if isinstance(prog, MultiStreamProgram):
+        MultiStreamCostModel(prog, args.pipeline, handoff_sync_cycles=hsc
+                             ).emit_trace(tracer, batch, pid_base=100)
+    else:
+        tracer.process_name(100, "core0-model (cycle time)")
+        BatchCostModel(prog, args.pipeline, handoff_sync_cycles=hsc
+                       ).emit_trace(tracer, batch, pid=100)
 
 
 def _report_of(prog, args):
     """Timing for either a single stream or a multi-stream compile."""
     if isinstance(prog, MultiStreamProgram):
-        rep = analyze_multistream(prog, args.pipeline, batch=args.batch)
+        rep = analyze_multistream(prog, args.pipeline, batch=args.batch,
+                                  handoff_sync_cycles=args.
+                                  handoff_sync_cycles)
         if prog.meta["streams"] != prog.meta["streams_requested"]:
             print(f"#   NOTE: {prog.meta['streams_requested']} streams "
                   f"requested, only {prog.meta['streams']} schedulable "
@@ -154,7 +174,8 @@ def _report_of(prog, args):
         # (and to batch=1) whatever the frame-group size
         cycles = rep.interval_cycles / rep.batch
         return rep, cycles
-    rep = analyze(prog, args.pipeline)
+    rep = analyze(prog, args.pipeline,
+                  handoff_sync_cycles=args.handoff_sync_cycles)
     return rep, rep.total_cycles
 
 
@@ -173,7 +194,7 @@ def _asdict(rep, prog=None):
     return d
 
 
-def _run_vww(args, key, pe: PEConfig, schedules):
+def _run_vww(args, key, pe: PEConfig, schedules, tracer=None):
     """Full-network mode: compile, time, and batch-verify a VWW inference."""
     from repro.models import mobilenetv2 as mnv2
     hw, batch = args.img_hw, args.batch
@@ -218,13 +239,17 @@ def _run_vww(args, key, pe: PEConfig, schedules):
         if args.asm:
             _dump_asm(prog, args.asm)
         rep, cycles = _report_of(prog, args)
+        if tracer is not None:
+            _emit_model_trace(tracer, prog, args, batch)
         runner = _runner_for(prog, args)
         v1 = vn = "-"
         exec_s = 0.0
         if not args.no_verify:
             t0 = time.time()
             y1 = runner(prog, imgs_q[0], params)
-            yb = runner(prog, imgs_q, params)
+            # trace only the batched run (one executor timeline per pid)
+            yb = _runner_for(prog, args, tracer=tracer)(
+                prog, imgs_q, params)
             exec_s = time.time() - t0
             v1 = bool(np.array_equal(y1, ref[0]))
             vn = bool(np.array_equal(yb, ref))
@@ -244,7 +269,7 @@ def _run_vww(args, key, pe: PEConfig, schedules):
     return results
 
 
-def _run_chain(args, key, pe: PEConfig, schedules):
+def _run_chain(args, key, pe: PEConfig, schedules, tracer=None):
     """DSC-chain / single-block modes (the paper's CFU partitioning)."""
     if args.block:
         specs, params, hw = _single_block(key, args.block)
@@ -281,7 +306,9 @@ def _run_chain(args, key, pe: PEConfig, schedules):
         if args.asm:
             _dump_asm(prog, args.asm)
         rep, cycles = _report_of(prog, args)
-        runner = _runner_for(prog, args)
+        if tracer is not None:
+            _emit_model_trace(tracer, prog, args, 1)
+        runner = _runner_for(prog, args, tracer=tracer)
         verified, exec_s = "-", 0.0
         if not args.no_verify:
             rng = np.random.default_rng(args.seed)
@@ -308,7 +335,7 @@ def _run_chain(args, key, pe: PEConfig, schedules):
     return results
 
 
-def main():
+def main(argv=None):
     schedule_help = "; ".join(f"{name}: {desc}"
                               for name, (_, desc) in SCHEDULES.items())
     ap = argparse.ArgumentParser(
@@ -351,17 +378,37 @@ def main():
                     help="dump the text assembly of the stream to this path")
     ap.add_argument("--json", default=None,
                     help="write timing reports as JSON to this path")
-    args = ap.parse_args()
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="write a Perfetto-loadable Chrome trace: modeled "
+                         "per-phase timeline (pids 100+, cycle time) plus "
+                         "the golden executor's timeline (pids 0..N-1, "
+                         "retired-instruction time); single schedule only")
+    ap.add_argument("--handoff-sync-cycles", type=float, default=None,
+                    help="per-boundary double-buffer handoff cost for the "
+                         "multi-core pipeline (default: timing."
+                         "HANDOFF_SYNC_CYCLES = 64)")
+    args = ap.parse_args(argv)
 
     key = jax.random.PRNGKey(args.seed)
     pe = _parse_pe(args.pe)
     schedules = (schedule_names() if args.schedule == "all"
                  else [args.schedule])
+    tracer = None
+    if args.trace:
+        if len(schedules) > 1:
+            raise SystemExit("--trace wants a single --schedule "
+                             "(one timeline per pid)")
+        tracer = Tracer(clock="cycles (model) / instrs (exec)")
 
     if args.network:
-        results = _run_vww(args, key, pe, schedules)
+        results = _run_vww(args, key, pe, schedules, tracer=tracer)
     else:
-        results = _run_chain(args, key, pe, schedules)
+        results = _run_chain(args, key, pe, schedules, tracer=tracer)
+
+    if tracer is not None:
+        tracer.save(args.trace)
+        print(f"# trace ({len(tracer.events)} events) -> {args.trace} "
+              f"(open at https://ui.perfetto.dev)")
 
     if args.json:
         os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)

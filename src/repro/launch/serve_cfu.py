@@ -101,8 +101,14 @@ def main(argv=None):
     ap.add_argument("--timeout-ms", type=float, default=2.0,
                     help="batching timeout for --policy timeout")
     ap.add_argument("--arrivals", default="poisson", choices=ARRIVALS)
-    ap.add_argument("--trace", default=None,
+    ap.add_argument("--arrival-trace", default=None,
                     help="JSON arrival-trace path for --arrivals trace")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="write a Perfetto-loadable Chrome trace of the "
+                         "run: device model timeline (pids 100+), queue "
+                         "depth, per-batch dispatch spans and SLO-"
+                         "violation instants (pid 1000); simulate mode "
+                         "only")
     ap.add_argument("--requests", type=int, default=400,
                     help="number of requests to simulate")
     ap.add_argument("--slo-ms", type=float, default=DEFAULT_SLO_MS,
@@ -124,6 +130,9 @@ def main(argv=None):
                     help="per-core engine counts for --streams N")
     ap.add_argument("--sram-port-bytes", type=int, default=None,
                     help="on-chip scratch port width (default 1 B/cycle)")
+    ap.add_argument("--handoff-sync-cycles", type=float, default=None,
+                    help="per-boundary double-buffer handoff cost "
+                         "(default: timing.HANDOFF_SYNC_CYCLES = 64)")
     ap.add_argument("--spot-checks", type=int, default=2,
                     help="max dispatched batches to execute bit-exactly "
                          "through the golden executor (0 = skip)")
@@ -141,7 +150,8 @@ def main(argv=None):
         args.img_hw, streams=args.streams, pe=_parse_pe(args.pe),
         pe_per_core=_parse_pe_per_core(args.pe_per_core, args.streams),
         schedule=args.schedule, pipeline=args.pipeline, freq_hz=freq_hz,
-        sram_port_bytes=args.sram_port_bytes)
+        sram_port_bytes=args.sram_port_bytes,
+        handoff_sync_cycles=args.handoff_sync_cycles)
     dev = service.describe()
     print(f"# CFU serving simulator: VWW {args.img_hw}x{args.img_hw}, "
           f"{service.n_stages} core(s)"
@@ -168,13 +178,26 @@ def main(argv=None):
     else:
         spot = (_spot_checker(args, service)
                 if args.spot_checks > 0 else None)
+        tracer = None
+        if args.trace:
+            from repro.cfu.trace import Tracer
+            tracer = Tracer(clock="cycles")
+            # reference lane: the device's modeled per-phase timeline for
+            # one max-batch frame group, next to the request-level lanes
+            service.emit_model_trace(tracer, service.max_batch,
+                                     pid_base=100)
         res = simulate(service, args.policy, args.rate,
                        n_requests=args.requests, seed=args.seed,
                        arrival_kind=args.arrivals,
-                       trace_path=args.trace, slo_cycles=slo_cycles,
+                       trace_path=args.arrival_trace,
+                       slo_cycles=slo_cycles,
                        batch_cap=args.batch_cap,
                        timeout_cycles=args.timeout_ms * 1e-3 * freq_hz,
-                       spot_check=spot)
+                       spot_check=spot, tracer=tracer)
+        if tracer is not None:
+            tracer.save(args.trace)
+            print(f"# trace ({len(tracer.events)} events) -> {args.trace}"
+                  f" (open at https://ui.perfetto.dev)")
         print("\n".join(summary_lines(res.summary)))
         slo_ok = res.summary.get("latency_p99_cycles",
                                  float("inf")) <= slo_cycles
