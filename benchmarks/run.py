@@ -21,9 +21,9 @@ import sys
 import time
 import traceback
 
-from benchmarks import (bench_cfu, bench_energy, bench_ffn_fusion,
-                        bench_scaling, bench_serving, bench_speedup,
-                        bench_traffic)
+from benchmarks import (bench_cfu, bench_energy, bench_fastpath,
+                        bench_ffn_fusion, bench_scaling, bench_serving,
+                        bench_speedup, bench_traffic)
 
 BENCHES = {
     "speedup": bench_speedup,        # Fig. 14 / Table III(A)
@@ -33,6 +33,7 @@ BENCHES = {
     "cfu": bench_cfu,                # Tables III/V/VI from the CFU simulator
     "scaling": bench_scaling,        # cycles-vs-PE sweep (full VWW stream)
     "serving": bench_serving,        # request-level QPS-under-SLO frontier
+    "fastpath": bench_fastpath,      # jitted executor: speedup + diff matrix
 }
 
 RESULTS_DIR = "results"

@@ -530,8 +530,14 @@ class CFUMachine:
 # --- host-side entry points --------------------------------------------------
 
 
-def _bind_input(x_q, meta: Dict[str, object]) -> Tuple[np.ndarray, bool]:
-    """Normalize to a batch and validate against the bound input region."""
+def bind_input(x_q, meta: Dict[str, object]) -> Tuple[np.ndarray, bool]:
+    """Normalize to a batch and validate against the bound input region.
+
+    Shared by the interpreter entry points below and the jitted fast path
+    (``cfu/fastpath.py``) so both backends accept exactly the same input
+    conventions — single frame or leading batch axis — and reject the
+    same malformed shapes.
+    """
     layout = meta["layout"]
     x_q = np.asarray(x_q, np.int8)
     in_ndim = len(meta["in_shape"])
@@ -549,8 +555,8 @@ def _bind_input(x_q, meta: Dict[str, object]) -> Tuple[np.ndarray, bool]:
     return x_q, batched
 
 
-def _read_output(dram_mem: np.ndarray, sram_mem: Optional[np.ndarray],
-                 meta: Dict[str, object], batched: bool) -> np.ndarray:
+def read_output(dram_mem: np.ndarray, sram_mem: Optional[np.ndarray],
+                meta: Dict[str, object], batched: bool) -> np.ndarray:
     layout = meta["layout"]
     r_out = layout.regions[meta["out_region"]]
     if r_out.space != isa.SPACE_DRAM and sram_mem is None:
@@ -578,7 +584,7 @@ def run_words(words: Sequence[int], x_q, params: Sequence,
     affects any computed value.
     """
     layout = meta["layout"]
-    x_q, batched = _bind_input(x_q, meta)
+    x_q, batched = bind_input(x_q, meta)
     m = CFUMachine(params, layout.dram_size, layout.sram_size,
                    batch=x_q.shape[0], tracer=tracer)
     r_in = layout.regions[meta["in_region"]]
@@ -587,7 +593,7 @@ def run_words(words: Sequence[int], x_q, params: Sequence,
     stats = m.execute(isa.decode_words(words))
     m.tracer.process_name(m.pid, "cfu-exec (instr time)")
     m.tracer.counter_bank(stats.counter_bank(), stats.n_instr, pid=m.pid)
-    y = _read_output(m.mem[isa.SPACE_DRAM], m.mem[isa.SPACE_SRAM],
+    y = read_output(m.mem[isa.SPACE_DRAM], m.mem[isa.SPACE_SRAM],
                      meta, batched)
     return (y, stats) if return_stats else y
 
@@ -638,7 +644,7 @@ class MultiStreamRunner:
         self.tracer = tracer if tracer is not None else NULL_TRACER
         self._step_seq = 0           # scheduler step index: the time axis
         self.layout = ms.meta["layout"]
-        x_q, self.batched = _bind_input(x_q, ms.meta)
+        x_q, self.batched = bind_input(x_q, ms.meta)
         self.n_frames = x_q.shape[0]
         self.batch = batch
         self.n_groups = -(-self.n_frames // batch)

@@ -42,6 +42,8 @@ class SpotCheckRecord:
     bit_exact: bool
     groups_executed: int
     groups_modeled: int
+    backend: str = "golden"          # executor that produced the check
+    golden_cross: bool = False       # fast check also re-run on the golden
 
 
 # sample(rng, n) -> (quantized input frames (n,H,W,C) int8,
@@ -75,20 +77,41 @@ class DifferentialSpotCheck:
     executed) and ``max_checks`` bounds the total executor work; both
     keep the discrete-event loop fast while still pinning it to the
     golden model.
+
+    ``backend`` picks the executor that runs each sampled batch:
+
+    * ``"golden"`` (default) — the word interpreter, with the full frame
+      accounting assertions; the historical behaviour.
+    * ``"fast"`` — the jitted fast path (``cfu/fastpath.py``). Checks
+      cost milliseconds instead of seconds, so million-request capacity
+      planning can afford a much higher ``max_checks``; every
+      ``golden_every``-th fast check ALSO re-runs the same frames through
+      the word interpreter and asserts fast == golden bit-exactly, so
+      the chain back to the golden model is sampled, never severed.
     """
 
     def __init__(self, prog, params, sample: SampleFn,
-                 every: int = 8, max_checks: int = 3, seed: int = 0):
+                 every: int = 8, max_checks: int = 3, seed: int = 0,
+                 backend: str = "golden", golden_every: int = 4):
         if every < 1:
             raise ValueError(f"every must be >= 1, got {every}")
+        if backend not in ("golden", "fast"):
+            raise ValueError(f"backend must be 'golden' or 'fast', "
+                             f"got {backend!r}")
+        if golden_every < 1:
+            raise ValueError(f"golden_every must be >= 1, "
+                             f"got {golden_every}")
         self.prog = prog
         self.params = params
         self.sample = sample
         self.every = every
         self.max_checks = max_checks
+        self.backend = backend
+        self.golden_every = golden_every
         self.rng = np.random.default_rng(seed)
         self.records: List[SpotCheckRecord] = []
         self._dispatches = 0
+        self._fast_checks = 0
 
     @classmethod
     def for_vww(cls, prog, net, params, img_hw: int, img_ch: int = 3,
@@ -105,9 +128,10 @@ class DifferentialSpotCheck:
 
     # --- the check itself -------------------------------------------------
 
-    def check(self, batch_id: int, size: int) -> SpotCheckRecord:
-        frames_q, ref = self.sample(self.rng, size)
-        groups_modeled = -(-size // size)          # ceil(B / batch=B) = 1
+    def _run_golden(self, batch_id: int, frames_q) -> Tuple[np.ndarray,
+                                                            int]:
+        """Word-interpreter execution + the frame-accounting assertions."""
+        size = frames_q.shape[0]
         if isinstance(self.prog, MultiStreamProgram):
             runner = MultiStreamRunner(self.prog, frames_q, self.params,
                                        batch=size).run()
@@ -122,6 +146,28 @@ class DifferentialSpotCheck:
         else:
             y = run_program(self.prog, frames_q, self.params)
             groups_executed = 1
+        return y, groups_executed
+
+    def check(self, batch_id: int, size: int) -> SpotCheckRecord:
+        frames_q, ref = self.sample(self.rng, size)
+        groups_modeled = -(-size // size)          # ceil(B / batch=B) = 1
+        golden_cross = False
+        if self.backend == "fast":
+            from repro.cfu import fastpath
+            y = fastpath.run_fast(self.prog, frames_q, self.params)
+            golden_cross = self._fast_checks % self.golden_every == 0
+            self._fast_checks += 1
+            if golden_cross:
+                y_gold, groups_executed = self._run_golden(batch_id,
+                                                           frames_q)
+                if not np.array_equal(y, y_gold):
+                    raise SpotCheckError(
+                        f"batch {batch_id} (size {size}): fast path "
+                        f"diverged from the golden interpreter")
+            else:
+                groups_executed = groups_modeled
+        else:
+            y, groups_executed = self._run_golden(batch_id, frames_q)
         if y.shape[0] != size:
             raise SpotCheckError(
                 f"batch {batch_id}: executor retired {y.shape[0]} frames "
@@ -134,7 +180,9 @@ class DifferentialSpotCheck:
         rec = SpotCheckRecord(batch_id=batch_id, size=size,
                               bit_exact=bit_exact,
                               groups_executed=groups_executed,
-                              groups_modeled=groups_modeled)
+                              groups_modeled=groups_modeled,
+                              backend=self.backend,
+                              golden_cross=golden_cross)
         self.records.append(rec)
         if not bit_exact:
             raise SpotCheckError(
@@ -145,4 +193,7 @@ class DifferentialSpotCheck:
     def summary(self) -> dict:
         return {"n_checks": len(self.records),
                 "all_bit_exact": all(r.bit_exact for r in self.records),
-                "checked_sizes": [r.size for r in self.records]}
+                "checked_sizes": [r.size for r in self.records],
+                "backend": self.backend,
+                "n_golden_cross": sum(r.golden_cross
+                                      for r in self.records)}

@@ -33,12 +33,24 @@ from repro.cfu.serve.service import ServiceModel
 
 DEFAULT_SLO_MS = 30.0           # the CI gate's SLO: 30 ms @ 300 MHz
 DEFAULT_N_REQUESTS = 400
+_MAX_WIDENINGS = 6              # bracket cap: up to 2^6 x the 1.05-ceiling
 
 
 def derive_seed(base: int, *labels) -> int:
     """Stable sub-seed from a base seed + string-able labels."""
     text = ":".join(str(x) for x in (base,) + labels)
     return zlib.crc32(text.encode()) & 0x7FFFFFFF
+
+
+def rate_label(rate: float) -> str:
+    """Collision-free seed label for a probe rate: the full float bits.
+
+    The old ``f"{rate:.6f}"`` label collapsed any two probes agreeing to
+    six decimals (tight ``tol`` + high ceilings get there) onto ONE seed,
+    silently correlating their verdicts; ``float.hex()`` is exact, so
+    distinct rates always draw independent arrival streams.
+    """
+    return float(rate).hex()
 
 
 def build_vww_service(img_hw: int, streams: int = 1,
@@ -127,7 +139,7 @@ def max_sustainable_qps(service: ServiceModel, policy_name: str,
                   for b in range(1, min(cap, service.max_batch) + 1))
 
     def probe(rate: float):
-        s = derive_seed(seed, policy_name, f"{rate:.6f}")
+        s = derive_seed(seed, policy_name, rate_label(rate))
         return simulate(service, policy_name, rate,
                         n_requests=n_requests, seed=s,
                         arrival_kind=arrival_kind,
@@ -142,6 +154,29 @@ def max_sustainable_qps(service: ServiceModel, policy_name: str,
                 "probes": [{"rate_qps": lo, "feasible": False}]}
     probes = [{"rate_qps": lo, "feasible": True}]
     lo_qps = lo
+    # Probe the upper endpoint instead of assuming it infeasible: the
+    # ceiling is a FIXED-batch estimate, and a policy with adaptive
+    # windows can beat it — clamping the answer below the truth. While
+    # ``hi`` stays feasible, widen the bracket geometrically (bounded, so
+    # a pathological always-feasible model still terminates).
+    s_hi = probe(hi)
+    hi_ok = _feasible(s_hi, slo_cycles)
+    probes.append({"rate_qps": hi, "feasible": hi_ok,
+                   "p99_ms": s_hi.get("latency_p99_ms")})
+    for _ in range(_MAX_WIDENINGS):
+        if not hi_ok:
+            break
+        lo_qps, best_summary = hi, s_hi
+        hi *= 2.0
+        s_hi = probe(hi)
+        hi_ok = _feasible(s_hi, slo_cycles)
+        probes.append({"rate_qps": hi, "feasible": hi_ok,
+                       "p99_ms": s_hi.get("latency_p99_ms")})
+    if hi_ok:                 # feasible even after every widening
+        return {"policy": policy_name, "max_qps": hi,
+                "service_ceiling_qps": ceiling, "slo_cycles": slo_cycles,
+                "bracket_exhausted": True,
+                "at_max": s_hi, "probes": probes}
     while hi / lo_qps > 1 + tol:
         mid = (lo_qps * hi) ** 0.5
         s = probe(mid)
@@ -169,7 +204,7 @@ def p99_curve(service: ServiceModel, policy_name: str,
     for rate in rates:
         s = simulate(service, policy_name, rate, n_requests=n_requests,
                      seed=derive_seed(seed, "curve", policy_name,
-                                      f"{rate:.6f}"),
+                                      rate_label(rate)),
                      slo_cycles=slo_cycles, batch_cap=batch_cap,
                      timeout_cycles=timeout_cycles).summary
         rows.append({

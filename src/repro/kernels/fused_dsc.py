@@ -137,11 +137,17 @@ def fused_dsc_pallas(
     cmid = w_exp.shape[1]
     cout = w_proj.shape[1]
     h2, w2 = -(-h // stride), -(-w // stride)
-    if h2 % tile_rows:
-        # pick the largest divisor of h2 not exceeding the request
-        tile_rows = next(t for t in range(min(tile_rows, h2), 0, -1)
-                         if h2 % t == 0)
-    grid = (h2 // tile_rows,)
+    # Keep the requested tile granularity even when it doesn't divide h2:
+    # run ceil(h2/tile_rows) grid steps over a row-padded output and slice
+    # the valid rows off afterwards. The kernel already clips + masks
+    # out-of-range input rows to the zero point, so the overhang tile
+    # computes discardable rows instead of reading out of bounds. (The old
+    # fallback silently degraded to the largest divisor of h2 — tile_rows=1
+    # for prime h2, i.e. one grid step per output row.)
+    tile_rows = min(tile_rows, h2)
+    n_tiles = -(-h2 // tile_rows)
+    h2p = n_tiles * tile_rows
+    grid = (n_tiles,)
 
     kernel = functools.partial(
         _fused_dsc_kernel, h=h, w=w, cin=cin, cmid=cmid, cout=cout,
@@ -150,7 +156,7 @@ def fused_dsc_pallas(
         q6_f1=q6[0], q6_f2=q6[1])
 
     whole = lambda shape: pl.BlockSpec(shape, lambda t: (0,) * len(shape))
-    return pl.pallas_call(
+    y = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
@@ -162,6 +168,7 @@ def fused_dsc_pallas(
             whole((cmid,)), whole((cmid,)), whole((cout,)),
         ],
         out_specs=pl.BlockSpec((tile_rows, w2, cout), lambda t: (t, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((h2, w2, cout), jnp.int8),
+        out_shape=jax.ShapeDtypeStruct((h2p, w2, cout), jnp.int8),
         interpret=interpret,
     )(x_q, w_exp, w_dw9, w_proj, b_exp, b_dw, b_proj, m_exp, m_dw, m_proj)
+    return y if h2p == h2 else y[:h2]

@@ -117,8 +117,18 @@ def _describe_schedule(prog):
 
 
 def _runner_for(prog, args, tracer=None):
-    """Golden-executor entry matching the compile: the multi-stream runner
-    groups ``--batch`` frames per pipeline round (batching x pipelining)."""
+    """Executor entry matching the compile. ``--backend golden`` (default)
+    interprets the encoded words; ``--backend fast`` runs the jitted
+    fast path (one traced computation per program fingerprint — same
+    outputs, no per-instruction timeline, hence no tracer). The
+    multi-stream golden runner groups ``--batch`` frames per pipeline
+    round (batching x pipelining)."""
+    if getattr(args, "backend", "golden") == "fast":
+        from repro.cfu import fastpath
+
+        def run_fast(p, x, params):
+            return fastpath.run_fast(p, x, params)
+        return run_fast
     if not isinstance(prog, MultiStreamProgram):
         def run1(p, x, params):
             return run_program(p, x, params, tracer=tracer)
@@ -372,6 +382,11 @@ def main(argv=None):
                     help="engine counts exp_pes,dw_lanes,proj_engines "
                          "(default 9,9,56 — the paper's arrays)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--backend", default="golden",
+                    choices=["golden", "fast"],
+                    help="verify executor: the word interpreter (golden) "
+                         "or the jitted fast path traced once per program "
+                         "fingerprint (fast; same bit-exact outputs)")
     ap.add_argument("--no-verify", action="store_true",
                     help="skip the bit-exact golden-model execution")
     ap.add_argument("--asm", default=None,
@@ -398,6 +413,9 @@ def main(argv=None):
         if len(schedules) > 1:
             raise SystemExit("--trace wants a single --schedule "
                              "(one timeline per pid)")
+        if args.backend == "fast":
+            raise SystemExit("--trace needs --backend golden (the fast "
+                             "path has no per-instruction timeline)")
         tracer = Tracer(clock="cycles (model) / instrs (exec)")
 
     if args.network:

@@ -19,10 +19,13 @@ run reports p50/p95/p99 latency, throughput, per-core utilization,
 queue depths and energy/frame.
 
 Honesty: unless ``--spot-checks 0``, sampled dispatched batches are ALSO
-executed through the golden executor mid-simulation and compared
-bit-exactly against ``models.mobilenetv2.forward_int8`` (plus a
-frame-accounting cross-check executor-vs-model); a divergence aborts
-the run.
+executed mid-simulation and compared bit-exactly against
+``models.mobilenetv2.forward_int8`` (plus a frame-accounting
+cross-check executor-vs-model); a divergence aborts the run.
+``--backend fast`` runs those checks through the jitted fast path
+(milliseconds per check instead of seconds, so million-request runs can
+afford many), with every 4th sampled batch still re-executed by the word
+interpreter and asserted fast == golden.
 
 ``--plan`` runs the capacity planner instead of a single rate: for every
 policy it searches the max sustainable QPS under ``--slo-ms`` (at
@@ -82,7 +85,8 @@ def _spot_checker(args, service):
     params = vww_cfu_params(net)
     return DifferentialSpotCheck.for_vww(
         service.prog, net, params, img_hw=args.img_hw, img_ch=VWW.img_ch,
-        max_checks=args.spot_checks, seed=args.seed)
+        max_checks=args.spot_checks, seed=args.seed,
+        backend=args.backend)
 
 
 def main(argv=None):
@@ -136,6 +140,13 @@ def main(argv=None):
     ap.add_argument("--spot-checks", type=int, default=2,
                     help="max dispatched batches to execute bit-exactly "
                          "through the golden executor (0 = skip)")
+    ap.add_argument("--backend", default="golden",
+                    choices=["golden", "fast"],
+                    help="spot-check executor: the word interpreter "
+                         "(golden) or the jitted fast path, which still "
+                         "cross-checks every 4th sampled batch against "
+                         "the interpreter — 'fast' makes million-request "
+                         "runs affordable")
     ap.add_argument("--plan", action="store_true",
                     help="capacity planning: per-policy max sustainable "
                          "QPS under --slo-ms instead of one --rate run")

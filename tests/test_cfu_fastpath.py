@@ -1,0 +1,251 @@
+"""The jitted fast path is a twin of the word interpreter, never a fork.
+
+``cfu/fastpath.py`` lifts a compiled program from its encoded words into
+one jitted, vmapped XLA computation, cached by program fingerprint.
+These tests pin the whole contract:
+
+* the DIFFERENTIAL MATRIX — every registered schedule (plus ``auto``) x
+  streams {1, 2} x batch {1, 3} (3 frames over group-2 rounds is the
+  ragged multistream tail) — asserts exact integer equality between the
+  fast path and ``run_words`` / ``run_multistream``, on a prime feature
+  size so rowtile halos and ragged Pallas tiles are exercised;
+* CACHE CORRECTNESS — recompiling the same program hits the cache with
+  the SAME traced executor; changing the PE config, the schedule, or the
+  quantization constants moves the key and re-traces (no stale constants);
+  changing only the weight VALUES reuses the trace and still changes the
+  output (weights are traced arguments, not baked);
+* the spot checker's ``backend="fast"`` mode stays anchored: the sampled
+  golden cross-check still catches a fast-vs-golden divergence.
+
+Exactness discipline matches the rest of the repo: assert_array_equal,
+never allclose — int8 inference has no tolerance budget.
+"""
+
+import dataclasses
+import functools
+
+import jax
+import numpy as np
+import pytest
+
+from repro.cfu import fastpath
+from repro.cfu.compiler import compile_network, schedule_names
+from repro.cfu.executor import run_multistream, run_program
+from repro.cfu.timing import PEConfig
+from repro.core import dsc, quant
+from repro.core.dsc import DSCBlockSpec
+
+HW = 13                       # prime: every tile/halo edge case is live
+CHAIN = (DSCBlockSpec(cin=3, cmid=9, cout=5, stride=1),
+         DSCBlockSpec(cin=5, cmid=15, cout=5, stride=2),
+         DSCBlockSpec(cin=5, cmid=10, cout=4, stride=1))
+
+
+@functools.lru_cache(maxsize=None)
+def _chain_fixture(seed: int = 0):
+    params, h = [], HW
+    for i, spec in enumerate(CHAIN):
+        p32 = dsc.init_dsc_block_f32(jax.random.PRNGKey(seed + i), spec)
+        calib = np.asarray(jax.random.normal(
+            jax.random.PRNGKey(seed + 100 + i), (h, h, spec.cin)))
+        params.append(dsc.quantize_dsc_block(p32, spec, calib))
+        h, _ = spec.out_hw(h, h)
+    specs = [(f"b{i}", s) for i, s in enumerate(CHAIN)]
+    rng = np.random.default_rng(seed)
+    x_f = rng.standard_normal((3, HW, HW, CHAIN[0].cin)).astype(np.float32)
+    x_q = np.asarray(quant.quantize(x_f, params[0].qp_in))
+    return specs, params, x_q
+
+
+def setup_module(module):
+    fastpath.clear_cache()
+
+
+# --- the differential matrix ------------------------------------------------
+
+
+MATRIX = [(s, n, b) for s in schedule_names(include_auto=True)
+          for n in (1, 2) for b in (1, 3)]
+
+
+@pytest.mark.parametrize("sched,streams,batch", MATRIX)
+def test_matrix_fast_equals_interpreter(sched, streams, batch):
+    specs, params, x_q = _chain_fixture()
+    prog = compile_network(specs, HW, HW, sched, streams=streams)
+    x = x_q[:batch] if batch > 1 else x_q[0]
+    if streams == 1:
+        ref = run_program(prog, x, params)
+    else:
+        # group size 2 over 3 frames = ragged final round in the runner
+        ref = run_multistream(prog, x, params, batch=2)
+    got = fastpath.run_fast(prog, x, params)
+    np.testing.assert_array_equal(
+        got, ref, err_msg=f"{sched} streams={streams} batch={batch}")
+
+
+def test_matrix_vww_network_fast_equals_interpreter():
+    """Whole VWW inference (stem + chain + head + GAP + FC): the lifted
+    aux stages, not just DSC blocks."""
+    from repro.cfu.compiler import compile_vww_network
+    from repro.cfu.network import vww_cfu_params
+    from repro.models import mobilenetv2 as mnv2
+    hw = 16
+    net = mnv2.init_and_quantize(jax.random.PRNGKey(2), img_hw=hw)
+    params = vww_cfu_params(net)
+    rng = np.random.default_rng(7)
+    imgs = rng.standard_normal((3, hw, hw, 3)).astype(np.float32)
+    x_q = np.asarray(quant.quantize(imgs, net.qp_img))
+    for streams in (1, 2):
+        prog = compile_vww_network(mnv2.block_specs(), hw, "fused-rowtile",
+                                   streams=streams)
+        ref = (run_program(prog, x_q, params) if streams == 1
+               else run_multistream(prog, x_q, params, batch=2))
+        got = fastpath.run_fast(prog, x_q, params)
+        np.testing.assert_array_equal(got, ref,
+                                      err_msg=f"vww streams={streams}")
+        got1 = fastpath.run_fast(prog, x_q[0], params)
+        np.testing.assert_array_equal(got1, ref[0],
+                                      err_msg=f"vww single frame")
+
+
+# --- fingerprints + cache ---------------------------------------------------
+
+
+def test_fingerprint_deterministic_and_schedule_sensitive():
+    specs, params, _ = _chain_fixture()
+    fp = {s: fastpath.program_fingerprint(
+        compile_network(specs, HW, HW, s)) for s in schedule_names()}
+    # recompiling is byte-stable
+    assert fp["fused"] == fastpath.program_fingerprint(
+        compile_network(specs, HW, HW, "fused"))
+    # distinct schedules are distinct programs
+    assert len(set(fp.values())) == len(fp)
+
+
+def test_fingerprint_sensitive_to_pe_and_geometry():
+    specs, params, _ = _chain_fixture()
+    base = fastpath.program_fingerprint(
+        compile_network(specs, HW, HW, "fused"))
+    pe = fastpath.program_fingerprint(
+        compile_network(specs, HW, HW, "fused", pe=PEConfig(4, 4, 21)))
+    geom = fastpath.program_fingerprint(
+        compile_network(specs, 12, 12, "fused"))
+    assert len({base, pe, geom}) == 3
+
+
+def test_cache_hit_same_program_miss_on_change():
+    fastpath.clear_cache()
+    specs, params, x_q = _chain_fixture()
+    prog_a = compile_network(specs, HW, HW, "fused")
+    prog_b = compile_network(specs, HW, HW, "fused")        # recompiled
+    ex_a = fastpath.fast_executor(prog_a, params)
+    ex_b = fastpath.fast_executor(prog_b, params)
+    assert ex_a is ex_b                     # same fingerprint, same trace
+    info = fastpath.cache_info()
+    assert info["hits"] == 1 and info["misses"] == 1
+    # changed PE config / schedule: different fingerprint, fresh executor
+    ex_pe = fastpath.fast_executor(
+        compile_network(specs, HW, HW, "fused", pe=PEConfig(4, 4, 21)),
+        params)
+    ex_sched = fastpath.fast_executor(
+        compile_network(specs, HW, HW, "layer-dram"), params)
+    assert ex_pe is not ex_a and ex_sched is not ex_a
+    assert fastpath.cache_info()["misses"] == 3
+
+
+def test_cache_misses_on_changed_quant_constants():
+    """Same program, recalibrated params: the static key moves, so the
+    trace is rebuilt with the NEW constants — and both stay bit-exact."""
+    specs, params, x_q = _chain_fixture()
+    specs2, params2, x_q2 = _chain_fixture(seed=11)
+    prog = compile_network(specs, HW, HW, "fused")
+    ex1 = fastpath.fast_executor(prog, params)
+    ex2 = fastpath.fast_executor(prog, params2)
+    assert ex1 is not ex2                   # no stale constants
+    np.testing.assert_array_equal(fastpath.run_fast(prog, x_q, params),
+                                  run_program(prog, x_q, params))
+    np.testing.assert_array_equal(fastpath.run_fast(prog, x_q2, params2),
+                                  run_program(prog, x_q2, params2))
+
+
+def test_weights_are_traced_not_baked():
+    """Perturbing only weight VALUES (same quant domains) must reuse the
+    cached trace and still change the output."""
+    specs, params, x_q = _chain_fixture()
+    prog = compile_network(specs, HW, HW, "fused")
+    ex = fastpath.fast_executor(prog, params)
+    w2 = np.array(params[0].w_exp)
+    w2[0, 0] = np.int8(w2[0, 0] + 1 if w2[0, 0] < 127 else w2[0, 0] - 1)
+    params_w = [dataclasses.replace(params[0], w_exp=w2)] + params[1:]
+    assert fastpath.fast_executor(prog, params_w) is ex   # shared trace
+    y_ref = run_program(prog, x_q, params_w)
+    np.testing.assert_array_equal(fastpath.run_fast(prog, x_q, params_w),
+                                  y_ref)
+    assert not np.array_equal(y_ref, run_program(prog, x_q, params))
+
+
+def test_forced_pallas_stage_bodies_bit_exact_and_separate_cache_key():
+    """On CPU the default trace uses the vectorizable jnp twin; forcing
+    ``use_pallas=True`` must lift through the Pallas kernels instead,
+    stay bit-exact against the interpreter (fused AND rowtile lowerings),
+    and occupy its own cache slot (the backend is part of the key)."""
+    specs, params, x_q = _chain_fixture()
+    for sched in ("fused", "fused-rowtile"):
+        prog = compile_network(specs, HW, HW, sched)
+        ex_jnp = fastpath.fast_executor(prog, params)
+        ex_pl = fastpath.fast_executor(prog, params, use_pallas=True)
+        assert ex_pl is not ex_jnp and ex_pl.use_pallas
+        np.testing.assert_array_equal(
+            fastpath.run_fast(prog, x_q, params, use_pallas=True),
+            run_program(prog, x_q, params), err_msg=sched)
+        # forcing again hits the pallas-keyed cache entry
+        assert fastpath.fast_executor(prog, params,
+                                      use_pallas=True) is ex_pl
+
+
+def test_run_fast_rejects_bad_input_shape():
+    specs, params, _ = _chain_fixture()
+    prog = compile_network(specs, HW, HW, "fused")
+    with pytest.raises(ValueError):
+        fastpath.run_fast(prog, np.zeros((HW, HW), np.int8), params)
+
+
+# --- the fast spot-check backend stays anchored ------------------------------
+
+
+def test_fast_spot_check_backend_cross_checks_golden():
+    from repro.cfu.serve.check import DifferentialSpotCheck
+    specs, params, x_q = _chain_fixture()
+    prog = compile_network(specs, HW, HW, "fused")
+
+    def sample(rng, n):
+        frames = x_q[rng.integers(0, x_q.shape[0], size=n)]
+        return frames, run_program(prog, frames, params)
+
+    spot = DifferentialSpotCheck(prog, params, sample, every=1,
+                                 max_checks=3, seed=0, backend="fast",
+                                 golden_every=2)
+    for i in range(3):
+        assert spot.wants(i)
+        spot.check(i, 2)
+    s = spot.summary()
+    assert s["backend"] == "fast" and s["all_bit_exact"]
+    assert s["n_golden_cross"] == 2         # checks 0 and 2
+
+
+def test_fast_spot_check_catches_divergence():
+    from repro.cfu.serve.check import (DifferentialSpotCheck,
+                                       SpotCheckError)
+    specs, params, x_q = _chain_fixture()
+    prog = compile_network(specs, HW, HW, "fused")
+
+    def poisoned(rng, n):
+        frames = x_q[:n]
+        ref = run_program(prog, frames, params).copy()
+        ref.flat[0] += 1
+        return frames, ref
+
+    spot = DifferentialSpotCheck(prog, params, poisoned, every=1,
+                                 max_checks=1, seed=0, backend="fast")
+    with pytest.raises(SpotCheckError):
+        spot.check(0, 2)

@@ -317,6 +317,67 @@ def test_derive_seed_stable():
     assert derive_seed(0, "a") != derive_seed(1, "a")
 
 
+def test_rate_label_distinct_beyond_six_decimals():
+    """Regression: probe seeds used f"{rate:.6f}" labels, so two rates
+    agreeing to six decimals silently shared a seed (correlated
+    verdicts). The full-float-bits label keeps every distinct rate on an
+    independent arrival stream."""
+    from repro.cfu.serve.planner import rate_label
+    a, b = 100.00000001, 100.00000002
+    assert f"{a:.6f}" == f"{b:.6f}"              # the old collision
+    assert rate_label(a) != rate_label(b)
+    assert derive_seed(0, "p", rate_label(a)) != \
+        derive_seed(0, "p", rate_label(b))
+    assert rate_label(a) == rate_label(100.00000001)   # still stable
+
+
+def _synthetic_simulate(feasible_below):
+    """A fake planner.simulate: SLO-feasible iff rate <= threshold."""
+    class _Res:
+        def __init__(self, rate):
+            ok = rate <= feasible_below
+            self.summary = {"drained": True,
+                            "latency_p99_cycles": 0.0 if ok
+                            else float("inf"),
+                            "latency_p99_ms": 0.0 if ok else 1e9,
+                            "rate_qps": rate}
+    return lambda service, policy, rate, **kw: _Res(rate)
+
+
+def test_bracket_widens_when_hi_endpoint_feasible(single_service,
+                                                  monkeypatch):
+    """Regression: the bisection assumed the 1.05x-ceiling endpoint was
+    infeasible without probing it, clamping policies that beat the
+    fixed-batch ceiling estimate. With the true limit at 3x the ceiling,
+    the widened bracket must find (about) 3x, not 1.05x."""
+    from repro.cfu.serve import planner
+    cap = 1
+    ceiling = max(single_service.service_rate_qps(b)
+                  for b in range(1, cap + 1))
+    truth = 3.0 * ceiling
+    monkeypatch.setattr(planner, "simulate", _synthetic_simulate(truth))
+    row = planner.max_sustainable_qps(single_service, "immediate", SLO,
+                                      n_requests=8, batch_cap=cap)
+    assert row["max_qps"] > 1.06 * ceiling       # beyond the old clamp
+    assert truth / (1 + 0.02) <= row["max_qps"] <= truth
+    # the upper endpoint was actually probed, hi-first
+    assert row["probes"][1]["rate_qps"] == pytest.approx(1.05 * ceiling)
+
+
+def test_bracket_widening_is_bounded(single_service, monkeypatch):
+    """An always-feasible model must terminate at the widening cap and
+    say so, not loop forever."""
+    from repro.cfu.serve import planner
+    monkeypatch.setattr(planner, "simulate",
+                        _synthetic_simulate(float("inf")))
+    row = planner.max_sustainable_qps(single_service, "immediate", SLO,
+                                      n_requests=8, batch_cap=1)
+    ceiling = row["service_ceiling_qps"]
+    assert row["bracket_exhausted"]
+    assert row["max_qps"] == pytest.approx(
+        1.05 * ceiling * 2 ** planner._MAX_WIDENINGS)
+
+
 def test_max_sustainable_qps_feasible_at_max(single_service):
     row = max_sustainable_qps(single_service, "immediate", SLO,
                               n_requests=80, seed=0, batch_cap=1)

@@ -26,6 +26,12 @@ from repro.kernels.flash_attention import flash_attention
     (DSCBlockSpec(cin=8, cmid=48, cout=16, stride=2), 12, 3),
     (DSCBlockSpec(cin=16, cmid=96, cout=16, stride=1), 10, 2),
     (DSCBlockSpec(cin=8, cmid=24, cout=8, stride=1), 9, 5),
+    # ragged last tile: tile_rows does not divide h2 (the old fallback
+    # silently degraded to the largest divisor — tile_rows=1 on primes)
+    (DSCBlockSpec(cin=8, cmid=24, cout=8, stride=1), 13, 4),   # h2=13 prime
+    (DSCBlockSpec(cin=8, cmid=24, cout=16, stride=2), 13, 4),  # odd W, h2=7
+    (DSCBlockSpec(cin=8, cmid=24, cout=8, stride=2), 11, 4),   # odd W, h2=6
+    (DSCBlockSpec(cin=8, cmid=24, cout=8, stride=1), 7, 16),   # tile > h2
 ])
 def test_fused_dsc_exact_vs_oracle(spec, hw, tile_rows):
     key = jax.random.PRNGKey(0)
