@@ -7,9 +7,10 @@
 
 Unlike the analytic benches (bench_speedup / bench_energy / bench_traffic),
 every number here is *measured from an instruction stream*: the paper's
-four bottleneck layers are compiled to the CFU ISA under the four
+four bottleneck layers are compiled to the CFU ISA under the five
 schedules (layer-by-layer via DRAM, layer-by-layer via SRAM, fused
-pixel-wise, fused row-tile) and walked by the timing model. The byte
+pixel-wise, fused row-tile, fused winograd) and walked by the timing
+model. The byte
 counts are asserted to match core.traffic's Eq. 1/2 exactly, and a
 bit-exactness smoke check runs the encoded binary through the golden
 executor against core.dsc.dsc_block_reference.

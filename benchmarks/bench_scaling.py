@@ -33,6 +33,17 @@ CI regression gate for the seed's modeled 59.3x. That gate geometry is
 fixed even under ``--tiny`` (which only shrinks the sweep image), so smoke
 runs check the same invariant as full runs.
 
+Two calibration/gate sections ride along (PR 8). ``sram_port_sweep``
+re-walks the fused-rowtile VWW stream at scratch-port widths W in
+{1,2,4,8} B/cycle (``analyze(sram_port_bytes=W)``): the byte counts are
+schedule properties, so the cycle curve must be monotonically
+non-increasing in W with W=1 equal to the committed paper calibration.
+``winograd_gate_point`` compares the exact-integer fused-winograd
+schedule against fused/fused-rowtile on the paper's 3rd bottleneck at
+40x40 under a depthwise-starved engine split; ``--gate-winograd`` is its
+CI gate (dw MAC stage >= 2x smaller than rowtile, strictly better total,
+and ``auto`` must select winograd there).
+
 Heterogeneous multi-stream sweep (PR 4): the ``multistream`` section maps
 the frame-pipeline design space — (streams N) x (homogeneous vs
 auto-hetero PE allocation at equal total MACs) x (frame-group batch B) —
@@ -78,6 +89,16 @@ AXES = ("exp_pes", "dw_lanes", "proj_engines")
 # port-bound and every allocation ties; >= 48 the allocation decides).
 HETERO_GATE_IMG_HW = 48
 HETERO_GATE_BASE_PE = PEConfig(5, 5, 28)    # per-core budget (half paper)
+
+# SRAM-port calibration sweep widths (bytes moved per cycle). W=1 is the
+# paper's byte-wide single-port scratch — the committed calibration.
+SRAM_PORT_WIDTHS = (1, 2, 4, 8)
+
+# The winograd gate's fixed engine split: depthwise-starved (2 dw lanes
+# against 9/56 exp/proj engines), where F(2x2,3x3)'s 4-multiplies-per-
+# output (vs direct 3x3's 9) pays and ``auto`` must pick it. At >= 3 dw
+# lanes the direct stage is cheap enough that auto keeps plain fused.
+WINOGRAD_GATE_PE = PEConfig(9, 2, 56)
 
 
 def sweep(img_hw: int = VWW.img_hw, pipelines=PIPELINES):
@@ -170,6 +191,63 @@ def hetero_gate_point():
     }
 
 
+def sram_port_sweep(img_hw: int = VWW.img_hw, widths=SRAM_PORT_WIDTHS):
+    """SRAM-port calibration curve: the fused-rowtile VWW stream re-walked
+    at scratch-port widths W in {1,2,4,8} bytes/cycle. The stream and its
+    byte counts never change — only the port-bound cycle terms scale — so
+    the curve is monotonically non-increasing in W, and W=1 equals the
+    default walk (the committed paper calibration)."""
+    specs = block_specs()
+    prog = compile_vww_network(specs, img_hw, CFUSchedule.FUSED_ROWTILE,
+                               img_ch=VWW.img_ch, head_ch=VWW.head_ch,
+                               n_classes=VWW.n_classes)
+    rows = []
+    for wbytes in widths:
+        rep = analyze(prog, "v3", sram_port_bytes=wbytes)
+        rows.append({"sram_port_bytes": wbytes,
+                     "network_cycles": rep.total_cycles,
+                     "sram_bytes": rep.sram_bytes,
+                     "energy_uj": rep.energy_pj["total"] / 1e6})
+    return {"img_hw": img_hw, "schedule": "fused-rowtile", "curve": rows}
+
+
+def winograd_gate_point():
+    """fused-winograd vs the direct fused schedules on the paper's 3rd
+    VWW bottleneck at 40x40 (the 80x80-input reference config) under the
+    depthwise-starved ``WINOGRAD_GATE_PE`` split. The exact-integer
+    F(2x2,3x3) transform does 4 multiplies per output instead of 9, so
+    the modeled dw MAC stage must shrink >= 2x vs fused-rowtile, the
+    total must strictly beat it, and ``--schedule auto`` must pick
+    winograd here. Fixed geometry regardless of ``--tiny``."""
+    name, spec, hw = PAPER_LAYERS[0]
+
+    def point(sched):
+        prog = compile_block(spec, hw, hw, sched, name=name,
+                             pe=WINOGRAD_GATE_PE)
+        return prog, analyze(prog, "v3")
+
+    rows = {}
+    for sched in ("fused", "fused-rowtile", "fused-winograd"):
+        prog, rep = point(sched)
+        rows[sched] = {"total_cycles": rep.total_cycles,
+                       "dw_mac_stage_cycles": rep.stage_cycles["dw_mac"],
+                       "n_instr": len(prog)}
+    auto_prog, _ = point("auto")
+    pick = auto_prog.meta["block_schedules"][name]
+    dw_speedup = (rows["fused-rowtile"]["dw_mac_stage_cycles"]
+                  / rows["fused-winograd"]["dw_mac_stage_cycles"])
+    return {
+        "img_hw": hw,
+        "pe": dataclasses.asdict(WINOGRAD_GATE_PE),
+        "schedules": rows,
+        "auto_pick": pick,
+        "dw_stage_speedup_vs_rowtile": dw_speedup,
+        "winograd_beats_rowtile":
+            rows["fused-winograd"]["total_cycles"]
+            < rows["fused-rowtile"]["total_cycles"],
+    }
+
+
 def block3_paper_speedup() -> float:
     """Fused-v3 speedup on the paper's 3rd bottleneck layer at 40x40 under
     the paper's PE config — the seed's 59.3x (Table III(A)) analogue. Fixed
@@ -224,6 +302,25 @@ def run(report, img_hw: int = VWW.img_hw):
         {**r, "pe_per_core": [dataclasses.asdict(p)
                               for p in r["pe_per_core"]]}
         for r in ms_rows]
+    sp = sram_port_sweep(img_hw)
+    result["sram_port_sweep"] = sp
+    report("# SRAM-port calibration sweep (fused-rowtile stream, v3): "
+           "wider scratch port, same bytes")
+    report("sram_port_bytes,network_cycles,energy_uJ")
+    for row in sp["curve"]:
+        report(f"{row['sram_port_bytes']},{row['network_cycles']:.3e},"
+               f"{row['energy_uj']:.2f}")
+    wg = winograd_gate_point()
+    result["winograd_gate"] = wg
+    report("# winograd gate point (block 3 @ 40x40, depthwise-starved "
+           f"PE {WINOGRAD_GATE_PE.exp_pes},{WINOGRAD_GATE_PE.dw_lanes},"
+           f"{WINOGRAD_GATE_PE.proj_engines})")
+    report("schedule,total_cycles,dw_mac_stage_cycles,n_instr")
+    for sched, row in wg["schedules"].items():
+        report(f"{sched},{row['total_cycles']:.3e},"
+               f"{row['dw_mac_stage_cycles']:.3e},{row['n_instr']}")
+    report(f"# auto picks: {wg['auto_pick']}; dw-stage speedup vs "
+           f"rowtile: {wg['dw_stage_speedup_vs_rowtile']:.2f}x")
     gate = block3_paper_speedup()
     result["block3_paper_pe_v3_speedup"] = gate
     report(f"# block-3 fused-v3 speedup at the paper PE point: "
@@ -248,12 +345,22 @@ def main():
     ap.add_argument("--multistream-json", default=None,
                     help="write ONLY the heterogeneous multi-stream sweep "
                          "+ gate point as JSON to this path (CI artifact)")
+    ap.add_argument("--winograd-json", default=None,
+                    help="write ONLY the winograd gate-point rows + the "
+                         "SRAM-port calibration curve as JSON to this "
+                         "path (CI artifact)")
     ap.add_argument("--check-speedup", type=float, default=None,
                     metavar="MIN",
                     help="fail if the block-3 fused-v3 speedup at the "
                          "paper PE point (fixed 40x40 geometry, NOT the "
                          "sweep's chain column) drops below MIN "
                          "(CI regression gate; seed models ~57x)")
+    ap.add_argument("--gate-winograd", action="store_true",
+                    help="fail unless fused-winograd shrinks the modeled "
+                         "dw MAC stage >= 2x vs fused-rowtile, strictly "
+                         "beats its total, AND --schedule auto picks it "
+                         "at the fixed gate point (block 3 @ 40x40, "
+                         "depthwise-starved engine split)")
     ap.add_argument("--gate-hetero", action="store_true",
                     help="fail unless the auto-hetero 2-core allocation "
                          "beats the equal-total-MACs homogeneous split "
@@ -278,6 +385,15 @@ def main():
                        "hetero_gate": result["hetero_gate"]}, f, indent=2)
         print(f"# wrote {args.multistream_json}")
 
+    if args.winograd_json:
+        os.makedirs(os.path.dirname(args.winograd_json) or ".",
+                    exist_ok=True)
+        with open(args.winograd_json, "w") as f:
+            json.dump({"winograd_gate": result["winograd_gate"],
+                       "sram_port_sweep": result["sram_port_sweep"]},
+                      f, indent=2)
+        print(f"# wrote {args.winograd_json}")
+
     if args.check_speedup is not None:
         got = result["block3_paper_pe_v3_speedup"]
         if got < args.check_speedup:
@@ -286,6 +402,24 @@ def main():
                 f"paper PE point {got:.1f}x < required "
                 f"{args.check_speedup:.1f}x")
         print(f"# speedup gate OK: {got:.1f}x >= {args.check_speedup:.1f}x")
+
+    if args.gate_winograd:
+        wg = result["winograd_gate"]
+        problems = []
+        if wg["auto_pick"] != "fused-winograd":
+            problems.append(f"auto picked {wg['auto_pick']}")
+        if wg["dw_stage_speedup_vs_rowtile"] < 2.0:
+            problems.append(
+                f"dw-stage speedup {wg['dw_stage_speedup_vs_rowtile']:.2f}x"
+                f" < 2.0x")
+        if not wg["winograd_beats_rowtile"]:
+            problems.append("total cycles do not beat fused-rowtile")
+        if problems:
+            raise SystemExit("WINOGRAD REGRESSION: " + "; ".join(problems))
+        print(f"# winograd gate OK: auto picks fused-winograd, dw stage "
+              f"{wg['dw_stage_speedup_vs_rowtile']:.2f}x vs rowtile, "
+              f"total {wg['schedules']['fused-winograd']['total_cycles']:.3e}"
+              f" < {wg['schedules']['fused-rowtile']['total_cycles']:.3e}")
 
     if args.gate_hetero:
         hg = result["hetero_gate"]

@@ -11,7 +11,7 @@ copy-pasted lowering paths of the old monolithic emitter are gone):
   ``ir.build_vww_ir`` (complete inference: stem 3x3 s2, bottleneck chain,
   head 1x1, GAP, FC) produce typed ops over named tensor values.
 * **schedule** — ``assign_schedules`` annotates every ``DSCBlock`` with
-  one of the four schedules (see ``ir.SCHEDULES``), accepting a uniform
+  one of the five schedules (see ``ir.SCHEDULES``), accepting a uniform
   schedule, a per-block mapping, or ``AUTO_SCHEDULE`` (= ``"auto"``): a
   cost-model pick per block, driven by ``timing.analyze`` on a
   single-block compile of each candidate — the winning loop structure
@@ -44,6 +44,13 @@ Schedule lowering (per ``DSCBlock``):
   resident in the strip and are reused, not recomputed — expansion runs
   exactly once per input row, and DRAM traffic equals the fused
   dataflow's exactly.
+* ``fused-winograd`` — rowtile-shaped fusion over 2-row bands, but the
+  depthwise stage runs on the exact-integer Winograd F(2x2,3x3) unit
+  (``cfu.winograd``): CFG_WINO arms the tile grid, WINO_MAC computes an
+  output pixel off its 2x2 tile (16 multiplies per tile = 4 per output
+  vs the direct 9, bit-exact by construction — the compiler REFUSES any
+  config whose folded transform could overflow int32). Stride-2 blocks
+  fall back to ``fused`` at scheduling time.
 
 Multi-stream compilation (``streams=N``): the op chain is partitioned
 into N contiguous segments, one CFU core per segment, each core owning a
@@ -77,6 +84,7 @@ from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
 from repro.cfu import ir as ir_mod
 from repro.cfu import isa
+from repro.cfu import winograd
 from repro.cfu.ir import (CFUSchedule, Conv3x3, DSCBlock, FC, GAP, Head1x1,
                           IRProgram, Layout, MemoryPlanError, Region,
                           SCHEDULES, build_chain_ir, build_vww_ir,
@@ -179,17 +187,28 @@ def assign_schedules(ir: IRProgram, schedule: ScheduleSpec, *,
             ir, pipeline=pipeline, pe=pe, tile_rows=tile_rows)
         for op in ir.dsc_blocks():
             op.schedule, op.tile_rows = mapping[op.name], tile_rows
-        return
-    if isinstance(schedule, Mapping):
+    elif isinstance(schedule, Mapping):
         for op in ir.dsc_blocks():
             if op.name not in schedule:
                 raise ValueError(f"no schedule given for block {op.name!r}")
             op.schedule = _resolve_one(schedule[op.name])
             op.tile_rows = tile_rows
-        return
-    uniform = _resolve_one(schedule)
+    else:
+        uniform = _resolve_one(schedule)
+        for op in ir.dsc_blocks():
+            op.schedule, op.tile_rows = uniform, tile_rows
+    _winograd_fallback(ir)
+
+
+def _winograd_fallback(ir: IRProgram) -> None:
+    """F(2x2,3x3) covers stride-1 windows only: a stride-2 block asked to
+    run fused-winograd falls back to the plain fused dataflow (same
+    traffic, direct depthwise). Under ``auto`` the winograd candidate
+    therefore *ties* fused on stride-2 blocks and the enum-order
+    tie-break keeps fused — the fallback never changes an auto pick."""
     for op in ir.dsc_blocks():
-        op.schedule, op.tile_rows = uniform, tile_rows
+        if op.schedule is CFUSchedule.FUSED_WINOGRAD and op.spec.stride != 1:
+            op.schedule = CFUSchedule.FUSED
 
 
 def _strip_rows(spec, tile_rows: int) -> int:
@@ -230,6 +249,15 @@ def materialize_scratch(ir: IRProgram) -> None:
                 space=isa.SPACE_SRAM, def_idx=oi, last_use=oi,
                 scratch=True))
             op.scratch.append(nm)
+        elif op.schedule is CFUSchedule.FUSED_WINOGRAD:
+            # one F(2x2,3x3) tile row's full input halo: 2*1 + 2 = 4 rows
+            # (stride is 1 here — stride-2 blocks fell back to fused)
+            nm = f"f1strip@{op.name}"
+            ir.add_value(ir_mod.Value(
+                nm, (winograd.WIN, bw, spec.cmid),
+                space=isa.SPACE_SRAM, def_idx=oi, last_use=oi,
+                scratch=True))
+            op.scratch.append(nm)
         # FUSED: intermediates live only in the tile/vector registers.
 
 
@@ -241,8 +269,9 @@ def materialize_scratch(ir: IRProgram) -> None:
 class _InstrSel:
     """Emit the ISA for a (scheduled, memory-planned) op sequence."""
 
-    def __init__(self, layout: Layout):
+    def __init__(self, layout: Layout, pe: Optional[PEConfig] = None):
         self.layout = layout
+        self.pe = pe or PEConfig()
         self.instrs: List[Instr] = []
         self.phase = 0
 
@@ -324,9 +353,18 @@ class _InstrSel:
         self.emit("CFG", spec.cin, spec.cmid, spec.cout, spec.stride, bh, bw)
         if op.schedule is CFUSchedule.FUSED_ROWTILE:
             self.emit("CFG_STRIP", _strip_rows(spec, op.tile_rows))
+        elif op.schedule is CFUSchedule.FUSED_WINOGRAD:
+            # exact-or-refuse: a config whose folded transform could
+            # overflow int32 must not compile (differential policy)
+            winograd.check_exact()
+            h2, w2 = spec.out_hw(bh, bw)
+            self.emit("CFG_STRIP", winograd.WIN)
+            self.emit("CFG_WINO", -(-h2 // winograd.TILE),
+                      -(-w2 // winograd.TILE), self.pe.shared_dw_pw)
         self.bind(isa.REG_IN, op.inputs[0])
         self.bind(isa.REG_OUT, op.outputs[0])
-        if op.schedule is CFUSchedule.FUSED_ROWTILE:
+        if op.schedule in (CFUSchedule.FUSED_ROWTILE,
+                           CFUSchedule.FUSED_WINOGRAD):
             self.bind(isa.REG_F1, op.scratch[0])
         for which in (isa.WGT_EXP, isa.WGT_DW, isa.WGT_PROJ):
             self.emit("LD_WGT", which, op.param_idx)
@@ -334,6 +372,8 @@ class _InstrSel:
             self._dsc_fused(op)
         elif op.schedule is CFUSchedule.FUSED_ROWTILE:
             self._dsc_rowtile(op)
+        elif op.schedule is CFUSchedule.FUSED_WINOGRAD:
+            self._dsc_winograd(op)
         else:
             self._dsc_layer(op)
 
@@ -389,6 +429,41 @@ class _InstrSel:
                     self.emit("RES_ADD", oy, ox)
                 self.emit("ST_PX", oy, ox)
 
+    def _dsc_winograd(self, op: DSCBlock):
+        """Winograd F(2x2,3x3) row tiling: per band of TILE output rows,
+        expand only the NEW strip rows (halo reuse exactly as rowtile —
+        each input row once), then WINO_MAC computes each output pixel
+        off its 2x2 tile (the tile's 16-multiply array runs once per
+        tile, reused for the second row/column of the tile) and the
+        unchanged REQUANT F2 -> PROJ_MAC tail finishes the pixel.
+        Stride is 1 by construction (assign_schedules falls back)."""
+        spec, bh, bw = op.spec, op.h, op.w
+        h2, w2 = spec.out_hw(bh, bw)       # == (bh, bw) at stride 1
+        rows_done = 0
+        for r0 in range(0, h2, winograd.TILE):
+            r1 = min(h2, r0 + winograd.TILE)
+            # tiles at band r0 gather input rows r0-1 .. r0+2; rows past
+            # the image are zero-point padding, never expanded
+            need_hi = min(bh - 1, r1)
+            self.bar()
+            for y in range(rows_done, need_hi + 1):
+                for x in range(bw):
+                    self.emit("LD_VEC", isa.REG_IN, y, x)
+                    self.emit("EXP_MAC", isa.MODE_VEC)
+                    self.emit("REQUANT", isa.STAGE_F1)
+                    self.emit("ST_VEC", isa.REG_F1, y, x)
+            rows_done = max(rows_done, need_hi + 1)
+            self.bar()
+            for oy in range(r0, r1):
+                for ox in range(w2):
+                    self.emit("WINO_MAC", oy, ox)
+                    self.emit("REQUANT", isa.STAGE_F2)
+                    self.emit("PROJ_MAC")
+                    self.emit("REQUANT", isa.STAGE_OUT)
+                    if spec.has_residual:
+                        self.emit("RES_ADD", oy, ox)
+                    self.emit("ST_PX", oy, ox)
+
     def _dsc_rowtile(self, op: DSCBlock):
         """Row-tile fusion with halo reuse: per tile, expand only the strip
         rows not already resident (each input row exactly once), then
@@ -428,7 +503,7 @@ def select_instructions(ops: Sequence[ir_mod.Op], layout: Layout,
 
     ``core=(i, n)`` stamps the stream with its pipeline-stage slot
     (CFG_CORE) — multi-stream segments are self-describing."""
-    sel = _InstrSel(layout)
+    sel = _InstrSel(layout, pe)
     sel.emit("CFG_PE", pe.exp_pes, pe.dw_lanes, pe.proj_engines)
     if core is not None:
         sel.emit("CFG_CORE", core[0], core[1])
@@ -553,7 +628,8 @@ HETERO_FRACTIONS = (0.5, 0.75, 1.0, 1.25, 1.5)
 
 
 def split_pe_budget(total: Tuple[int, int, int],
-                    fractions: Sequence[float]) -> List[PEConfig]:
+                    fractions: Sequence[float],
+                    shared_dw_pw: int = 0) -> List[PEConfig]:
     """Split a total engine budget into per-core ``PEConfig``s, exactly.
 
     ``total`` is the (exp_pes, dw_lanes, proj_engines) engine budget summed
@@ -583,7 +659,8 @@ def split_pe_budget(total: Tuple[int, int, int],
                     if counts[i] > 1]
             counts[min(rema)[1]] -= 1
         out_axes.append(counts)
-    return [PEConfig(out_axes[0][i], out_axes[1][i], out_axes[2][i])
+    return [PEConfig(out_axes[0][i], out_axes[1][i], out_axes[2][i],
+                     shared_dw_pw=shared_dw_pw)
             for i in range(n)]
 
 
@@ -624,7 +701,8 @@ def hetero_pe_candidates(n: int,
     out = []
     for p in profiles:
         try:
-            out.append(split_pe_budget(total, p))
+            out.append(split_pe_budget(total, p,
+                                       shared_dw_pw=base_pe.shared_dw_pw))
         except ValueError:
             continue       # budget too small for this share profile
     return out

@@ -73,6 +73,7 @@ from typing import Dict, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.cfu import isa
+from repro.cfu import winograd
 from repro.cfu.isa import Instr
 from repro.cfu.trace import (CAT_EXEC, CAT_MARK, NULL_TRACER, CounterBank,
                              Tracer)
@@ -217,6 +218,9 @@ class CFUMachine:
         self.stride = 1
         self.h = self.w = self.h2 = self.w2 = 0
         self.strip_rows = 0      # CFG_STRIP: F1 rolling-buffer depth (0=off)
+        self.wino_cfg = None     # CFG_WINO latch: (tiles_y, tiles_x, shared)
+        self._wino_tiles = {}    # (ty, tx) -> (B, 2, 2, M) int32 tile regs
+        self._wino_u4 = {}       # block -> transformed weights (4, 4, M)
         self.frame_parity = 0    # ping/pong latch CFG_DBUF resolves against
         self.core_id: Optional[Tuple[int, int]] = None   # CFG_CORE slot
         # base registers: reg -> (space, addr)
@@ -286,6 +290,7 @@ class CFUMachine:
         """BAR/HALT: reset the line-buffer trackers, emit the phase span
         (executor time axis = retired instructions)."""
         self._touched.clear()
+        self._wino_tiles.clear()    # tile registers drain with the pipeline
         start, end = self._phase_start, self.stats.n_instr
         if end > start:
             self.tracer.span(
@@ -373,12 +378,21 @@ class CFUMachine:
         self.stride, self.h, self.w = stride, h, w
         self.h2, self.w2 = -(-h // stride), -(-w // stride)
         self.strip_rows = 0      # each block opts back in via CFG_STRIP
+        self.wino_cfg = None     # ... and via CFG_WINO
+        self._wino_tiles.clear()
 
     def _op_cfg_pe(self, exp_pes, dw_lanes, proj_engines):
         pass  # engine counts shape time, never values (timing model only)
 
     def _op_cfg_strip(self, rows):
         self.strip_rows = rows
+
+    def _op_cfg_wino(self, tiles_y, tiles_x, shared):
+        # arm the F(2x2,3x3) unit for this block; ``shared`` only shapes
+        # time (the projection GEMM borrows the idle multiply array in the
+        # cost model) — values are unaffected, like CFG_PE
+        self.wino_cfg = (tiles_y, tiles_x, shared)
+        self._wino_tiles.clear()
 
     def _op_cfg_core(self, core, n_cores):
         self.core_id = (core, n_cores)   # informational: stream identity
@@ -467,6 +481,48 @@ class CFUMachine:
         self.acc = prod.sum(axis=(-3, -2)) + cw.b_dw
         self.acc_src = "dw"
         self._meter_macs("dw", self.f1t.size)
+
+    def _op_wino_mac(self, oy, ox):
+        """One output pixel off its F(2x2,3x3) tile.
+
+        The first pixel of a 2x2 tile runs the 16-multiply array: gather
+        the 4x4 F1 window (top-left = 2·ty - 1, zero-point padding for
+        out-of-range taps — identical to the reference's padded F1), push
+        it through the folded integer transform (``cfu.winograd``), and
+        latch the (2, 2, M) int32 tile in the tile registers. The tile's
+        other pixels reuse the latched values: no reads, no multiplies —
+        that is the 9 -> 4 effective-MAC win the schedule exists for.
+        """
+        self._need_wgt(isa.WGT_DW, "winograd depthwise")
+        if self.wino_cfg is None:
+            raise RuntimeError("WINO_MAC before CFG_WINO armed the unit")
+        cw = self.cur
+        t = winograd.TILE
+        ty, tx = oy // t, ox // t
+        tile = self._wino_tiles.get((ty, tx))
+        if tile is None:
+            hm, wm, ch = self._map_shape(isa.REG_F1)
+            zp = np.int8(self._zp_of(isa.REG_F1))
+            d = np.empty((self.batch, winograd.WIN, winograd.WIN, ch),
+                         np.int8)
+            for dy in range(winograd.WIN):
+                iy = ty * t + dy - 1
+                for dx in range(winograd.WIN):
+                    ix = tx * t + dx - 1
+                    if 0 <= iy < hm and 0 <= ix < wm:
+                        self._meter_read(isa.REG_F1, iy, ix, "wino")
+                        d[:, dy, dx] = self._vec_slice(isa.REG_F1, iy, ix)
+                    else:
+                        d[:, dy, dx] = zp
+            u4 = self._wino_u4.get(self.cur_block)
+            if u4 is None:
+                u4 = winograd.weight_transform(cw.w_dw)
+                self._wino_u4[self.cur_block] = u4
+            tile = winograd.wino_dw_tiles(d, u4)
+            self._wino_tiles[(ty, tx)] = tile
+            self._meter_macs("dw", d.size)   # 16·M·B, vs the direct 9·M·B
+        self.acc = tile[:, oy % t, ox % t] + cw.b_dw
+        self.acc_src = "dw"
 
     def _op_proj_mac(self):
         self._need_wgt(isa.WGT_PROJ, "projection")

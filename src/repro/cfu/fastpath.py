@@ -22,8 +22,16 @@ instruction kinds are unambiguous:
 
 * ``CONV_MAC``                      -> 3x3 stem conv
 * ``DW_MAC``                        -> DSC block (residual iff ``RES_ADD``)
+* ``WINO_MAC``                      -> DSC block, winograd depthwise body
 * ``GAP_RST``                       -> GAP + FC classifier unit
 * ``EXP_MAC``-only                  -> head 1x1 conv
+
+The fused-winograd schedule gets its own jnp stage body (used for BOTH
+backends — there is no Pallas winograd kernel): the identical folded
+integer F(2x2,3x3) transform of ``cfu.winograd``, batched over the tile
+grid with strided slices, exact by the same argument as the interpreter
+(the transform IS integer arithmetic; the elementwise stage runs in
+int32 well under the statically-checked accumulator bound).
 
 and then reuse arithmetic that is ALREADY proven bit-exact against the
 interpreter: ``kernels/fused_dsc.py`` for fused/rowtile DSC blocks (the
@@ -77,16 +85,19 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+from collections import OrderedDict
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.cfu import isa
+from repro.cfu import winograd
 from repro.cfu.executor import bind_input, read_output
 
 __all__ = [
     "FastPathError", "FastPathExecutor", "program_fingerprint",
     "run_fast", "fast_executor", "cache_info", "clear_cache",
+    "set_cache_limit",
 ]
 
 
@@ -194,6 +205,13 @@ def _lift_stream(instrs: Sequence[isa.Instr]) -> List[_Stage]:
             stages.append(_Stage("dsc", wgt[isa.WGT_EXP], cin, cmid, cout,
                                  stride, h, w, residual=residual,
                                  impl=impl, tile_rows=tr))
+        elif "WINO_MAC" in ops:
+            # fused-winograd: no DW_MAC/LD_WIN in the stream, so this must
+            # be checked before the EXP_MAC-only head classification
+            stages.append(_Stage("dsc", wgt[isa.WGT_EXP], cin, cmid, cout,
+                                 stride, h, w, residual=residual,
+                                 impl="winograd",
+                                 tile_rows=winograd.TILE))
         elif "EXP_MAC" in ops:
             stages.append(_Stage("head", wgt[isa.WGT_EXP], cin, cmid,
                                  cout, stride, h, w))
@@ -339,6 +357,59 @@ def _build_stage_fn(stage: _Stage, p, use_pallas: bool):
         return gapfc_fn
 
     # --- DSC block ---------------------------------------------------------
+    if stage.impl == "winograd":
+        # Same folded integer F(2x2,3x3) as executor._op_wino_mac, batched
+        # over the whole tile grid with strided slices. Used for BOTH
+        # backends — there is no Pallas winograd kernel; the transform is
+        # a handful of tiny integer contractions XLA fuses fine. Exactness
+        # is the interpreter's argument verbatim: every intermediate is
+        # bounded by winograd.accumulator_bound() << 2^31, and Y4 is a
+        # multiple of 4, so the floor division is exact.
+        zp_f1 = p.qp_f1.zero_point
+        zp_f2, zp_out = p.qp_f2.zero_point, p.qp_out.zero_point
+        q6_f1, q6_f2 = p.q6_f1, p.q6_f2
+        residual, p0 = stage.residual, p
+        cin, cmid, cout = stage.cin, stage.cmid, stage.cout
+        bt = jnp.asarray(winograd.BT, jnp.int32)
+        g2 = jnp.asarray(winograd.G2, jnp.int32)
+        at = jnp.asarray(winograd.AT, jnp.int32)
+
+        def dsc_wino_fn(x, w):
+            h, wd = x.shape[0], x.shape[1]
+            acc = mm(x.reshape(h * wd, cin), w["w_exp"],
+                     cin).reshape(h, wd, cmid) + w["b_exp"]
+            f1 = quant.requantize(acc, w["m_exp"], zp_f1, relu=True,
+                                  relu6_max_q=q6_f1)
+            h2, w2 = h, wd                       # stride 1 by construction
+            ty, tx = -(-h2 // 2), -(-w2 // 2)
+            # zp_f1 halo + right/bottom overhang padding to an even tile
+            # grid — identical to the reference's padded F1 (overhang taps
+            # fall outside the map, which IS the zero-point fill)
+            f1p = jnp.pad(f1, ((1, 1 + 2 * ty - h2), (1, 1 + 2 * tx - w2),
+                               (0, 0)), constant_values=zp_f1)
+            taps = [jax.lax.slice(
+                f1p, (dy, dx, 0),
+                (dy + 2 * (ty - 1) + 1, dx + 2 * (tx - 1) + 1, cmid),
+                (2, 2, 1)) for dy in range(4) for dx in range(4)]
+            d = jnp.stack(taps, axis=2).reshape(ty, tx, 4, 4, cmid)
+            d = d.astype(jnp.int32)
+            u4 = jnp.einsum("ij,jkc,lk->ilc", g2,
+                            w["w_dw"].astype(jnp.int32), g2)
+            v = jnp.einsum("ij,yxjkc,lk->yxilc", bt, d, bt)
+            y4 = jnp.einsum("ij,yxjkc,lk->yxilc", at, v * u4, at)
+            tiles = y4 // 4                      # exact: y4 = 4 * conv
+            full = tiles.transpose(0, 2, 1, 3, 4).reshape(
+                2 * ty, 2 * tx, cmid)[:h2, :w2]
+            f2 = quant.requantize(full + w["b_dw"], w["m_dw"], zp_f2,
+                                  relu=True, relu6_max_q=q6_f2)
+            acc = mm(f2.reshape(h2 * w2, cmid), w["w_proj"],
+                     cmid).reshape(h2, w2, cout) + w["b_proj"]
+            y = quant.requantize(acc, w["m_proj"], zp_out)
+            if residual:
+                y = dsc_mod.residual_add_q(y, x, p0)
+            return y
+        return dsc_wino_fn
+
     if not use_pallas:
         # jnp twin of the block arithmetic (identical stage semantics to
         # dsc_block_reference, matmuls in f32 where exact) — XLA:CPU
@@ -478,9 +549,39 @@ class FastPathExecutor:
         return y if batched else y[0]
 
 
-_CACHE: Dict[Tuple[str, Tuple, bool], FastPathExecutor] = {}
+_CACHE: "OrderedDict[Tuple[str, Tuple, bool], FastPathExecutor]" = \
+    OrderedDict()
 _HITS = 0
 _MISSES = 0
+_EVICTIONS = 0
+#: Default trace-cache capacity. Generous (a trace is small; the VWW
+#: matrix tests trace a few dozen programs) but BOUNDED: long serving
+#: runs cycling through many compiled design points no longer grow the
+#: cache without limit. ``set_cache_limit`` reconfigures it.
+_DEFAULT_CACHE_LIMIT = 128
+_LIMIT = _DEFAULT_CACHE_LIMIT
+
+
+def set_cache_limit(n: int) -> None:
+    """Bound the trace cache to ``n`` executors (LRU eviction).
+
+    Shrinking below the current size evicts the least-recently-used
+    entries immediately. Eviction only drops the cached trace — a later
+    request for the same program re-lifts and re-traces, bit-exact
+    (pinned by the eviction test in ``tests/test_cfu_fastpath.py``).
+    """
+    global _LIMIT
+    if n < 1:
+        raise ValueError(f"cache limit must be >= 1, got {n}")
+    _LIMIT = n
+    _evict_to_limit()
+
+
+def _evict_to_limit() -> None:
+    global _EVICTIONS
+    while len(_CACHE) > _LIMIT:
+        _CACHE.popitem(last=False)
+        _EVICTIONS += 1
 
 
 def _resolve_use_pallas(flag: Optional[bool]) -> bool:
@@ -513,11 +614,13 @@ def fast_executor(prog, params: Sequence,
             hit = _CACHE.get(key)
             if hit is not None:
                 _HITS += 1
+                _CACHE.move_to_end(key)     # LRU: refresh recency
                 return hit
             break
     ex = FastPathExecutor(prog, params, use_pallas=up)
     _CACHE[(fp, ex.static_key, up)] = ex
     _MISSES += 1
+    _evict_to_limit()
     return ex
 
 
@@ -531,11 +634,14 @@ def run_fast(prog, x_q, params: Sequence,
 
 def cache_info() -> Dict[str, object]:
     return {"size": len(_CACHE), "hits": _HITS, "misses": _MISSES,
+            "evictions": _EVICTIONS, "limit": _LIMIT,
             "fingerprints": sorted({fp for fp, *_ in _CACHE})}
 
 
 def clear_cache() -> None:
-    global _HITS, _MISSES
+    global _HITS, _MISSES, _EVICTIONS, _LIMIT
     _CACHE.clear()
     _HITS = 0
     _MISSES = 0
+    _EVICTIONS = 0
+    _LIMIT = _DEFAULT_CACHE_LIMIT

@@ -30,6 +30,13 @@ Schedules (``CFUSchedule`` + the ``SCHEDULES`` registry)
                  once — the ``dsc_block_fused_rowtile``/Pallas granularity,
                  but with zero expansion recompute — while DRAM traffic
                  stays exactly the fused dataflow's.
+``fused-winograd`` rowtile dataflow with the depthwise stage on the exact
+                 integer Winograd F(2x2,3x3) unit (``CFG_WINO`` /
+                 ``WINO_MAC``): 2x2 output tiles from 4x4 F1 windows, 4
+                 effective multiplies per output instead of 9, bit-exact
+                 by construction (``cfu/winograd.py``). Stride-1 blocks
+                 only; stride-2 blocks fall back to ``fused``
+                 transparently at schedule-assignment time.
 =============== =============================================================
 
 ``SCHEDULES`` is the single registry every CLI/benchmark choice list is
@@ -52,6 +59,7 @@ class CFUSchedule(enum.Enum):
     LAYER_SRAM = "layer-sram"
     FUSED = "fused"
     FUSED_ROWTILE = "fused-rowtile"
+    FUSED_WINOGRAD = "fused-winograd"
 
 
 #: Schedules whose per-pixel phases span several engine groups, so the
@@ -59,7 +67,8 @@ class CFUSchedule(enum.Enum):
 #: passes are single-group: all modes coincide). Report/bench tables
 #: derive their pipeline sweeps from this one set.
 MULTI_STAGE_SCHEDULES = frozenset(
-    {CFUSchedule.FUSED, CFUSchedule.FUSED_ROWTILE})
+    {CFUSchedule.FUSED, CFUSchedule.FUSED_ROWTILE,
+     CFUSchedule.FUSED_WINOGRAD})
 
 #: name -> (schedule, one-line description). The single source of truth for
 #: every ``--schedule`` choice list and report row label.
@@ -76,6 +85,10 @@ SCHEDULES: Dict[str, Tuple[CFUSchedule, str]] = {
     CFUSchedule.FUSED_ROWTILE.value:
         (CFUSchedule.FUSED_ROWTILE,
          "row-tile fused, rolling SRAM F1 strip, halo reuse across rows"),
+    CFUSchedule.FUSED_WINOGRAD.value:
+        (CFUSchedule.FUSED_WINOGRAD,
+         "rowtile fused, depthwise on the exact-integer Winograd "
+         "F(2x2,3x3) unit (stride-2 blocks fall back to fused)"),
 }
 
 

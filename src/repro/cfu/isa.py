@@ -73,6 +73,29 @@ description of its hardware point):
   to the inter-core boundary maps of a partitioned network. Addresses are
   24-bit (the two of them must share the word with reg+space); the
   compiler validates placements fit.
+
+Winograd depthwise extension (PR 8)
+-----------------------------------
+Two words carry the ``fused-winograd`` schedule (WinoFPGA-style F(2x2,3x3)
+depthwise with 2x2->4x4 tile stitching):
+
+* ``CFG_WINO tiles_y, tiles_x, shared`` — arm the Winograd depthwise unit
+  for the current block: the output map is stitched from ``tiles_y x
+  tiles_x`` 2x2 tiles, each computed from a 4x4 window of the expanded F1
+  map via the exact-integer folded transforms (BᵀdB with ±1 entries,
+  (2G)g(2G)ᵀ = 4·GgGᵀ kept integral, Y = Aᵀ(V∘Ũ)A / 4 — the division is
+  exact, so the unit is bit-identical to the direct 3x3 depthwise).
+  ``shared`` latches the shared dw/pw engine variant: while the Winograd
+  multiply array is armed, its idle lanes are reused by the pointwise
+  projection GEMM (a timing-model property; values never change).
+  Every ``CFG`` disarms the unit.
+* ``WINO_MAC oy, ox`` — produce the depthwise accumulator for output pixel
+  ``(oy, ox)``: the unit computes (or reuses, for the other three pixels of
+  the same 2x2 tile) the tile at ``(oy//2, ox//2)`` — 16 elementwise
+  multiplies per channel instead of the direct unit's 36 — and latches
+  ``Y[oy%2, ox%2] + b_dw`` on the depthwise accumulator, feeding the same
+  ``REQUANT F2`` -> ``PROJ_MAC`` tail as ``DW_MAC``. Out-of-map window taps
+  read the F1 zero point, exactly like the direct path's padding.
 """
 
 from __future__ import annotations
@@ -122,6 +145,8 @@ OPCODES: Dict[str, int] = {
     "CFG_STRIP": 0x14,
     "CFG_CORE": 0x15,
     "CFG_DBUF": 0x16,
+    "CFG_WINO": 0x17,
+    "WINO_MAC": 0x18,
 }
 MNEMONICS = {v: k for k, v in OPCODES.items()}
 
@@ -151,6 +176,9 @@ FIELD_SPECS: Dict[str, List[Tuple[str, int]]] = {
     "CFG_CORE": [("core", 8), ("n_cores", 8)],
     # ping/pong bases share the word, so they are 24-bit (16 MB) each
     "CFG_DBUF": [("reg", 2), ("space", 1), ("base0", 24), ("base1", 24)],
+    # Winograd F(2x2,3x3) depthwise: 2x2 output tiles over a 4x4 F1 window
+    "CFG_WINO": [("tiles_y", 12), ("tiles_x", 12), ("shared", 1)],
+    "WINO_MAC": [("oy", 12), ("ox", 12)],
 }
 
 

@@ -123,7 +123,9 @@ def table_iii_lines(rows: List[Dict[str, object]]) -> List[str]:
                            (("fused", "v2"), "cfu_fused_v2"),
                            (("fused", "v3"), "cfu_fused_v3"),
                            (("fused-rowtile", "v3"),
-                            "cfu_fused_rowtile_v3")):
+                            "cfu_fused_rowtile_v3"),
+                           (("fused-winograd", "v3"),
+                            "cfu_fused_winograd_v3")):
             rep = r["reports"].get(key)
             if rep is None:
                 continue
@@ -152,7 +154,8 @@ def table_v_lines(rows: List[Dict[str, object]]) -> List[str]:
            "(fused pays its 9x expansion recompute)",
            "layer,schedule,macs,uJ_mac,uJ_dram,uJ_sram,uJ_total"]
     for r in rows:
-        for sched in ("layer-dram", "layer-sram", "fused", "fused-rowtile"):
+        for sched in ("layer-dram", "layer-sram", "fused", "fused-rowtile",
+                      "fused-winograd"):
             rep = _rep_any(r, sched)
             e = rep.energy_pj
             out.append(f"{r['name']},{sched},{rep.macs},"
@@ -177,6 +180,9 @@ def table_vi_lines(rows: List[Dict[str, object]]) -> List[str]:
             ("fused", t.fused_total),
             # halo reuse: rowtile's DRAM bytes equal the fused dataflow's
             ("fused-rowtile", t.fused_total),
+            # winograd tiles read the SRAM strip; DRAM traffic is still
+            # one expansion read per input row + one output write = fused
+            ("fused-winograd", t.fused_total),
         )
         for sched, analytic in cells:
             rep = _rep_any(r, sched)

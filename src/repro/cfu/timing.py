@@ -132,6 +132,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.cfu import isa
+from repro.cfu import winograd
 from repro.cfu.isa import Program
 from repro.cfu.trace import CAT_PHASE, CounterBank, Tracer
 from repro.core.fusion import (C_DW, C_DWQ, C_EX_PER_IN_CH, C_EXQ, C_PR,
@@ -182,12 +183,23 @@ class PEConfig:
     exp_pes: int = 9          # expansion window engines (one per 3x3 tap)
     dw_lanes: int = 9         # depthwise MAC lanes
     proj_engines: int = PROJECTION_ENGINES    # output-stationary PEs (56)
+    # Shared dw/pw engine variant (WinoFPGA-style): when a block runs the
+    # fused-winograd schedule, its depthwise multiply array idles for 3 of
+    # every 4 output pixels (the 16-multiply array fires once per 2x2
+    # tile), so the projection GEMM may borrow the idle lanes. 1 = the
+    # projection stage is priced with proj_engines + dw_lanes effective
+    # engines while CFG_WINO is armed. Reuse, not extra silicon: the leak
+    # term still charges exp + dw + proj engines.
+    shared_dw_pw: int = 0
 
     def __post_init__(self):
-        for f in dataclasses.fields(self):
-            v = getattr(self, f.name)
+        for name in ("exp_pes", "dw_lanes", "proj_engines"):
+            v = getattr(self, name)
             if not 1 <= int(v) <= 255:
-                raise ValueError(f"PEConfig.{f.name}={v} outside [1, 255]")
+                raise ValueError(f"PEConfig.{name}={v} outside [1, 255]")
+        if self.shared_dw_pw not in (0, 1):
+            raise ValueError(
+                f"PEConfig.shared_dw_pw={self.shared_dw_pw} must be 0 or 1")
 
 
 @dataclasses.dataclass
@@ -242,6 +254,10 @@ class TimingReport:
     sram_wr_bytes: int = 0
     retired: Dict[str, int] = dataclasses.field(default_factory=dict)
     macs_by_engine: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # per-stage engine-busy cycles summed over iterations BEFORE pipelining
+    # overlap (keys "ex_mac"/"ex_q"/"dw_mac"/"dw_q"/"pr_mac"/"gap") — the
+    # axis the winograd ≥2x depthwise-stage gate compares on
+    stage_cycles: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     @property
     def frames_per_cycle(self) -> float:
@@ -283,6 +299,8 @@ class _Walker:
         self.stride = 1
         self.h = self.w = self.h2 = self.w2 = 0
         self.strip_rows = 0      # CFG_STRIP rolling-buffer depth (0 = off)
+        self.wino = None         # CFG_WINO latch: (tiles_y, tiles_x, shared)
+        self.wino_seen: set = set()    # tiles whose 16-mul array has fired
         self.base: Dict[int, Tuple[int, int]] = {}
         # traffic
         self.touched: Dict[Tuple[int, str], np.ndarray] = {}
@@ -297,6 +315,9 @@ class _Walker:
         self.phases: List[PhaseStats] = []
         self.cur = PhaseStats()
         self.iter_stages: Dict[str, float] = {}
+        # per-stage work cycles, summed over iterations BEFORE pipelining
+        # (what each engine is busy for — the dw-stage speedup gate's axis)
+        self.stage_cycles: Dict[str, float] = {}
         self.last_exp_mode: Optional[int] = None
         self.dbuf_bases: set = set()   # distinct double-buffered boundaries
 
@@ -359,6 +380,8 @@ class _Walker:
         if not self.iter_stages:
             return
         st = self.iter_stages
+        for k, v in st.items():
+            self.stage_cycles[k] = self.stage_cycles.get(k, 0.0) + v
         groups = {"ex_mac": "ex", "ex_q": "ex", "dw_mac": "dw",
                   "dw_q": "dw", "pr_mac": "pr", "gap": "gap"}
         n_groups = len({groups[k] for k in st})
@@ -398,6 +421,7 @@ class _Walker:
             self.phases.append(self.cur)
         self.cur = PhaseStats()
         self.touched.clear()
+        self.wino_seen.clear()    # tile registers drain with the pipeline
 
     def _begin_iter(self):
         self._end_iter()
@@ -418,8 +442,13 @@ class _Walker:
                 self.stride, self.h, self.w = stride, h, w
                 self.h2, self.w2 = -(-h // stride), -(-w // stride)
                 self.strip_rows = 0
+                self.wino = None
+                self.wino_seen.clear()
             elif op == "CFG_STRIP":
                 self.strip_rows = ins.args[0]
+            elif op == "CFG_WINO":
+                self.wino = tuple(ins.args)
+                self.wino_seen.clear()
             elif op == "CFG_PE":
                 if not self.pe_locked:
                     self.pe = PEConfig(*ins.args)
@@ -490,9 +519,33 @@ class _Walker:
                 self._mac("dw", k2 * self.cmid)
                 self.iter_stages["dw_mac"] = (C_DW * self.cmid
                                               * (k2 / self.pe.dw_lanes))
+            elif op == "WINO_MAC":
+                # F(2x2,3x3): the 16-multiply array fires once per 2x2
+                # tile (the tile's FIRST pixel); the other pixels read the
+                # latched tile registers — no memory, no multiplies. Per
+                # tile that is 16 muls for 4 outputs vs the direct 4x9.
+                self._begin_iter()
+                oy, ox = ins.args
+                ty, tx = oy // winograd.TILE, ox // winograd.TILE
+                if (ty, tx) not in self.wino_seen:
+                    self.wino_seen.add((ty, tx))
+                    for dy in range(winograd.WIN):
+                        for dx in range(winograd.WIN):
+                            self._read(isa.REG_F1, ty * winograd.TILE + dy - 1,
+                                       tx * winograd.TILE + dx - 1, "wino")
+                    self._mac("dw", winograd.MULS_PER_TILE * self.cmid)
+                    self.iter_stages["dw_mac"] = (
+                        C_DW * self.cmid
+                        * (winograd.MULS_PER_TILE / self.pe.dw_lanes))
             elif op == "PROJ_MAC":
                 self._mac("proj", self.cmid * self.cout)
-                groups = -(-self.cout // self.pe.proj_engines)
+                eng = self.pe.proj_engines
+                if self.wino is not None and (self.wino[2]
+                                              or self.pe.shared_dw_pw):
+                    # shared dw/pw engine: the projection GEMM borrows the
+                    # Winograd multiply lanes, idle 3 of every 4 pixels
+                    eng += self.pe.dw_lanes
+                groups = -(-self.cout // eng)
                 self.iter_stages["pr_mac"] = C_PR * self.cmid * groups
             elif op == "REQUANT":
                 stage = ins.args[0]
@@ -609,6 +662,7 @@ class BatchCostModel:
             retired=dict(w.retired),
             macs_by_engine={k: v * batch
                             for k, v in w.macs_by_engine.items()},
+            stage_cycles={k: v * b for k, v in w.stage_cycles.items()},
         )
 
     def emit_trace(self, tracer: Tracer, batch: int = 1, *, pid: int = 0,

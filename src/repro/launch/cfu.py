@@ -4,6 +4,7 @@
     python -m repro.launch.cfu --network vww --batch 8 --pe 18,18,112
     python -m repro.launch.cfu --net mobilenetv2 --schedule fused-rowtile
     python -m repro.launch.cfu --net mobilenetv2 --schedule auto
+    python -m repro.launch.cfu --block 3rd --schedule fused-winograd --pe 9,2,56
     python -m repro.launch.cfu --network vww --streams 3
     python -m repro.launch.cfu --block 3rd --schedule all --pipeline v3
     python -m repro.launch.cfu --network vww --asm /tmp/vww.asm

@@ -13,7 +13,9 @@ These tests pin the whole contract:
   the SAME traced executor; changing the PE config, the schedule, or the
   quantization constants moves the key and re-traces (no stale constants);
   changing only the weight VALUES reuses the trace and still changes the
-  output (weights are traced arguments, not baked);
+  output (weights are traced arguments, not baked); the cache is a
+  bounded LRU — evictions happen oldest-use-first and an evicted program
+  re-traces bit-exactly;
 * the spot checker's ``backend="fast"`` mode stays anchored: the sampled
   golden cross-check still catches a fast-vs-golden divergence.
 
@@ -201,6 +203,45 @@ def test_forced_pallas_stage_bodies_bit_exact_and_separate_cache_key():
         # forcing again hits the pallas-keyed cache entry
         assert fastpath.fast_executor(prog, params,
                                       use_pallas=True) is ex_pl
+
+
+def test_cache_lru_eviction_and_bit_exact_retrace():
+    """Capping the trace cache evicts in least-recently-used order; an
+    evicted program re-traces on its next request (a fresh miss), and the
+    re-trace stays bit-exact against the interpreter."""
+    fastpath.clear_cache()
+    specs, params, x_q = _chain_fixture()
+    progs = [compile_network(specs, HW, HW, s)
+             for s in ("fused", "fused-rowtile", "fused-winograd")]
+    try:
+        fastpath.set_cache_limit(2)
+        ex0 = fastpath.fast_executor(progs[0], params)
+        ex1 = fastpath.fast_executor(progs[1], params)
+        assert fastpath.cache_info()["size"] == 2
+        assert fastpath.cache_info()["evictions"] == 0
+        # touching prog0 makes prog1 the LRU entry; prog2 then evicts it
+        assert fastpath.fast_executor(progs[0], params) is ex0
+        fastpath.fast_executor(progs[2], params)
+        info = fastpath.cache_info()
+        assert info["size"] == 2 and info["evictions"] == 1
+        assert fastpath.fast_executor(progs[0], params) is ex0  # survived
+        # prog1 was evicted: the next request is a miss that re-traces...
+        misses = fastpath.cache_info()["misses"]
+        ex1b = fastpath.fast_executor(progs[1], params)
+        assert ex1b is not ex1
+        assert fastpath.cache_info()["misses"] == misses + 1
+        # ...and the fresh trace is still bit-exact
+        np.testing.assert_array_equal(
+            fastpath.run_fast(progs[1], x_q, params),
+            run_program(progs[1], x_q, params))
+        # shrinking below the live size evicts immediately
+        fastpath.set_cache_limit(1)
+        assert fastpath.cache_info()["size"] == 1
+        with pytest.raises(ValueError):
+            fastpath.set_cache_limit(0)
+    finally:
+        fastpath.clear_cache()          # also restores the default limit
+    assert fastpath.cache_info()["limit"] == fastpath._DEFAULT_CACHE_LIMIT
 
 
 def test_run_fast_rejects_bad_input_shape():

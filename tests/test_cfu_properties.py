@@ -22,13 +22,17 @@ Properties:
 * the double-buffer handoff protocol (PR 4) holds under ARBITRARY round
   interleavings: any generated schedule either completes bit-exactly
   (legal steps only) or raises ``HandoffViolation`` at the first illegal
-  step — stale reads/clobbers are structurally impossible.
+  step — stale reads/clobbers are structurally impossible;
+* the folded-integer Winograd F(2x2,3x3) (PR 8) equals the direct 3x3
+  depthwise at every tile position for random int8 data — overhang tiles
+  and the padded halo included — and configs whose transform could
+  overflow int32 are refused, never approximated.
 """
 
 import numpy as np
 import pytest
 
-from repro.cfu import isa
+from repro.cfu import isa, winograd
 from repro.cfu.compiler import (AUTO_HETERO, CFUSchedule, compile_block,
                                 compile_network, hetero_pe_candidates)
 from repro.cfu.executor import (HandoffViolation, MultiStreamRunner,
@@ -107,6 +111,55 @@ def test_property_compiled_program_roundtrips(cin, t, cout, stride, hw,
     assert isa.decode_words(isa.encode_program(prog)) == prog.instrs
     assert (isa.program_from_asm(isa.program_to_asm(prog)).instrs
             == prog.instrs)
+
+
+# --- exact-integer winograd (PR 8) -------------------------------------------
+
+
+@settings(max_examples=60, deadline=None)
+@given(h=st.integers(1, 9), w=st.integers(1, 9), ch=st.integers(1, 5),
+       seed=st.integers(0, 10 ** 6))
+def test_property_winograd_tiles_equal_direct_3x3(h, w, ch, seed):
+    """BᵀdB / (2G)g(2G)ᵀ / AᵀmA over integers, then the exact //4, equals
+    the direct same-padded 3x3 depthwise at EVERY output position, for
+    random int8 data and any geometry — odd h/w makes the last tile row/
+    column overhang, and the halo windows read the zero padding."""
+    winograd.check_exact()               # int8 operands: always admitted
+    rng = np.random.default_rng(seed)
+    x = rng.integers(-128, 128, (h, w, ch)).astype(np.int64)
+    g = rng.integers(-128, 128, (3, 3, ch)).astype(np.int64)
+    xp = np.zeros((h + 2, w + 2, ch), dtype=np.int64)
+    xp[1:h + 1, 1:w + 1] = x
+    direct = np.zeros((h, w, ch), dtype=np.int64)
+    for dy in range(3):
+        for dx in range(3):
+            direct += xp[dy:dy + h, dx:dx + w] * g[dy, dx]
+    u4 = winograd.weight_transform(g)
+    for ti in range(-(-h // winograd.TILE)):
+        for tj in range(-(-w // winograd.TILE)):
+            d = np.zeros((winograd.WIN, winograd.WIN, ch), dtype=np.int64)
+            for yy in range(winograd.WIN):
+                for xx in range(winograd.WIN):
+                    ry = ti * winograd.TILE + yy - 1
+                    rx = tj * winograd.TILE + xx - 1
+                    if 0 <= ry < h and 0 <= rx < w:
+                        d[yy, xx] = x[ry, rx]
+            tile = winograd.wino_dw_tiles(d, u4)          # (2, 2, ch)
+            for oy in range(winograd.TILE):
+                for ox in range(winograd.TILE):
+                    ry = ti * winograd.TILE + oy
+                    rx = tj * winograd.TILE + ox
+                    if ry < h and rx < w:    # overhang outputs are unused
+                        np.testing.assert_array_equal(tile[oy, ox],
+                                                      direct[ry, rx])
+
+
+def test_winograd_refusal_contract():
+    """Operand widths whose folded transform could exceed int32 are
+    REFUSED at compile time (ValueError), never silently approximated."""
+    assert winograd.accumulator_bound(8, 8) < winograd.INT32_MAX
+    with pytest.raises(ValueError, match="refusing"):
+        winograd.check_exact(in_bits=16, w_bits=16)
 
 
 # --- heterogeneous frame pipeline (PR 4) -------------------------------------

@@ -135,6 +135,27 @@ def test_sram_port_rejects_zero():
         analyze(prog, "v3", sram_port_bytes=0)
 
 
+def test_sram_port_sweep_monotone_and_anchored():
+    """The bench's calibration curve (W in {1,2,4,8} over the
+    fused-rowtile VWW stream): cycles monotonically non-increasing in W,
+    byte counts port-independent, and the W=1 point equals the default
+    walk — the committed paper calibration."""
+    from benchmarks.bench_scaling import SRAM_PORT_WIDTHS, sram_port_sweep
+    res = sram_port_sweep(img_hw=16)
+    curve = res["curve"]
+    assert [r["sram_port_bytes"] for r in curve] == list(SRAM_PORT_WIDTHS)
+    cycles = [r["network_cycles"] for r in curve]
+    assert all(a >= b for a, b in zip(cycles, cycles[1:]))
+    assert len({r["sram_bytes"] for r in curve}) == 1
+    from repro.cfu.compiler import compile_vww_network
+    from repro.configs.vww import VWW
+    from repro.models.mobilenetv2 import block_specs
+    prog = compile_vww_network(block_specs(), 16, "fused-rowtile",
+                               img_ch=VWW.img_ch, head_ch=VWW.head_ch,
+                               n_classes=VWW.n_classes)
+    assert curve[0]["network_cycles"] == analyze(prog, "v3").total_cycles
+
+
 # --- arrivals -------------------------------------------------------------
 
 

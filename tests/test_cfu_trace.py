@@ -46,7 +46,8 @@ except ImportError:          # optional extra; CI installs it
     HAVE_HYPOTHESIS = False
 
 ALL_SCHEDULES = (CFUSchedule.LAYER_DRAM, CFUSchedule.LAYER_SRAM,
-                 CFUSchedule.FUSED, CFUSchedule.FUSED_ROWTILE)
+                 CFUSchedule.FUSED, CFUSchedule.FUSED_ROWTILE,
+                 CFUSchedule.FUSED_WINOGRAD)
 
 CHAIN = [("b0", DSCBlockSpec(cin=8, cmid=48, cout=8, stride=1)),
          ("b1", DSCBlockSpec(cin=8, cmid=48, cout=16, stride=2)),
@@ -128,7 +129,7 @@ def test_trace_counters_equal_report_and_analytic_bytes(sched):
     elif sched == CFUSchedule.LAYER_SRAM:
         assert rep.dram_bytes == t.baseline_total - t.intermediate_bytes
         assert rep.sram_bytes == t.intermediate_bytes
-    else:            # both fused schedules hit the paper's fused count
+    else:            # all fused schedules hit the paper's fused count
         assert rep.dram_bytes == t.fused_total
 
 
