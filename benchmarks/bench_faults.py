@@ -1,0 +1,278 @@
+"""Fault-injection campaign: detection coverage + degraded-mode failover.
+
+The reliability counterpart of ``bench_serving``: seeded single- and
+double-bit fault campaigns through the golden executor
+(``cfu.faults``), swept over target space (weights / instruction words /
+SRAM / DRAM) x detection armed or not, each injected run classified
+against the fault-free golden logits into the four-way taxonomy —
+masked / detected / SDC (silent data corruption) / crashed. Detection is
+the ISA-level reliability extension: instruction-word parity (bit 0 of
+every encoded word) plus CHK_WGT/CHK_SAVE/CHK_CMP checksum words stamped
+post-compile by ``faults.protect_program``.
+
+The REFERENCE CONFIG is a 2-block DSC chain at 10x10 under the fused
+schedule — small enough that a ~300-run campaign stays in seconds, and
+covering every weight engine (expand, depthwise, project) plus
+cross-phase activation traffic.
+
+Two CI gates ride the artifact (``--gate-detection``):
+
+* **Coverage floor**: with parity + weight checksums armed, 100% of
+  injected single-bit weight and instruction-word faults must be
+  *detected* — zero SDC, zero masked, zero crashed. Both mechanisms are
+  exact for single flips (a flip always breaks even parity; an additive
+  byte checksum mod 2^32 always moves by a nonzero +-2^k), so anything
+  under 100% is a detection-path regression.
+* **Failover bit-exactness**: a core dropout mid-run on the 2-core frame
+  pipeline must replay every in-flight frame on the survivor and produce
+  outputs byte-identical to the fault-free run (``run_with_dropout``).
+
+The serving section prices the same failover at the request level: the
+VWW reference config (24x24, auto-hetero 2-core — bench_serving's gate
+device) loses a core mid-simulation and the p99 delta vs the identical
+run without the dropout is reported (``results/faults.json``).
+
+    python -m benchmarks.run faults
+    python -m benchmarks.bench_faults --json results/faults.json \
+        --gate-detection
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import numpy as np
+
+from repro.cfu import faults
+from repro.cfu.compiler import compile_network
+from repro.cfu.network import random_chain_params
+from repro.cfu.serve.dispatcher import DropoutEvent
+from repro.cfu.serve.planner import (build_vww_service, derive_seed,
+                                     simulate)
+from repro.cfu.timing import PEConfig
+from repro.core.dsc import DSCBlockSpec
+
+# Reference campaign config (see module docstring).
+CAMPAIGN_HW = 10
+CAMPAIGN_SPECS = (("rb0", DSCBlockSpec(cin=3, cmid=8, cout=8, stride=1)),
+                  ("rb1", DSCBlockSpec(cin=8, cmid=16, cout=10, stride=2)))
+CAMPAIGN_SCHEDULE = "fused"
+N_FAULTS_PER_CELL = 12          # trials per (space, flips) cell
+N_GATE_FAULTS = 24              # trials per gated coverage space
+SEED = 0
+
+# Failover configs: executor level on the small chain, serving level on
+# bench_serving's reference device (VWW 24x24, auto-hetero 2-core).
+FAILOVER_FRAMES = 6
+FAILOVER_BATCH = 2
+GATE_IMG_HW = 24
+GATE_BASE_PE = PEConfig(4, 4, 21)
+SLO_MS = 30.0
+FREQ_MHZ = 300.0
+SERVE_RATE_QPS = 250.0
+SERVE_REQUESTS = 200
+DROPOUT_AT_MS = 40.0
+REPARTITION_MS = 1.0
+
+
+def reference_setup():
+    """Compile the campaign's reference stream + params + input."""
+    specs = list(CAMPAIGN_SPECS)
+    params = random_chain_params(jax.random.PRNGKey(SEED), specs,
+                                 CAMPAIGN_HW, seed=SEED)
+    prog = compile_network(specs, CAMPAIGN_HW, CAMPAIGN_HW,
+                           CAMPAIGN_SCHEDULE)
+    rng = np.random.default_rng(derive_seed(SEED, "faults", "input"))
+    x_q = rng.integers(-128, 128,
+                       (CAMPAIGN_HW, CAMPAIGN_HW,
+                        specs[0][1].cin)).astype(np.int8)
+    return prog, params, x_q
+
+
+def campaign(report):
+    """The sweep: space x flips x {detection on, off} -> taxonomy."""
+    prog, params, x_q = reference_setup()
+    report(f"# fault campaign: {len(CAMPAIGN_SPECS)}-block chain "
+           f"{CAMPAIGN_HW}x{CAMPAIGN_HW} ({CAMPAIGN_SCHEDULE}), "
+           f"{N_FAULTS_PER_CELL} seeded trials per cell")
+    report("detect,space,flips,masked,detected,sdc,crashed")
+    arms = {}
+    for label, protect in (("off", False), ("on", True)):
+        res = faults.run_campaign(
+            prog, params, x_q, n_faults=N_FAULTS_PER_CELL,
+            n_flips=(1, 2), seed=derive_seed(SEED, "campaign", label),
+            protect=protect, activation_checksums=True)
+        arms[label] = res
+        for cell, tally in res["cells"].items():
+            space, flips = cell.split("|x")
+            report(f"{label},{space},{flips},{tally['masked']},"
+                   f"{tally['detected']},{tally['sdc']},"
+                   f"{tally['crashed']}")
+        if res["skipped_spaces"]:
+            report(f"# detect={label}: skipped spaces with no bits to "
+                   f"flip: {','.join(res['skipped_spaces'])}")
+    return arms
+
+
+def coverage(report):
+    """The gated cell: single-bit weights + instr, detection armed."""
+    prog, params, x_q = reference_setup()
+    cov = faults.detection_coverage(prog, params, x_q,
+                                    n_faults=N_GATE_FAULTS,
+                                    seed=derive_seed(SEED, "coverage"))
+    report(f"# detection coverage (parity + weight checksums): weights "
+           f"{cov['weights_detected']}/{cov['weights_faults']}, "
+           f"instr {cov['instr_detected']}/{cov['instr_faults']}")
+    return cov
+
+
+def failover_executor(report):
+    """Core dropout on the 2-core pipeline: bit-exact replay check."""
+    specs = list(CAMPAIGN_SPECS)
+    params = random_chain_params(jax.random.PRNGKey(SEED), specs,
+                                 CAMPAIGN_HW, seed=SEED)
+    ms = compile_network(specs, CAMPAIGN_HW, CAMPAIGN_HW,
+                         CAMPAIGN_SCHEDULE, streams=2)
+    rng = np.random.default_rng(derive_seed(SEED, "failover", "frames"))
+    xb = rng.integers(-128, 128,
+                      (FAILOVER_FRAMES, CAMPAIGN_HW, CAMPAIGN_HW,
+                       specs[0][1].cin)).astype(np.int8)
+    from repro.cfu.executor import run_multistream
+    baseline = run_multistream(ms, xb, params, batch=FAILOVER_BATCH)
+
+    def recompile(n_streams):
+        if n_streams > 1:
+            return compile_network(specs, CAMPAIGN_HW, CAMPAIGN_HW,
+                                   CAMPAIGN_SCHEDULE, streams=n_streams)
+        return compile_network(specs, CAMPAIGN_HW, CAMPAIGN_HW,
+                               CAMPAIGN_SCHEDULE)
+
+    rows = []
+    all_exact = True
+    for drop_round in (1, 2, 3):
+        y, rep = faults.run_with_dropout(
+            ms, recompile, xb, params, batch=FAILOVER_BATCH,
+            drop_after_round=drop_round)
+        exact = bool(np.array_equal(y, baseline))
+        all_exact = all_exact and exact
+        rows.append({"drop_after_round": rep.drop_after_round,
+                     "drained_frames": rep.drained_frames,
+                     "replayed_frames": rep.replayed_frames,
+                     "survivors": rep.survivors,
+                     "bit_exact": exact})
+        report(f"# failover(exec): drop after round {drop_round} -> "
+               f"{rep.drained_frames} drained + {rep.replayed_frames} "
+               f"replayed on {rep.survivors} core(s), bit_exact={exact}")
+    return {"n_frames": FAILOVER_FRAMES, "batch": FAILOVER_BATCH,
+            "bit_exact": all_exact, "rows": rows}
+
+
+def failover_serving(report):
+    """The p99 price of a core dropout on the reference VWW device."""
+    freq_hz = FREQ_MHZ * 1e6
+    slo_cycles = SLO_MS * 1e-3 * freq_hz
+    svc2 = build_vww_service(GATE_IMG_HW, streams=2, pe=GATE_BASE_PE,
+                             pe_per_core="auto-hetero", freq_hz=freq_hz)
+    svc1 = build_vww_service(GATE_IMG_HW, streams=1, pe=GATE_BASE_PE,
+                             freq_hz=freq_hz)
+    seed = derive_seed(SEED, "failover", "serving")
+    kw = dict(n_requests=SERVE_REQUESTS, seed=seed,
+              slo_cycles=slo_cycles)
+    base = simulate(svc2, "timeout", SERVE_RATE_QPS, **kw).summary
+    drop = simulate(svc2, "timeout", SERVE_RATE_QPS,
+                    dropout=DropoutEvent(
+                        at_cycles=DROPOUT_AT_MS * 1e-3 * freq_hz,
+                        degraded=svc1, core=1,
+                        repartition_cycles=REPARTITION_MS * 1e-3
+                        * freq_hz),
+                    **kw).summary
+    d99 = drop["latency_p99_ms"] - base["latency_p99_ms"]
+    report(f"# failover(serving): VWW {GATE_IMG_HW}x{GATE_IMG_HW} "
+           f"hetero-2core @ {SERVE_RATE_QPS:.0f} QPS, core dies at "
+           f"{DROPOUT_AT_MS:.0f} ms: p99 {base['latency_p99_ms']:.2f} -> "
+           f"{drop['latency_p99_ms']:.2f} ms (delta {d99:+.2f} ms), "
+           f"{drop.get('n_replayed', 0)} request(s) replayed, "
+           f"drained={drop['drained']}")
+    return {"rate_qps": SERVE_RATE_QPS, "n_requests": SERVE_REQUESTS,
+            "dropout_at_ms": DROPOUT_AT_MS,
+            "repartition_ms": REPARTITION_MS,
+            "p99_ms_baseline": base["latency_p99_ms"],
+            "p99_ms_dropout": drop["latency_p99_ms"],
+            "p99_delta_ms": d99,
+            "n_replayed": int(drop.get("n_replayed", 0)),
+            "drained": bool(drop["drained"]),
+            "slo_violations_baseline": base.get("slo_violations"),
+            "slo_violations_dropout": drop.get("slo_violations")}
+
+
+def gate_ok(result):
+    """Both gates: 100% single-bit coverage + bit-exact failover."""
+    cov = result["coverage"]
+    full = (cov["weights_detected"] == cov["weights_faults"]
+            and cov["instr_detected"] == cov["instr_faults"])
+    return full and result["failover_executor"]["bit_exact"]
+
+
+def run(report):
+    arms = campaign(report)
+    cov = coverage(report)
+    result = {
+        "config": {"hw": CAMPAIGN_HW, "schedule": CAMPAIGN_SCHEDULE,
+                   "blocks": len(CAMPAIGN_SPECS),
+                   "n_faults_per_cell": N_FAULTS_PER_CELL,
+                   "n_gate_faults": N_GATE_FAULTS, "seed": SEED},
+        "campaign": {label: {"cells": res["cells"],
+                             "skipped_spaces": res["skipped_spaces"]}
+                     for label, res in arms.items()},
+        "coverage": cov,
+        "failover_executor": failover_executor(report),
+        "failover_serving": failover_serving(report),
+    }
+    result["weights_detected"] = cov["weights_detected"]
+    result["weights_faults"] = cov["weights_faults"]
+    result["instr_detected"] = cov["instr_detected"]
+    result["instr_faults"] = cov["instr_faults"]
+    report(f"# gates: coverage "
+           f"{'100%' if gate_ok(result) else 'INCOMPLETE'}, failover "
+           f"bit_exact={result['failover_executor']['bit_exact']}")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--json", default=None,
+                    help="write the campaign payload to this path "
+                         "(CI artifact)")
+    ap.add_argument("--gate-detection", action="store_true",
+                    help="fail unless 100% of injected single-bit weight "
+                         "and instruction-word faults are detected with "
+                         "protection armed AND the core-dropout failover "
+                         "replays bit-exactly")
+    args = ap.parse_args()
+    result = run(print)
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(result, f, indent=2, default=str)
+        print(f"# wrote {args.json}")
+    if args.gate_detection:
+        if not gate_ok(result):
+            cov = result["coverage"]
+            raise SystemExit(
+                f"FAULT GATE FAILURE: weights "
+                f"{cov['weights_detected']}/{cov['weights_faults']} "
+                f"detected, instr "
+                f"{cov['instr_detected']}/{cov['instr_faults']} detected, "
+                f"failover bit_exact="
+                f"{result['failover_executor']['bit_exact']} — the "
+                f"reliability extension must catch every single-bit "
+                f"weight/instruction fault and replay dropouts exactly")
+        print("# fault gate OK: 100% single-bit detection, "
+              "failover bit-exact")
+
+
+if __name__ == "__main__":
+    main()

@@ -54,7 +54,8 @@ WALLCLOCK_BAND = 10.0  # ratio band for the one wall-clock key (x-factor)
 # ``_pick`` covers schedule-name strings (the auto scheduler's choice is
 # an architectural decision, not a measurement).
 EXACT_SUFFIXES = ("_bytes", "macs", "n_instr", "n_batches", "n_served",
-                  "batch", "n_cores", "img_hw", "_pick")
+                  "batch", "n_cores", "img_hw", "_pick", "_faults",
+                  "_detected", "_exact")
 
 # Geometry of the measured configs (mirrors benchmarks/bench_serving.py's
 # gate: compute-bound 2-core budget where batching/pipelining matter).
@@ -193,8 +194,43 @@ def collect() -> dict:
         "macs": r_win.macs,
     }
 
+    # 7) the reliability extension at the fault benchmark's reference
+    #    config: single-bit detection coverage (counts — exact),
+    #    core-dropout replay exactness, and the protected stream's
+    #    checksum sweep traffic (modeled == executed elsewhere; pinned
+    #    here as an architectural byte count)
+    from benchmarks import bench_faults
+    from repro.cfu import faults as flt
+    fprog, fparams, fx = bench_faults.reference_setup()
+    cov = flt.detection_coverage(fprog, fparams, fx, n_faults=12,
+                                 seed=SEED)
+    prot = flt.protect_program(fprog, fparams, activation_checksums=True)
+    _, pstats = run_words(isa.encode_program(prot), fx, fparams,
+                          prot.meta, return_stats=True)
+    from repro.cfu.compiler import compile_network as _cn
+    from repro.cfu.executor import run_multistream as _rms
+
+    def _ref_compile(n_streams):
+        kw = {"streams": n_streams} if n_streams > 1 else {}
+        return _cn(list(bench_faults.CAMPAIGN_SPECS),
+                   bench_faults.CAMPAIGN_HW, bench_faults.CAMPAIGN_HW,
+                   bench_faults.CAMPAIGN_SCHEDULE, **kw)
+
+    ms2 = _ref_compile(2)
+    xb = rng.integers(
+        -128, 128, (4, bench_faults.CAMPAIGN_HW, bench_faults.CAMPAIGN_HW,
+                    bench_faults.CAMPAIGN_SPECS[0][1].cin)).astype(np.int8)
+    fo_base = _rms(ms2, xb, fparams, batch=2)
+    fo_y, _ = flt.run_with_dropout(ms2, _ref_compile, xb, fparams,
+                                   batch=2, drop_after_round=2)
+    faults_fp = {**cov,
+                 "n_instr_protected": len(prot),
+                 "check_bytes": pstats.check_bytes,
+                 "failover_exact": int(np.array_equal(fo_y, fo_base))}
+
     return {"block3": block3, "vww_fused": vww, "multicore": multicore,
-            "serving": serving, "fastpath": fast, "winograd": winograd}
+            "serving": serving, "fastpath": fast, "winograd": winograd,
+            "faults": faults_fp}
 
 
 def _leaves(d: dict, prefix=""):
@@ -273,6 +309,23 @@ def main(argv=None) -> int:
         bad.append("winograd total cycles do not beat fused-rowtile")
     if bad:
         print("# WINOGRAD GATE: " + "; ".join(bad), file=sys.stderr)
+        return 1
+
+    # baseline-independent fault gate: single-bit weight/instruction
+    # detection must be total and core-dropout replay bit-exact on the
+    # freshly collected numbers, regardless of what the baseline pins
+    fg = current["faults"]
+    bad = []
+    if fg["weights_detected"] != fg["weights_faults"]:
+        bad.append(f"weight faults {fg['weights_detected']}/"
+                   f"{fg['weights_faults']} detected")
+    if fg["instr_detected"] != fg["instr_faults"]:
+        bad.append(f"instr faults {fg['instr_detected']}/"
+                   f"{fg['instr_faults']} detected")
+    if fg["failover_exact"] != 1:
+        bad.append("core-dropout replay is not bit-exact")
+    if bad:
+        print("# FAULT GATE: " + "; ".join(bad), file=sys.stderr)
         return 1
 
     if args.update_baseline:

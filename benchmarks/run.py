@@ -22,8 +22,8 @@ import time
 import traceback
 
 from benchmarks import (bench_cfu, bench_energy, bench_fastpath,
-                        bench_ffn_fusion, bench_scaling, bench_serving,
-                        bench_speedup, bench_traffic)
+                        bench_faults, bench_ffn_fusion, bench_scaling,
+                        bench_serving, bench_speedup, bench_traffic)
 
 BENCHES = {
     "speedup": bench_speedup,        # Fig. 14 / Table III(A)
@@ -34,6 +34,7 @@ BENCHES = {
     "scaling": bench_scaling,        # cycles-vs-PE sweep (full VWW stream)
     "serving": bench_serving,        # request-level QPS-under-SLO frontier
     "fastpath": bench_fastpath,      # jitted executor: speedup + diff matrix
+    "faults": bench_faults,          # fault campaign + failover p99 delta
 }
 
 RESULTS_DIR = "results"

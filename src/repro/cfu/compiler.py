@@ -778,8 +778,14 @@ def _resolve_pe_per_core(pe_per_core, pe: PEConfig, n: int,
 
 def _compile_ir(ir: IRProgram, schedule: ScheduleSpec,
                 pe: Optional[PEConfig], *, streams: int = 1,
-                pe_per_core=None, tile_rows: int = 4, pipeline: str = "v3"):
+                pe_per_core=None, tile_rows: int = 4, pipeline: str = "v3",
+                protect: bool = False):
     pe = pe or PEConfig()
+    # ``protect`` arms instruction-word parity in the stream meta (the
+    # encoder stamps bit 0, the executor verifies — see isa docstring);
+    # weight/activation checksum words additionally need the params
+    # records, so they are stamped post-compile by faults.protect_program.
+    prot = {"parity": True} if protect else {}
     assign_schedules(ir, schedule, tile_rows=tile_rows,
                      pipeline=pipeline, pe=pe)
     materialize_scratch(ir)
@@ -810,7 +816,7 @@ def _compile_ir(ir: IRProgram, schedule: ScheduleSpec,
             raise ValueError("pe_per_core needs streams > 1")
         layout = plan_memory(ir)
         instrs = select_instructions(ir.ops, layout, pe)
-        return Program(instrs, meta=meta_for(ir.ops, layout, {}))
+        return Program(instrs, meta=meta_for(ir.ops, layout, dict(prot)))
 
     # --- choose per-core PEs + the time-balanced contiguous partition ----
     # (costed against a provisional pinned layout; engine counts never
@@ -871,7 +877,7 @@ def _compile_ir(ir: IRProgram, schedule: ScheduleSpec,
                                 core=(si, len(sizes))),
             meta=meta_for(seg_ops, layout, {
                 "stream": si, "pe": pes[si],
-                "est_cycles": sum(rows[si][at:at + size])})))
+                "est_cycles": sum(rows[si][at:at + size]), **prot})))
         partition.append([op.name for op in seg_ops])
         at += size
     return MultiStreamProgram(progs, meta=meta_for(ir.ops, layout, {
@@ -880,7 +886,7 @@ def _compile_ir(ir: IRProgram, schedule: ScheduleSpec,
         "partition": partition,
         "pe_per_core": pes,
         "hetero": len(set(pes)) > 1,
-        "boundaries": boundaries}))
+        "boundaries": boundaries, **prot}))
 
 
 def compile_network(specs: Sequence[Tuple[str, "DSCBlockSpec"]],
@@ -889,7 +895,8 @@ def compile_network(specs: Sequence[Tuple[str, "DSCBlockSpec"]],
                     pe: Optional[PEConfig] = None, *,
                     streams: int = 1, pe_per_core=None,
                     tile_rows: int = 4,
-                    pipeline: str = "v3"):
+                    pipeline: str = "v3",
+                    protect: bool = False):
     """Lower a chain of DSC blocks into CFU instruction stream(s).
 
     ``schedule`` is a uniform schedule (enum or registry name), a
@@ -904,19 +911,26 @@ def compile_network(specs: Sequence[Tuple[str, "DSCBlockSpec"]],
     the homogeneous total engine budget (``N x pe``). The partitioner
     balances per-core *time* under each core's own engine counts either
     way.
+
+    ``protect=True`` arms instruction-word parity (``meta["parity"]``):
+    the encoder stamps an even-parity bit into bit 0 of every word and
+    the executor verifies before decoding. Weight/activation checksum
+    words ride on top via ``faults.protect_program`` (they need the
+    params records, which the compiler never sees).
     """
     ir = build_chain_ir(specs, h, w)
     return _compile_ir(ir, schedule, pe, streams=streams,
                        pe_per_core=pe_per_core,
-                       tile_rows=tile_rows, pipeline=pipeline)
+                       tile_rows=tile_rows, pipeline=pipeline,
+                       protect=protect)
 
 
 def compile_block(spec, h: int, w: int, schedule: ScheduleSpec,
                   name: str = "b0", pe: Optional[PEConfig] = None, *,
-                  tile_rows: int = 4) -> Program:
+                  tile_rows: int = 4, protect: bool = False) -> Program:
     """Lower a single block (convenience wrapper over compile_network)."""
     return compile_network([(name, spec)], h, w, schedule, pe=pe,
-                           tile_rows=tile_rows)
+                           tile_rows=tile_rows, protect=protect)
 
 
 def compile_vww_network(specs: Sequence[Tuple[str, "DSCBlockSpec"]],
@@ -929,7 +943,8 @@ def compile_vww_network(specs: Sequence[Tuple[str, "DSCBlockSpec"]],
                         pe: Optional[PEConfig] = None,
                         streams: int = 1, pe_per_core=None,
                         tile_rows: int = 4,
-                        pipeline: str = "v3"):
+                        pipeline: str = "v3",
+                        protect: bool = False):
     """Lower a COMPLETE VWW inference: stem -> DSC chain -> head -> GAP+FC.
 
     ``specs`` is the bottleneck chain (``models.mobilenetv2.block_specs``);
@@ -943,4 +958,5 @@ def compile_vww_network(specs: Sequence[Tuple[str, "DSCBlockSpec"]],
                       n_classes=n_classes)
     return _compile_ir(ir, schedule, pe, streams=streams,
                        pe_per_core=pe_per_core,
-                       tile_rows=tile_rows, pipeline=pipeline)
+                       tile_rows=tile_rows, pipeline=pipeline,
+                       protect=protect)

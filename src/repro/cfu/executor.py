@@ -81,6 +81,14 @@ from repro.cfu.trace import (CAT_EXEC, CAT_MARK, NULL_TRACER, CounterBank,
 INT8_MIN, INT8_MAX = -128, 127
 
 
+class FaultDetected(RuntimeError):
+    """An ISA-level detection mechanism caught corrupted state: a word
+    failed the even-parity check, or a CHK_WGT / CHK_CMP checksum word
+    found memory that no longer matches its stamped golden sum. The
+    campaign taxonomy in ``cfu/faults.py`` classifies this outcome as
+    *detected* (vs masked / silent-data-corruption / crashed)."""
+
+
 # --- numpy mirrors of core.quant (bit-exact by op-for-op identity) ----------
 
 
@@ -166,6 +174,7 @@ class ExecStats:
     sram_wr_bytes: int = 0
     weight_bytes: int = 0
     weight_reloads: int = 0      # LD_WGT re-streaming an already-seen set
+    check_bytes: int = 0         # bytes swept by CHK_* detection words
 
     @property
     def retired(self) -> Dict[str, int]:
@@ -190,7 +199,8 @@ class ExecStats:
             sram_rd_bytes=self.sram_rd_bytes,
             sram_wr_bytes=self.sram_wr_bytes,
             weight_bytes=self.weight_bytes,
-            weight_reloads=self.weight_reloads)
+            weight_reloads=self.weight_reloads,
+            check_bytes=self.check_bytes)
 
 
 class CFUMachine:
@@ -238,6 +248,11 @@ class CFUMachine:
         self.f2v = None          # (B,M) int8
         self.gap = None          # (B,M) int32 pooling accumulator
         self.res = None          # last requant result (int8, (B,ch))
+        self.chk: Dict[int, int] = {}    # CHK_SAVE/CHK_CMP register file
+        # fault-campaign hook: called as hook(machine, n_instr) before
+        # each instruction (``cfu/faults.py`` flips memory bits in a
+        # targeted cycle window through it); None costs one ``is None``
+        self.pre_instr_hook = None
         self.stats = ExecStats()
         # traffic meter: line-buffered unique-read accounting, mirroring
         # timing._Walker._read byte for byte (the exactness invariant) —
@@ -360,6 +375,8 @@ class CFUMachine:
 
     def execute(self, instrs: Sequence[Instr]) -> ExecStats:
         for ins in instrs:
+            if self.pre_instr_hook is not None:
+                self.pre_instr_hook(self, self.stats.n_instr)
             self.stats.n_instr += 1
             self.stats.counts[ins.op] = self.stats.counts.get(ins.op, 0) + 1
             getattr(self, "_op_" + ins.op.lower())(*ins.args)
@@ -582,6 +599,51 @@ class CFUMachine:
         self._meter_write(reg, self._map_shape(reg)[2])
         self._vec_slice(reg, y, x)[:] = self.res
 
+    # --- detection words (reliability extension) ----------------------------
+
+    def _chk_region(self, reg: int) -> Tuple[np.ndarray, int]:
+        space, base = self.base[reg]
+        hm, wm, ch = self._map_shape(reg)
+        size = hm * wm * ch
+        return self.mem[space][:, base:base + size], size
+
+    def _op_chk_wgt(self, which, block, sum_):
+        name = {isa.WGT_EXP: "w_exp", isa.WGT_DW: "w_dw",
+                isa.WGT_PROJ: "w_proj", isa.WGT_CONV: "w_conv"}[which]
+        w = getattr(self.params[block], name, None)
+        if w is None:
+            raise RuntimeError(
+                f"CHK_WGT: block {block} defines no {name} tensor")
+        k2 = isa.KERNEL * isa.KERNEL
+        nbytes = {isa.WGT_EXP: self.cin * self.cmid,
+                  isa.WGT_DW: k2 * self.cmid,
+                  isa.WGT_PROJ: self.cmid * self.cout,
+                  isa.WGT_CONV: k2 * self.cin * self.cmid}[which]
+        self.stats.check_bytes += nbytes
+        got = isa.checksum32(w)
+        if got != sum_:
+            raise FaultDetected(
+                f"CHK_WGT: block {block} {name} checksum 0x{got:08x} != "
+                f"stamped 0x{sum_:08x} — weight memory corrupted")
+
+    def _op_chk_save(self, reg, k):
+        data, size = self._chk_region(reg)
+        self.stats.check_bytes += size
+        self.chk[k] = isa.checksum32(data)
+
+    def _op_chk_cmp(self, reg, k):
+        want = self.chk.get(k)
+        if want is None:
+            raise RuntimeError(f"CHK_CMP chk={k} before any CHK_SAVE")
+        data, size = self._chk_region(reg)
+        self.stats.check_bytes += size
+        got = isa.checksum32(data)
+        if got != want:
+            raise FaultDetected(
+                f"CHK_CMP: region at {isa.REG_NAMES[reg]} checksum "
+                f"0x{got:08x} != saved 0x{want:08x} — activation memory "
+                f"corrupted in the guarded window")
+
 
 # --- host-side entry points --------------------------------------------------
 
@@ -629,7 +691,8 @@ def read_output(dram_mem: np.ndarray, sram_mem: Optional[np.ndarray],
 def run_words(words: Sequence[int], x_q, params: Sequence,
               meta: Dict[str, object],
               return_stats: bool = False,
-              tracer: Optional[Tracer] = None):
+              tracer: Optional[Tracer] = None,
+              pre_instr_hook=None):
     """Execute an encoded program on ``x_q``: (H, W, C) int8 or a batch
     (B, H, W, C) — one instruction stream drives the whole batch.
 
@@ -637,12 +700,26 @@ def run_words(words: Sequence[int], x_q, params: Sequence,
     input/output binding); the architectural behaviour is fully determined
     by the words themselves. ``tracer`` records per-phase spans (time axis
     = retired instructions) and a final counter-bank dump; it never
-    affects any computed value.
+    affects any computed value. ``pre_instr_hook(machine, n_instr)`` runs
+    before each instruction — the fault campaigns' cycle-window injection
+    point (``cfu/faults.py``).
+
+    When ``meta["parity"]`` is set, every word is verified against its
+    even-parity bit BEFORE decoding, so a single-bit flip anywhere in an
+    encoded instruction raises :class:`FaultDetected` instead of
+    executing (or crashing the decoder on) a corrupted word.
     """
     layout = meta["layout"]
+    if meta.get("parity"):
+        bad = isa.bad_parity_indices(words)
+        if bad:
+            raise FaultDetected(
+                f"{len(bad)} instruction word(s) failed the parity check "
+                f"(first at index {bad[0]}) — instruction memory corrupted")
     x_q, batched = bind_input(x_q, meta)
     m = CFUMachine(params, layout.dram_size, layout.sram_size,
                    batch=x_q.shape[0], tracer=tracer)
+    m.pre_instr_hook = pre_instr_hook
     r_in = layout.regions[meta["in_region"]]
     m.mem[r_in.space][:, r_in.base:r_in.base + r_in.size] = \
         x_q.reshape(x_q.shape[0], -1)

@@ -96,6 +96,35 @@ depthwise with 2x2->4x4 tile stitching):
   ``Y[oy%2, ox%2] + b_dw`` on the depthwise accumulator, feeding the same
   ``REQUANT F2`` -> ``PROJ_MAC`` tail as ``DW_MAC``. Out-of-map window taps
   read the F1 zero point, exactly like the direct path's padding.
+
+Reliability extension (PR 9)
+----------------------------
+Detection words for the fault-injection campaigns (``cfu/faults.py``).
+All are opt-in: an unprotected stream encodes byte-identically to PR 8.
+
+* **Word parity** — every field layout leaves bit 0 of the 64-bit word
+  unused (CFG, the widest, packs 54 bits down to bit 2), so bit 0 carries
+  an even-parity bit over the whole word when ``program.meta["parity"]``
+  is set. ``encode_program`` stamps it; the executor verifies every word
+  before decoding, so ANY single-bit flip in an encoded instruction —
+  opcode byte, operand field, unused gap, or the parity bit itself — is
+  detected before it can execute. The disassembler ignores bit 0, so a
+  parity-stamped word decodes to the same ``Instr``.
+* ``CHK_WGT which, block, sum`` — verify that the additive byte checksum
+  (uint8 sum mod 2^32) of the named weight tensor equals the 32-bit
+  ``sum`` operand stamped at protect time from the pristine params. A
+  single bit flip in a weight byte changes the sum by exactly ±2^k mod
+  2^32, so detection of single-bit weight faults is exact, not
+  probabilistic. Mismatch raises ``faults.FaultDetected``.
+* ``CHK_SAVE reg, chk`` / ``CHK_CMP reg, chk`` — checksum the feature-map
+  region bound to ``reg`` into check register ``chk`` / recompute and
+  compare. The protect pass wraps producer->consumer map regions across
+  BAR boundaries, so SRAM/DRAM data corruption in the guarded window is
+  caught at the consumer instead of silently propagating.
+
+All three check words meter ``check_bytes`` — a CSR-style counter on the
+existing ``CounterBank`` that the timing walker models identically
+(modeled == executed, as everywhere else).
 """
 
 from __future__ import annotations
@@ -147,6 +176,9 @@ OPCODES: Dict[str, int] = {
     "CFG_DBUF": 0x16,
     "CFG_WINO": 0x17,
     "WINO_MAC": 0x18,
+    "CHK_WGT": 0x19,
+    "CHK_SAVE": 0x1A,
+    "CHK_CMP": 0x1B,
 }
 MNEMONICS = {v: k for k, v in OPCODES.items()}
 
@@ -179,7 +211,15 @@ FIELD_SPECS: Dict[str, List[Tuple[str, int]]] = {
     # Winograd F(2x2,3x3) depthwise: 2x2 output tiles over a 4x4 F1 window
     "CFG_WINO": [("tiles_y", 12), ("tiles_x", 12), ("shared", 1)],
     "WINO_MAC": [("oy", 12), ("ox", 12)],
+    # weight-stream checksum: additive uint8 sum mod 2^32, stamped at
+    # protect time from the pristine params (see module docstring)
+    "CHK_WGT": [("which", 2), ("block", 10), ("sum", 32)],
+    # activation-region checksums through a 16-entry check-register file
+    "CHK_SAVE": [("reg", 2), ("chk", 4)],
+    "CHK_CMP": [("reg", 2), ("chk", 4)],
 }
+
+N_CHK_REGS = 16   # check-register file depth (CHK_SAVE/CHK_CMP.chk is 4 bits)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -247,9 +287,64 @@ def disassemble(word: int) -> Instr:
     return Instr(op, tuple(args))
 
 
+# --- word parity (reliability extension) ------------------------------------
+#
+# Bit 0 of every word is outside all field layouts (CFG, the widest spec,
+# stops at bit 2), so it can carry an even-parity bit without perturbing
+# the decoded instruction: ``disassemble`` only reads spec'd fields.
+
+
+def parity_of(word: int) -> int:
+    """Population-count parity (0 = even number of set bits)."""
+    return bin(int(word)).count("1") & 1
+
+
+def with_parity(word: int) -> int:
+    """Set bit 0 so the whole 64-bit word has even parity.
+
+    ``assemble`` never sets bit 0, so this is total over assembled words.
+    """
+    word = int(word)
+    if word & 1:
+        raise ValueError("bit 0 already set: word is not a bare "
+                         "assembled instruction")
+    return word | parity_of(word)
+
+
+def parity_ok(word: int) -> bool:
+    return parity_of(word) == 0
+
+
+def bad_parity_indices(words: Sequence[int]) -> List[int]:
+    """Indices of words failing the even-parity check (the ISA-level
+    single-bit-fault detector; the executor raises ``FaultDetected`` on a
+    non-empty result when the stream's meta arms parity)."""
+    return [i for i, w in enumerate(words) if not parity_ok(int(w))]
+
+
+def checksum32(arr) -> int:
+    """The CHK words' checksum: additive uint8 byte sum mod 2^32.
+
+    A single bit flip in any byte moves the sum by exactly ±2^k (mod
+    2^32, k < 8), which is never 0, so single-bit detection is exact —
+    the property the campaign gate in ``benchmarks/bench_faults.py``
+    relies on.
+    """
+    a = np.ascontiguousarray(np.asarray(arr), dtype=np.int8).reshape(-1)
+    return int(a.view(np.uint8).sum(dtype=np.uint64) & np.uint64(0xFFFFFFFF))
+
+
 def encode_program(program: Program) -> np.ndarray:
-    """Program -> uint64 word array (the 'binary')."""
-    return np.asarray([assemble(i) for i in program.instrs], dtype=np.uint64)
+    """Program -> uint64 word array (the 'binary').
+
+    When ``program.meta["parity"]`` is set, every word is stamped with an
+    even-parity bit in bit 0 (see module docstring); unprotected programs
+    encode byte-identically to earlier revisions.
+    """
+    words = [assemble(i) for i in program.instrs]
+    if program.meta.get("parity"):
+        words = [with_parity(w) for w in words]
+    return np.asarray(words, dtype=np.uint64)
 
 
 def decode_words(words: Sequence[int]) -> List[Instr]:

@@ -73,8 +73,18 @@ def bursty(rate_qps: float, n: int, freq_hz: float = DEFAULT_FREQ_HZ,
 
 
 def trace(path: str, n: Optional[int] = None,
-          freq_hz: float = DEFAULT_FREQ_HZ) -> np.ndarray:
-    """Replay a recorded trace of arrival timestamps (seconds)."""
+          freq_hz: float = DEFAULT_FREQ_HZ,
+          rate_qps: Optional[float] = None) -> np.ndarray:
+    """Replay a recorded trace of arrival timestamps (seconds).
+
+    Asking for more arrivals than the trace holds raises — it used to
+    silently return the short trace, so a sweep comparing "400 requests
+    at each rate" against a 100-request trace quietly compared different
+    workloads. ``rate_qps`` rescales the timeline so the trace's mean
+    arrival rate equals the requested rate (shape preserved, rate
+    swept) — the explicit opt-in replacing the old silent mismatch where
+    ``make_arrivals`` accepted ``rate_qps`` for traces and ignored it.
+    """
     with open(path) as f:
         data = json.load(f)
     if isinstance(data, dict):
@@ -83,7 +93,21 @@ def trace(path: str, n: Optional[int] = None,
     if times.size == 0:
         raise ValueError(f"trace {path!r} holds no arrivals")
     if n is not None:
+        if times.size < n:
+            raise ValueError(
+                f"trace {path!r} holds {times.size} arrivals but {n} were "
+                "requested — a truncated replay would silently compare a "
+                "different workload; pass n<=len or extend the trace")
         times = times[:n]
+    if rate_qps is not None:
+        if rate_qps <= 0:
+            raise ValueError(f"rate_qps must be > 0, got {rate_qps}")
+        if times.size < 2 or times[-1] <= times[0]:
+            raise ValueError(
+                "rate rescaling needs >= 2 distinct timestamps to "
+                "measure the trace's own rate")
+        measured = (times.size - 1) / (times[-1] - times[0])
+        times = times * (measured / rate_qps)
     return times * freq_hz
 
 
@@ -93,8 +117,15 @@ ARRIVALS = ("poisson", "bursty", "trace")
 def make_arrivals(kind: str, rate_qps: float, n: int,
                   freq_hz: float = DEFAULT_FREQ_HZ, seed: int = 0,
                   trace_path: Optional[str] = None,
-                  bursty_kwargs: Optional[Dict] = None) -> np.ndarray:
-    """Dispatch on ``kind`` (one of :data:`ARRIVALS`)."""
+                  bursty_kwargs: Optional[Dict] = None,
+                  rescale_to_rate: bool = False) -> np.ndarray:
+    """Dispatch on ``kind`` (one of :data:`ARRIVALS`).
+
+    For traces, ``rate_qps`` only applies when ``rescale_to_rate=True``
+    (the timeline is stretched so the trace's mean rate equals it);
+    otherwise the trace replays at its recorded rate and ``rate_qps`` is
+    deliberately unused rather than silently pretended.
+    """
     if kind == "poisson":
         return poisson(rate_qps, n, freq_hz=freq_hz, seed=seed)
     if kind == "bursty":
@@ -103,5 +134,6 @@ def make_arrivals(kind: str, rate_qps: float, n: int,
     if kind == "trace":
         if not trace_path:
             raise ValueError("kind='trace' needs trace_path")
-        return trace(trace_path, n=n, freq_hz=freq_hz)
+        return trace(trace_path, n=n, freq_hz=freq_hz,
+                     rate_qps=rate_qps if rescale_to_rate else None)
     raise ValueError(f"unknown arrival kind {kind!r}; want {ARRIVALS}")

@@ -10,6 +10,14 @@ plays a seeded arrival schedule through them as a discrete-event loop:
 * ``poll``       — a policy deadline (batching timeout) fires; consult.
 * ``complete``   — a dispatched group exits the pipeline; its requests'
   latencies are final.
+* ``dropout``    — a core dies mid-simulation (:class:`DropoutEvent`):
+  the device is swapped for its degraded (survivors-only) twin, every
+  in-flight group is voided and its requests re-queued at the FRONT of
+  the queue in original order (the failover replay — the executor-level
+  analogue, ``faults.run_with_dropout``, proves the replay bit-exact),
+  and late ``complete`` events for voided groups are ignored as stale.
+  Requests are still conserved; the p99 impact of the dropout is just
+  the summary diff against the same run without the event.
 
 Dispatching a group of B requests at time t occupies the front door
 until ``t + entry_interval_cycles(B)`` and completes at
@@ -45,7 +53,23 @@ from repro.cfu.serve.service import ServiceModel
 
 # log entries: ("arrival", t, rid) / ("dispatch", t, bid, size, rids)
 #            / ("complete", t, bid) / ("poll", t)
+#            / ("dropout", t, core, voided_bids) / ("stale_complete", t, bid)
 LogEntry = Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class DropoutEvent:
+    """One core dies at ``at_cycles``: serve the rest of the run on
+    ``degraded`` (the surviving-cores service model — compile the same
+    network with ``streams - 1``), replaying every in-flight request.
+    ``repartition_cycles`` is the failover dead time before the degraded
+    device accepts its first group (checkpoint restore + re-partition
+    DMA); 0 models instant failover."""
+
+    at_cycles: float
+    degraded: ServiceModel
+    core: int = 0
+    repartition_cycles: float = 0.0
 
 
 @dataclasses.dataclass
@@ -68,8 +92,10 @@ class ServingSimulator:
                  arrivals: np.ndarray,
                  spot_check: Optional[DifferentialSpotCheck] = None,
                  max_events: Optional[int] = None,
-                 tracer=None, slo_cycles: Optional[float] = None):
+                 tracer=None, slo_cycles: Optional[float] = None,
+                 dropout: Optional[DropoutEvent] = None):
         self.service = service
+        self.dropout = dropout
         self.policy = policy
         self.arrivals = np.asarray(arrivals, dtype=float)
         if self.arrivals.ndim != 1:
@@ -93,12 +119,17 @@ class ServingSimulator:
                                    tracer=self.tracer,
                                    slo_cycles=self.slo_cycles)
         log: List[LogEntry] = []
+        service = self.service    # swapped for the degraded twin on dropout
         next_entry = 0.0          # earliest cycle the device can accept
         next_bid = 0
         poll_at: Optional[float] = None   # earliest outstanding POLL
+        inflight: Dict[int, List[int]] = {}   # bid -> rids, until COMPLETE
+        voided: set = set()                   # bids killed by a dropout
 
         for rid, t in enumerate(arrival_time):
             q.push(t, ev.ARRIVAL, rid=rid)
+        if self.dropout is not None:
+            q.push(self.dropout.at_cycles, ev.DROPOUT)
 
         def try_dispatch(now: float):
             nonlocal next_entry, next_bid, poll_at
@@ -120,20 +151,21 @@ class ServingSimulator:
                             q.push(deadline, ev.POLL)
                             poll_at = deadline
                     return
-                n = min(n, len(queue), self.service.max_batch)
+                n = min(n, len(queue), service.max_batch)
                 rids = [queue.popleft() for _ in range(n)]
                 bid = next_bid
                 next_bid += 1
-                interval = self.service.entry_interval_cycles(n)
-                latency = self.service.group_latency_cycles(n)
+                interval = service.entry_interval_cycles(n)
+                latency = service.group_latency_cycles(n)
                 next_entry = now + interval
                 t_done = now + latency
                 q.push(next_entry, ev.ENTRY_FREE)
                 q.push(t_done, ev.COMPLETE, bid=bid, rids=rids)
+                inflight[bid] = list(rids)
                 metrics.on_dispatch(
                     bid=bid, rids=rids, t_entry=now, t_complete=t_done,
-                    energy_pj=self.service.energy_pj(n),
-                    busy_cycles=self.service.core_busy_cycles(n),
+                    energy_pj=service.energy_pj(n),
+                    busy_cycles=service.core_busy_cycles(n),
                     depth=len(queue))
                 log.append(("dispatch", now, bid, n, tuple(rids)))
                 if self.spot_check is not None and \
@@ -164,14 +196,40 @@ class ServingSimulator:
                 log.append(("poll", e.time))
                 try_dispatch(e.time)
             elif e.kind == ev.COMPLETE:
+                bid = e.payload["bid"]
+                if bid in voided:
+                    # the pipeline that would have produced this result
+                    # died; its requests were already re-queued
+                    log.append(("stale_complete", e.time, bid))
+                    continue
+                inflight.pop(bid, None)
                 metrics.on_complete(e.payload["rids"], e.time)
-                log.append(("complete", e.time, e.payload["bid"]))
+                log.append(("complete", e.time, bid))
+            elif e.kind == ev.DROPOUT:
+                d = self.dropout
+                dead_bids = sorted(inflight)
+                replay = [rid for bid in dead_bids for rid in inflight[bid]]
+                voided.update(dead_bids)
+                inflight.clear()
+                # re-queue in original dispatch order, at the queue FRONT:
+                # in-flight work has queue priority over waiting arrivals
+                queue.extendleft(reversed(replay))
+                service = d.degraded
+                next_entry = e.time + d.repartition_cycles
+                metrics.on_dropout(e.time, core=d.core,
+                                   replayed_rids=replay,
+                                   voided_bids=dead_bids,
+                                   n_cores=service.n_stages)
+                log.append(("dropout", e.time, d.core, tuple(dead_bids)))
+                q.push(next_entry, ev.ENTRY_FREE)
             else:
                 raise ValueError(f"unknown event kind {e.kind!r}")
 
         summary = metrics.summary()
         summary["policy"] = self.policy.describe()
         summary["device"] = self.service.describe()
+        if self.dropout is not None:
+            summary["device_degraded"] = self.dropout.degraded.describe()
         if self.spot_check is not None:
             summary["spot_checks"] = self.spot_check.summary()
         return SimResult(summary=summary, event_log=log, metrics=metrics)

@@ -21,6 +21,7 @@ ARRIVAL = "arrival"        # a request joins the queue
 POLL = "poll"              # a policy timer (e.g. batching timeout) fires
 ENTRY_FREE = "entry_free"  # the device can accept the next frame group
 COMPLETE = "complete"      # a dispatched group exits the pipeline
+DROPOUT = "dropout"        # a core dies: degrade the device, replay inflight
 
 
 @dataclasses.dataclass(frozen=True)

@@ -45,9 +45,10 @@ class BatchRecord:
     bid: int
     size: int
     t_entry: float
-    t_complete: float
+    t_complete: float       # scheduled exit; phantom if ``voided``
     energy_pj: float
     rids: List[int]
+    voided: bool = False    # killed by a core dropout before completing
 
 
 class MetricsCollector:
@@ -62,6 +63,7 @@ class MetricsCollector:
         self.requests: List[RequestRecord] = []
         self.batches: List[BatchRecord] = []
         self.core_busy = [0.0] * n_cores
+        self.dropouts: List[Dict[str, object]] = []
         self.queue_trace: List[tuple] = []   # (time, depth) at each change
         # in-flight batch slots for trace rendering: slot i is free again
         # at _slot_free[i]; a dispatched group takes the first free slot,
@@ -124,6 +126,30 @@ class MetricsCollector:
                         args={"rid": rid, "latency_cycles": lat,
                               "slo_cycles": self.slo_cycles})
 
+    def on_dropout(self, t: float, core: int, replayed_rids: List[int],
+                   voided_bids: List[int], n_cores: int) -> None:
+        """A core died: its in-flight requests go back to the queue.
+
+        The voided batches' dispatch bookkeeping is unwound (their
+        requests will be re-dispatched by the degraded device), but
+        their busy cycles and energy stay counted — that work WAS done
+        before it was lost, and hiding it would flatter the failover.
+        """
+        for rid in replayed_rids:
+            self.requests[rid].t_dispatch = None
+            self.requests[rid].batch_id = None
+        for bid in voided_bids:
+            self.batches[bid].voided = True
+        self.dropouts.append({
+            "t_cycles": t, "core": core,
+            "n_replayed": len(replayed_rids),
+            "n_batches_voided": len(voided_bids),
+            "n_cores_after": n_cores})
+        self.tracer.instant(
+            "core_dropout", t, pid=SERVE_PID, tid=0, cat=CAT_SERVE,
+            args={"core": core, "replayed": len(replayed_rids),
+                  "voided_bids": list(voided_bids)})
+
     # --- summary ----------------------------------------------------------
 
     def summary(self) -> Dict[str, object]:
@@ -131,8 +157,8 @@ class MetricsCollector:
                         if r.latency is not None])
         served = int(lat.size)
         n_arr = len(self.requests)
-        horizon = max((b.t_complete for b in self.batches),
-                      default=0.0)
+        horizon = max((b.t_complete for b in self.batches
+                       if not b.voided), default=0.0)
         ms = 1e3 / self.freq_hz
         out: Dict[str, object] = {
             "n_arrivals": n_arr,
@@ -173,4 +199,8 @@ class MetricsCollector:
         if self.slo_cycles is not None:
             out["slo_cycles"] = self.slo_cycles
             out["slo_violations"] = self.slo_violations
+        if self.dropouts:      # keys only exist when a dropout occurred
+            out["dropouts"] = list(self.dropouts)
+            out["n_replayed"] = int(
+                sum(d["n_replayed"] for d in self.dropouts))
         return out

@@ -83,12 +83,18 @@ def simulate(service: ServiceModel, policy_name: str, rate_qps: float,
              slo_cycles: Optional[float] = None,
              batch_cap: Optional[int] = None,
              timeout_cycles: Optional[float] = None,
-             spot_check=None, tracer=None):
+             spot_check=None, tracer=None,
+             rescale_to_rate: bool = False,
+             dropout=None):
     """One seeded simulation at a fixed rate (the planner's probe).
 
     ``tracer`` (a ``repro.cfu.trace.Tracer``) records the request-level
     timeline — queue depth, batch spans, SLO instants — without touching
-    any simulated number.
+    any simulated number. ``rescale_to_rate`` makes trace replays honour
+    ``rate_qps`` (see ``arrivals.trace``); ``dropout`` (a
+    ``dispatcher.DropoutEvent``) kills a core mid-run, degrading the
+    device and replaying in-flight requests — run the same probe with
+    and without it and diff the p99 to price the failover.
     """
     policy = make_policy(policy_name, service=service,
                          batch_cap=batch_cap,
@@ -96,10 +102,11 @@ def simulate(service: ServiceModel, policy_name: str, rate_qps: float,
                          slo_cycles=slo_cycles)
     arrivals = make_arrivals(arrival_kind, rate_qps, n_requests,
                              freq_hz=service.freq_hz, seed=seed,
-                             trace_path=trace_path)
+                             trace_path=trace_path,
+                             rescale_to_rate=rescale_to_rate)
     sim = ServingSimulator(service, policy, arrivals,
                            spot_check=spot_check, tracer=tracer,
-                           slo_cycles=slo_cycles)
+                           slo_cycles=slo_cycles, dropout=dropout)
     res = sim.run()
     res.summary["rate_qps"] = rate_qps
     res.summary["arrival_kind"] = arrival_kind

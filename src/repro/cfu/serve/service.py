@@ -113,9 +113,29 @@ class ServiceModel:
         initiation interval."""
         return batch * self.freq_hz / self.entry_interval_cycles(batch)
 
+    def slo_feasible(self, slo_cycles: float) -> bool:
+        """Whether ANY group size meets the SLO unloaded — i.e. whether
+        even a lone batch-1 request fits its pipe traversal under the
+        deadline. An infeasible SLO means every request violates by
+        construction, regardless of policy."""
+        return self.group_latency_cycles(1) <= slo_cycles
+
     def best_batch_under_slo(self, slo_cycles: float) -> int:
         """Largest (throughput-maximal) group size whose unloaded pipe
-        traversal still fits the SLO; 1 if none does."""
+        traversal still fits the SLO.
+
+        Raises ``ValueError`` when not even batch 1 fits: silently
+        returning 1 used to let an unmeetable SLO configure a policy that
+        then violated on 100% of requests with no hint the deadline was
+        impossible for this device. Check :meth:`slo_feasible` first to
+        branch instead of catching.
+        """
+        if not self.slo_feasible(slo_cycles):
+            raise ValueError(
+                f"SLO of {slo_cycles:.0f} cycles is infeasible: a lone "
+                f"batch-1 group needs {self.group_latency_cycles(1):.0f} "
+                "cycles to traverse the pipeline — every request would "
+                "violate. Relax the SLO or use a faster device config.")
         best, best_rate = 1, 0.0
         for b in range(1, self.max_batch + 1):
             if self.group_latency_cycles(b) > slo_cycles:

@@ -252,6 +252,7 @@ class TimingReport:
     dram_wr_bytes: int = 0
     sram_rd_bytes: int = 0
     sram_wr_bytes: int = 0
+    check_bytes: int = 0               # CHK_* sweep coverage (batch-indep.)
     retired: Dict[str, int] = dataclasses.field(default_factory=dict)
     macs_by_engine: Dict[str, int] = dataclasses.field(default_factory=dict)
     # per-stage engine-busy cycles summed over iterations BEFORE pipelining
@@ -277,6 +278,7 @@ class TimingReport:
             sram_rd_bytes=self.sram_rd_bytes,
             sram_wr_bytes=self.sram_wr_bytes,
             weight_bytes=self.weight_bytes,
+            check_bytes=self.check_bytes,
             stall_cycles=self.stall_cycles,
             handoff_cycles=self.handoff_cycles)
 
@@ -308,6 +310,7 @@ class _Walker:
         self.bytes_rd = {isa.SPACE_DRAM: 0, isa.SPACE_SRAM: 0}
         self.bytes_wr = {isa.SPACE_DRAM: 0, isa.SPACE_SRAM: 0}
         self.weight_bytes = 0
+        self.check_bytes = 0     # bytes swept by CHK_* detection words
         self.macs = 0
         self.retired: Dict[str, int] = {}     # per-opcode, mirrors ExecStats
         self.macs_by_engine: Dict[str, int] = {}
@@ -572,6 +575,22 @@ class _Walker:
                 reg = ins.args[0]
                 _, _, ch = self._map_shape(reg)
                 self._write(reg, ch)
+            elif op == "CHK_WGT":
+                # The checksum unit sweeps the weight buffer behind the
+                # streamer at line rate: coverage is metered (check_bytes,
+                # batch-independent like all weight traffic), cycles are
+                # hidden — a protected stream prices identically to its
+                # unprotected twin, so detection is free on the cycle axis
+                # and its cost shows up ONLY as the honest counter.
+                self.check_bytes += {
+                    isa.WGT_EXP: self.cin * self.cmid,
+                    isa.WGT_DW: k2 * self.cmid,
+                    isa.WGT_PROJ: self.cmid * self.cout,
+                    isa.WGT_CONV: k2 * self.cin * self.cmid}[ins.args[0]]
+            elif op in ("CHK_SAVE", "CHK_CMP"):
+                # region sweep over the map bound to reg (executor mirror)
+                hm, wm, ch = self._map_shape(ins.args[0])
+                self.check_bytes += hm * wm * ch
             elif op == "HALT":
                 self._end_phase()
             else:
@@ -659,6 +678,7 @@ class BatchCostModel:
             dram_wr_bytes=int(dram_wr),
             sram_rd_bytes=int(sram_rd),
             sram_wr_bytes=int(sram_wr),
+            check_bytes=int(w.check_bytes),
             retired=dict(w.retired),
             macs_by_engine={k: v * batch
                             for k, v in w.macs_by_engine.items()},

@@ -82,6 +82,7 @@ class CounterBank:
     sram_wr_bytes: int = 0
     weight_bytes: int = 0
     weight_reloads: int = 0
+    check_bytes: int = 0         # bytes swept by CHK_* detection words
     stall_cycles: float = 0.0
     handoff_cycles: float = 0.0
 
@@ -94,6 +95,7 @@ class CounterBank:
             "sram_wr_bytes": self.sram_wr_bytes,
             "weight_bytes": self.weight_bytes,
             "weight_reloads": self.weight_reloads,
+            "check_bytes": self.check_bytes,
             "stall_cycles": self.stall_cycles,
             "handoff_cycles": self.handoff_cycles,
         }

@@ -31,6 +31,18 @@ run prints per-core cycles, the steady-state frame interval, and the
 DRAM-port contention, and verifies ``executor.run_multistream``
 bit-exactly.
 
+``--protect`` stamps the reliability extension into the compiled
+stream(s) post-compile (``cfu.faults.protect_program``): instruction-word
+parity, a CHK_WGT checksum after every weight load, and CHK_SAVE/CHK_CMP
+guards on cross-phase feature maps. The protected stream verifies
+bit-exactly against the same reference — detection never perturbs data —
+and the timing report is cycle-identical (the checksum sweep pipelines
+behind the streamer; only the ``check_bytes`` counter grows). ``--fault
+SPACE`` then runs a small seeded injection demo (8 single-bit faults in
+``weights``/``instr``/``sram``/``dram``) and prints the outcome taxonomy:
+with ``--protect``, weight and instruction faults are all *detected*;
+without, they land as *sdc*/*masked*/*crashed*.
+
 ``--pe`` sets the engine counts baked into the stream's CFG_PE word
 (default: the paper's 9,9,56). With ``--streams N``, ``--pe-per-core``
 makes the frame pipeline heterogeneous: N semicolon-separated ``E,D,P``
@@ -109,6 +121,33 @@ def _dump_asm(prog, path: str):
         else:
             f.write(isa.program_to_asm(prog))
     print(f"# assembly ({len(prog)} instrs) -> {path}")
+
+
+def _protect(prog, params, args):
+    """Stamp the reliability extension when ``--protect`` is given."""
+    if not args.protect:
+        return prog
+    from repro.cfu import faults
+    prog = faults.protect_program(prog, params, activation_checksums=True)
+    n = (sum(len(p) for p in prog.streams)
+         if isinstance(prog, MultiStreamProgram) else len(prog))
+    print(f"# protected: parity + checksums stamped ({n} instrs)")
+    return prog
+
+
+def _fault_demo(prog, params, x_q, args):
+    """Seeded single-bit injection demo: 8 faults in --fault's space."""
+    from repro.cfu import faults
+    res = faults.run_campaign(prog, params, x_q, spaces=(args.fault,),
+                              n_faults=8, seed=args.seed, protect=False)
+    if res["skipped_spaces"]:
+        print(f"# fault demo: stream maps no {args.fault.upper()} — "
+              "nothing to upset")
+        return
+    tally = res["cells"][f"{args.fault}|x1"]
+    outcome = " ".join(f"{k}={v}" for k, v in tally.items() if v)
+    print(f"# fault demo ({args.fault}, 8 single-bit flips, "
+          f"protect={'on' if args.protect else 'off'}): {outcome}")
 
 
 def _describe_schedule(prog):
@@ -247,6 +286,7 @@ def _run_vww(args, key, pe: PEConfig, schedules, tracer=None):
                                    pipeline=args.pipeline)
         if sched == AUTO_SCHEDULE:
             print(f"# auto picks: {_describe_schedule(prog)}")
+        prog = _protect(prog, params, args)
         if args.asm:
             _dump_asm(prog, args.asm)
         rep, cycles = _report_of(prog, args)
@@ -268,6 +308,8 @@ def _run_vww(args, key, pe: PEConfig, schedules, tracer=None):
                 raise SystemExit(
                     f"BIT-EXACTNESS FAILURE under {sched} "
                     f"(batch1={v1}, batch{batch}={vn})")
+            if args.fault:
+                _fault_demo(prog, params, imgs_q[0], args)
         label = sched if isinstance(sched, str) else sched.value
         dram, sram = rep.dram_bytes, rep.sram_bytes
         # MultiStreamReport has no sram_buffer_bytes (scratch is per-core)
@@ -314,6 +356,7 @@ def _run_chain(args, key, pe: PEConfig, schedules, tracer=None):
                                pipeline=args.pipeline)
         if sched == AUTO_SCHEDULE:
             print(f"# auto picks: {_describe_schedule(prog)}")
+        prog = _protect(prog, params, args)
         if args.asm:
             _dump_asm(prog, args.asm)
         rep, cycles = _report_of(prog, args)
@@ -335,6 +378,8 @@ def _run_chain(args, key, pe: PEConfig, schedules, tracer=None):
             verified = bool(np.array_equal(y, np.asarray(ref)))
             if not verified:
                 raise SystemExit(f"BIT-EXACTNESS FAILURE under {sched}")
+            if args.fault:
+                _fault_demo(prog, params, x_q, args)
         dram, sram = rep.dram_bytes, rep.sram_bytes
         # MultiStreamReport has no sram_buffer_bytes (scratch is per-core)
         sbuf = getattr(rep, "sram_buffer_bytes",
@@ -390,6 +435,15 @@ def main(argv=None):
                          "fingerprint (fast; same bit-exact outputs)")
     ap.add_argument("--no-verify", action="store_true",
                     help="skip the bit-exact golden-model execution")
+    ap.add_argument("--protect", action="store_true",
+                    help="stamp the reliability extension (instruction "
+                         "parity + weight/activation checksum words) into "
+                         "the compiled stream; outputs stay bit-exact")
+    ap.add_argument("--fault", default=None,
+                    choices=["weights", "instr", "sram", "dram"],
+                    help="seeded single-bit fault-injection demo in this "
+                         "space (8 flips; prints the outcome taxonomy; "
+                         "needs verification on and --streams 1)")
     ap.add_argument("--asm", default=None,
                     help="dump the text assembly of the stream to this path")
     ap.add_argument("--json", default=None,
@@ -404,6 +458,19 @@ def main(argv=None):
                          "multi-core pipeline (default: timing."
                          "HANDOFF_SYNC_CYCLES = 64)")
     args = ap.parse_args(argv)
+
+    if args.protect and args.backend == "fast":
+        raise SystemExit("--protect needs --backend golden (the fast path "
+                         "does not model the check words)")
+    if args.fault:
+        if args.no_verify:
+            raise SystemExit("--fault needs verification on (the golden "
+                             "output is the SDC oracle)")
+        if args.streams != 1:
+            raise SystemExit("--fault wants --streams 1 (the campaign "
+                             "injects into one encoded stream)")
+        if args.backend == "fast":
+            raise SystemExit("--fault needs --backend golden")
 
     key = jax.random.PRNGKey(args.seed)
     pe = _parse_pe(args.pe)

@@ -6,6 +6,8 @@
         --arrivals bursty --requests 500
     python -m repro.launch.serve_cfu --plan --streams 2 \
         --pe-per-core auto-hetero --slo-ms 30
+    python -m repro.launch.serve_cfu --rate 200 --streams 2 \
+        --dropout-at-ms 50 --repartition-ms 1    # core dies mid-run
 
 Where ``repro.launch.cfu`` executes and times single frames or lockstep
 batches, this launcher runs the REQUEST level above it (``cfu.serve``):
@@ -150,6 +152,18 @@ def main(argv=None):
     ap.add_argument("--plan", action="store_true",
                     help="capacity planning: per-policy max sustainable "
                          "QPS under --slo-ms instead of one --rate run")
+    ap.add_argument("--dropout-at-ms", type=float, default=None,
+                    help="kill one core at this simulated time: the run "
+                         "degrades to streams-1 cores, replays in-flight "
+                         "requests, and reports the p99 delta vs the "
+                         "same run without the dropout (needs "
+                         "--streams >= 2; simulate mode only)")
+    ap.add_argument("--dropout-core", type=int, default=None,
+                    help="which core dies at --dropout-at-ms "
+                         "(default: the last)")
+    ap.add_argument("--repartition-ms", type=float, default=0.0,
+                    help="failover dead time before the degraded device "
+                         "accepts work (checkpoint restore + repartition)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", default=None,
                     help="write the result payload to this path")
@@ -197,6 +211,27 @@ def main(argv=None):
             # one max-batch frame group, next to the request-level lanes
             service.emit_model_trace(tracer, service.max_batch,
                                      pid_base=100)
+        dropout = None
+        if args.dropout_at_ms is not None:
+            if args.streams < 2:
+                raise SystemExit("--dropout-at-ms needs --streams >= 2 "
+                                 "(a 1-core device has no survivors)")
+            from repro.cfu.serve.dispatcher import DropoutEvent
+            degraded = build_vww_service(
+                args.img_hw, streams=args.streams - 1,
+                pe=_parse_pe(args.pe),
+                pe_per_core=_parse_pe_per_core(
+                    args.pe_per_core, args.streams - 1)
+                if args.streams - 1 > 1 else None,
+                schedule=args.schedule, pipeline=args.pipeline,
+                freq_hz=freq_hz, sram_port_bytes=args.sram_port_bytes,
+                handoff_sync_cycles=args.handoff_sync_cycles)
+            dropout = DropoutEvent(
+                at_cycles=args.dropout_at_ms * 1e-3 * freq_hz,
+                degraded=degraded,
+                core=(args.dropout_core if args.dropout_core is not None
+                      else args.streams - 1),
+                repartition_cycles=args.repartition_ms * 1e-3 * freq_hz)
         res = simulate(service, args.policy, args.rate,
                        n_requests=args.requests, seed=args.seed,
                        arrival_kind=args.arrivals,
@@ -204,12 +239,30 @@ def main(argv=None):
                        slo_cycles=slo_cycles,
                        batch_cap=args.batch_cap,
                        timeout_cycles=args.timeout_ms * 1e-3 * freq_hz,
-                       spot_check=spot, tracer=tracer)
+                       spot_check=spot, tracer=tracer, dropout=dropout)
         if tracer is not None:
             tracer.save(args.trace)
             print(f"# trace ({len(tracer.events)} events) -> {args.trace}"
                   f" (open at https://ui.perfetto.dev)")
         print("\n".join(summary_lines(res.summary)))
+        if dropout is not None:
+            # the failover price: same seed, same arrivals, no dropout
+            base = simulate(service, args.policy, args.rate,
+                            n_requests=args.requests, seed=args.seed,
+                            arrival_kind=args.arrivals,
+                            trace_path=args.arrival_trace,
+                            slo_cycles=slo_cycles,
+                            batch_cap=args.batch_cap,
+                            timeout_cycles=args.timeout_ms * 1e-3
+                            * freq_hz)
+            d99 = (res.summary.get("latency_p99_ms", float("nan"))
+                   - base.summary.get("latency_p99_ms", float("nan")))
+            print(f"# dropout at {args.dropout_at_ms} ms: "
+                  f"{res.summary.get('n_replayed', 0)} request(s) "
+                  f"replayed, p99 {base.summary.get('latency_p99_ms', 0):.2f}"
+                  f" -> {res.summary.get('latency_p99_ms', 0):.2f} ms "
+                  f"(delta {d99:+.2f} ms)")
+            res.summary["p99_delta_ms_vs_no_dropout"] = d99
         slo_ok = res.summary.get("latency_p99_cycles",
                                  float("inf")) <= slo_cycles
         print(f"# SLO {args.slo_ms} ms p99: "

@@ -47,13 +47,16 @@ class Watchdog:
         if self.ewma is None:
             self.ewma = dt
             return False
-        flagged = self.n > self.warmup and dt > self.threshold * self.ewma
+        outlier = dt > self.threshold * self.ewma
+        flagged = outlier and self.n > self.warmup
         if flagged:
             self.stragglers.append({"step": step, "dt": dt,
                                     "ewma": self.ewma})
-        else:
-            # stragglers are excluded from the EWMA so one hiccup does not
-            # raise the bar for detecting the next one
+        if not outlier:
+            # outliers are excluded from the EWMA so one hiccup does not
+            # raise the bar for detecting the next one — INCLUDING during
+            # warmup: an early hiccup is silenced (no flag) but must not
+            # poison the baseline every later step is judged against
             self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt
         return flagged
 

@@ -1,0 +1,345 @@
+"""Fault injection, ISA-level detection, and failover — reliability claims.
+
+* **Mechanism exactness** — a single bit flip always breaks even parity
+  and always moves the additive byte checksum, so parity + ``CHK_WGT``
+  words detect 100% of single-bit instruction and weight faults (the
+  CI-gated coverage cell, also a hypothesis property over seeds).
+* **Zero perturbation** — a protected stream computes byte-identical
+  outputs to its unprotected twin on every schedule, never false-trips,
+  and its ``check_bytes`` CSR agrees modeled == executed.
+* **No silent pass** — without protection, a single weight flip is
+  either masked (logits provably bit-equal) or SDC (logits provably
+  differ); the taxonomy never hides corruption.
+* **Failover** — ``run_with_dropout`` replays in-flight frames on the
+  survivors bit-exactly at any drop round; the serving-level dropout
+  conserves requests, stays deterministic, and only ever costs latency.
+* **Reliability-edge fixes** — short arrival traces raise instead of
+  silently truncating; ``rescale_to_rate`` is exact; an unmeetable SLO
+  raises from ``best_batch_under_slo`` with ``slo_feasible`` to branch.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.cfu import faults as flt
+from repro.cfu import isa
+from repro.cfu.compiler import compile_network
+from repro.cfu.executor import (FaultDetected, run_multistream,
+                                run_program, run_words)
+from repro.cfu.network import random_chain_params
+from repro.cfu.serve import arrivals
+from repro.cfu.serve.dispatcher import DropoutEvent, ServingSimulator
+from repro.cfu.serve.planner import build_vww_service
+from repro.cfu.serve.policies import make_policy
+from repro.cfu.timing import PEConfig, analyze
+from repro.core.dsc import DSCBlockSpec
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # optional extra; CI installs it
+    HAVE_HYPOTHESIS = False
+
+CHAIN = [("b0", DSCBlockSpec(cin=3, cmid=8, cout=8, stride=1)),
+         ("b1", DSCBlockSpec(cin=8, cmid=16, cout=10, stride=2))]
+HW = 10
+SCHEDULES = ("fused", "layer-sram", "layer-dram")
+
+
+@pytest.fixture(scope="module")
+def chain():
+    import jax
+    params = random_chain_params(jax.random.PRNGKey(0), CHAIN, HW, seed=0)
+    rng = np.random.default_rng(1)
+    x_q = rng.integers(-128, 128, (HW, HW, CHAIN[0][1].cin),
+                       dtype=np.int64).astype(np.int8)
+    return x_q, params
+
+
+@pytest.fixture(scope="module")
+def protected(chain):
+    """One protected fused stream + its golden output, shared by the
+    detection tests (protection is deterministic, faults are per-test)."""
+    x_q, params = chain
+    prog = compile_network(CHAIN, HW, HW, "fused")
+    prot = flt.protect_program(prog, params, activation_checksums=True)
+    words = isa.encode_program(prot)
+    golden = run_words(words, x_q, params, prot.meta)
+    return words, prot.meta, params, x_q, golden
+
+
+# --- mechanism exactness ----------------------------------------------------
+
+
+def test_parity_single_flip_always_breaks():
+    rng = np.random.default_rng(0)
+    raw = rng.integers(0, 2**62, 32, dtype=np.uint64) << np.uint64(1)
+    words = np.array([isa.with_parity(int(w)) for w in raw], np.uint64)
+    assert all(isa.parity_ok(int(w)) for w in words)
+    assert list(isa.bad_parity_indices(words)) == []
+    for _ in range(64):
+        i = int(rng.integers(words.size))
+        b = int(rng.integers(64))
+        bad = words.copy()
+        bad[i] ^= np.uint64(1) << np.uint64(b)
+        assert not isa.parity_ok(int(bad[i]))
+        assert list(isa.bad_parity_indices(bad)) == [i]
+
+
+def test_checksum32_single_flip_always_moves():
+    rng = np.random.default_rng(0)
+    arr = rng.integers(-128, 128, 257, dtype=np.int64).astype(np.int8)
+    base = isa.checksum32(arr)
+    for _ in range(64):
+        bad = arr.copy()
+        i, b = int(rng.integers(arr.size)), int(rng.integers(8))
+        bad.view(np.uint8)[i] ^= np.uint8(1 << b)
+        assert isa.checksum32(bad) != base
+
+
+# --- zero perturbation ------------------------------------------------------
+
+
+@pytest.mark.parametrize("sched", SCHEDULES)
+def test_protection_is_bit_exact(sched, chain):
+    x_q, params = chain
+    prog = compile_network(CHAIN, HW, HW, sched)
+    prot = flt.protect_program(prog, params, activation_checksums=True)
+    assert len(prot.instrs) > len(prog.instrs)    # words were stamped
+    assert prot.meta["parity"] and prot.meta["protected"]
+    y0 = run_program(prog, x_q, params)
+    y1 = run_program(prot, x_q, params)
+    assert np.array_equal(y0, y1)
+
+
+def test_protect_needs_params_for_checksums(chain):
+    prog = compile_network(CHAIN, HW, HW, "fused")
+    with pytest.raises(ValueError, match="params"):
+        flt.protect_program(prog, None)
+
+
+def test_protected_counters_modeled_equals_executed(chain):
+    """check_bytes rides the CounterBank like every other CSR:
+    modeled == executed, including for the new checksum traffic."""
+    x_q, params = chain
+    prog = compile_network(CHAIN, HW, HW, "fused")
+    prot = flt.protect_program(prog, params, activation_checksums=True)
+    rep = analyze(prot, "v3")
+    _, stats = run_program(prot, x_q, params, return_stats=True)
+    assert stats.check_bytes > 0
+    assert stats.check_bytes == rep.check_bytes
+    diff = {k: v for k, v in
+            rep.counter_bank().diff(stats.counter_bank()).items()
+            if not k.endswith("_cycles")}
+    assert diff == {}
+
+
+# --- detection coverage (the CI-gated cell) ---------------------------------
+
+
+def test_single_bit_detection_is_total(chain):
+    x_q, params = chain
+    prog = compile_network(CHAIN, HW, HW, "fused")
+    cov = flt.detection_coverage(prog, params, x_q, n_faults=8, seed=0)
+    assert cov["weights_detected"] == cov["weights_faults"] == 8
+    assert cov["instr_detected"] == cov["instr_faults"] == 8
+
+
+def test_unprotected_taxonomy_never_detects(chain):
+    """Without parity/checksums nothing can raise FaultDetected; every
+    fault lands in masked/sdc/crashed (the baseline arm of the sweep)."""
+    x_q, params = chain
+    prog = compile_network(CHAIN, HW, HW, "fused")
+    res = flt.run_campaign(prog, params, x_q, spaces=("weights", "instr"),
+                           n_faults=6, seed=0, protect=False)
+    for cell in res["cells"].values():
+        assert cell[flt.DETECTED] == 0
+        assert sum(cell.values()) == 6
+    # a weight flip in a loaded tensor is real corruption: SDC dominates
+    assert res["cells"]["weights|x1"][flt.SDC] > 0
+
+
+def test_memory_fault_spaces_skip_or_classify(chain):
+    """Zero-size spaces are reported as skipped, never sampled; mapped
+    spaces classify every fault into the taxonomy."""
+    x_q, params = chain
+    for sched in SCHEDULES:
+        prog = compile_network(CHAIN, HW, HW, sched)
+        res = flt.run_campaign(prog, params, x_q,
+                               spaces=("sram", "dram"), n_faults=3,
+                               seed=0, protect=True)
+        layout = prog.meta["layout"]
+        for space, size in (("sram", layout.sram_size),
+                            ("dram", layout.dram_size)):
+            if size == 0:
+                assert space in res["skipped_spaces"]
+                assert f"{space}|x1" not in res["cells"]
+            else:
+                cell = res["cells"][f"{space}|x1"]
+                assert sum(cell.values()) == 3
+                assert all(k in flt.OUTCOMES for k in cell)
+
+
+def test_injector_rejects_unknown_and_empty_spaces(chain):
+    x_q, params = chain
+    prog = compile_network(CHAIN, HW, HW, "fused")
+    words = isa.encode_program(prog)
+    inj = flt.FaultInjector(words, prog.meta, params, seed=0)
+    with pytest.raises(ValueError, match="fault space"):
+        inj.sample("cache")
+    if not inj.targetable("sram"):     # fused maps no SRAM scratch
+        with pytest.raises(ValueError, match="zero-size"):
+            inj.sample("sram")
+
+
+# --- hypothesis: no silent pass ---------------------------------------------
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(deadline=None, max_examples=10)
+    @given(seed=st.integers(0, 2**31 - 1),
+           space=st.sampled_from(["weights", "instr"]))
+    def test_protected_single_flip_always_detected(protected, seed, space):
+        """The tentpole property: with parity + weight checksums armed, a
+        single injected bit flip in weights or instruction words is
+        ALWAYS detected — no SDC, no masked corruption, no crash."""
+        words, meta, params, x_q, golden = protected
+        inj = flt.FaultInjector(words, meta, params, seed=seed)
+        fault = inj.sample(space)
+        outcome = flt.classify_fault(words, meta, params, x_q, golden,
+                                     [fault])
+        assert outcome == flt.DETECTED, (fault, outcome)
+
+    @settings(deadline=None, max_examples=8)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_unprotected_weight_flip_no_silent_pass(chain, seed):
+        """Without protection a weight flip either provably changes the
+        logits (SDC) or provably does not (masked) — the classification
+        is anchored to a bit-exact golden comparison either way."""
+        x_q, params = chain
+        prog = compile_network(CHAIN, HW, HW, "fused")
+        words = isa.encode_program(prog)
+        golden = run_words(words, x_q, params, prog.meta)
+        inj = flt.FaultInjector(words, prog.meta, params, seed=seed)
+        fault = inj.sample("weights")
+        y = flt.run_faulted(words, prog.meta, params, x_q, [fault])
+        outcome = flt.classify_fault(words, prog.meta, params, x_q,
+                                     golden, [fault])
+        if outcome == flt.MASKED:
+            assert np.array_equal(y, golden)
+        else:
+            assert outcome == flt.SDC and not np.array_equal(y, golden)
+
+
+# --- failover: dropout mid-run, bit-exact replay ----------------------------
+
+
+def _recompile(n_streams):
+    if n_streams > 1:
+        return compile_network(CHAIN, HW, HW, "fused", streams=n_streams)
+    return compile_network(CHAIN, HW, HW, "fused")
+
+
+@pytest.mark.parametrize("drop_after_round", [0, 1, 2, 3, 99])
+def test_dropout_replay_bit_exact(drop_after_round, chain):
+    x_q, params = chain
+    rng = np.random.default_rng(7)
+    xb = rng.integers(-128, 128, (7, HW, HW, CHAIN[0][1].cin),
+                      dtype=np.int64).astype(np.int8)
+    ms = compile_network(CHAIN, HW, HW, "fused", streams=2)
+    base = run_multistream(ms, xb, params, batch=2)
+    y, rep = flt.run_with_dropout(ms, _recompile, xb, params, batch=2,
+                                  drop_after_round=drop_after_round)
+    assert np.array_equal(y, base)
+    assert rep.n_cores == 2 and rep.survivors == 1
+    assert rep.drained_frames + rep.replayed_frames == 7
+    if drop_after_round >= 99:         # pipeline fully drained: no replay
+        assert rep.replayed_frames == 0
+
+
+def test_dropout_needs_a_pipeline(chain):
+    x_q, params = chain
+    prog = compile_network(CHAIN, HW, HW, "fused")
+    with pytest.raises(ValueError, match="multi-core"):
+        flt.run_with_dropout(prog, _recompile, x_q, params,
+                             drop_after_round=1)
+
+
+# --- serving-level dropout + reliability-edge fixes -------------------------
+
+IMG_HW = 16
+FREQ = 300e6
+
+
+def test_serving_dropout_conserves_and_is_deterministic():
+    svc = build_vww_service(IMG_HW, streams=2, pe=PEConfig(4, 4, 21),
+                            pe_per_core="auto-hetero", freq_hz=FREQ,
+                            max_batch=16)
+    degraded = build_vww_service(IMG_HW, streams=1, pe=PEConfig(4, 4, 21),
+                                 freq_hz=FREQ, max_batch=16)
+    arr = arrivals.poisson(300.0, 48, freq_hz=FREQ, seed=0)
+
+    def run(dropout):
+        pol = make_policy("timeout", service=svc, slo_cycles=0.030 * FREQ,
+                          timeout_cycles=0.002 * FREQ)
+        return ServingSimulator(svc, pol, arr, dropout=dropout).run()
+
+    # drop strictly inside a mid-run batch's flight window so the
+    # pipeline provably has work to void (pre-drop history is identical)
+    r0 = run(None)
+    disp = [e for e in r0.event_log if e[0] == "dispatch"]
+    comp = {e[2]: e[1] for e in r0.event_log if e[0] == "complete"}
+    d = disp[len(disp) // 2]
+    drop = DropoutEvent(at_cycles=(d[1] + comp[d[2]]) / 2.0,
+                        degraded=degraded, core=1,
+                        repartition_cycles=1e5)
+    r1, r2 = run(drop), run(drop)
+    assert r1.event_log == r2.event_log          # determinism
+    s = r1.summary
+    assert s["n_served"] == s["n_arrivals"] == 48 and s["drained"]
+    assert s["dropouts"][0]["core"] == 1
+    assert s["n_replayed"] >= 1                  # something was in flight
+    assert s["device_degraded"]["n_stages"] == 1
+    assert any(e[0] == "dropout" for e in r1.event_log)
+    # losing a core only ever costs latency
+    assert s["latency_p99_cycles"] >= r0.summary["latency_p99_cycles"]
+    assert "dropouts" not in r0.summary          # keys absent if no event
+
+
+def test_trace_arrivals_short_raises(tmp_path):
+    p = tmp_path / "trace.json"
+    p.write_text(json.dumps([0.0, 0.01, 0.02, 0.05]))
+    with pytest.raises(ValueError, match="4 arrivals but 10"):
+        arrivals.trace(str(p), n=10)
+    assert arrivals.trace(str(p), n=4).size == 4
+
+
+def test_trace_rescale_to_rate_exact(tmp_path):
+    p = tmp_path / "trace.json"
+    ts = [0.0, 0.013, 0.02, 0.041, 0.09, 0.1]
+    p.write_text(json.dumps({"arrivals_s": ts}))
+    plain = arrivals.trace(str(p), freq_hz=FREQ)
+    assert np.allclose(plain, np.asarray(ts) * FREQ)
+    got = arrivals.make_arrivals("trace", 20.0, len(ts), freq_hz=FREQ,
+                                 trace_path=str(p), rescale_to_rate=True)
+    measured = (got.size - 1) / ((got[-1] - got[0]) / FREQ)
+    assert measured == pytest.approx(20.0)
+    # without the opt-in, rate_qps is ignored: recorded timeline replays
+    assert np.array_equal(
+        arrivals.make_arrivals("trace", 20.0, len(ts), freq_hz=FREQ,
+                               trace_path=str(p)), plain)
+
+
+def test_unmeetable_slo_surfaces():
+    svc = build_vww_service(IMG_HW, streams=1, pe=PEConfig(4, 4, 21),
+                            freq_hz=FREQ, max_batch=8)
+    need = svc.group_latency_cycles(1)
+    assert svc.slo_feasible(need) and not svc.slo_feasible(need - 1)
+    with pytest.raises(ValueError, match="infeasible"):
+        svc.best_batch_under_slo(need - 1)
+    assert svc.best_batch_under_slo(need) == 1
+    assert svc.best_batch_under_slo(need * 1e3) >= 1

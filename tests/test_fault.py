@@ -24,6 +24,20 @@ def test_watchdog_flags_stragglers():
     assert w.ewma == pytest.approx(0.1, rel=0.05)
 
 
+def test_watchdog_warmup_outlier_does_not_poison_ewma():
+    """A hiccup DURING warmup is silenced (no flag) but must also stay
+    out of the EWMA — the old code folded it in, permanently raising the
+    bar so a genuine straggler right after warmup went undetected."""
+    w = Watchdog(alpha=0.5, threshold=3.0, warmup=3)
+    dts = [0.1, 1.0, 0.1, 0.1, 0.5]       # injected delay at step 1
+    flags = [w.observe(i, dt) for i, dt in enumerate(dts)]
+    # step 1 is inside warmup: not flagged, and NOT averaged in —
+    # so the 0.5 s step 4 (5x baseline) is still caught
+    assert flags == [False, False, False, False, True]
+    assert len(w.stragglers) == 1 and w.stragglers[0]["step"] == 4
+    assert w.ewma == pytest.approx(0.1, rel=0.05)
+
+
 def test_injector_fires_once():
     inj = FailureInjector([3])
     inj.check(2)
