@@ -2,6 +2,7 @@
 
     python -m benchmarks.check_regression                    # compare
     python -m benchmarks.check_regression --update-baseline  # re-pin
+    python -m benchmarks.check_regression --history doctor   # trends
 
 Collects the repo's load-bearing performance fingerprints into ONE flat
 payload — the paper's block-3 v1/v2/v3 speedup progression (27.4x /
@@ -12,7 +13,11 @@ one fixed-rate seeded simulation, and the fused-winograd gate point
 (block 3 @ 40x40 under a depthwise-starved engine split, where the
 exact-integer F(2x2,3x3) schedule must shrink the modeled dw MAC stage
 >= 2x vs fused-rowtile, beat its total, and be the auto pick — checked
-on the fresh numbers before any baseline comparison) — writes it to
+on the fresh numbers before any baseline comparison), plus the perf
+doctor's attribution fingerprints at its three reference points (bound
+labels, what-if picks, and cycle-conservation flags — the conservation
+contract is gated baseline-independently: category sums must equal the
+model total bit-exactly on the fresh numbers) — writes it to
 ``results/perf_baseline.json``, and compares it against the committed
 ``benchmarks/perf_baseline.json``:
 
@@ -46,6 +51,7 @@ import sys
 BASELINE_PATH = os.path.join(os.path.dirname(__file__),
                              "perf_baseline.json")
 RESULTS_PATH = os.path.join("results", "perf_baseline.json")
+HISTORY_PATH = os.path.join("results", "history.jsonl")
 
 CYCLE_TOL = 0.02       # relative, for cycles / QPS / latency keys
 WALLCLOCK_BAND = 10.0  # ratio band for the one wall-clock key (x-factor)
@@ -228,9 +234,48 @@ def collect() -> dict:
                  "check_bytes": pstats.check_bytes,
                  "failover_exact": int(np.array_equal(fo_y, fo_base))}
 
+    # 8) the perf doctor at its three bench_doctor reference points:
+    #    top-bound labels and the top what-if pick exact (``_pick``),
+    #    conservation flags exact (``_exact``), attributed/saved cycle
+    #    values on the standard 2% band
+    from repro.cfu import doctor
+    from repro.cfu.ir import SCHEDULES
+
+    def _cons_exact(attr):
+        total = getattr(attr, "interval_cycles", None)
+        if total is None:
+            total = attr.total_cycles
+        return int(sum(attr.categories.values()) == total)
+
+    a_fused = doctor.attribute(
+        compile_block(spec3, hw3, hw3, "fused", name="3rd"), "v3")
+    p_dw = compile_block(spec3, hw3, hw3, "fused-rowtile", name="3rd",
+                         pe=wg_pe)
+    a_dw = doctor.attribute(p_dw, "v3")
+    r_dw = doctor.rank(
+        doctor.what_if(p_dw, "v3")
+        + doctor.what_if_schedules(spec3, hw3, hw3,
+                                   SCHEDULES["fused-rowtile"][0],
+                                   pipeline="v3", pe=wg_pe))
+    a_ms = doctor.attribute_multistream(ms, "v3", batch=4)
+    doctor_fp = {
+        "block3_fused_top_pick": a_fused.top,
+        "block3_fused_conservation_exact": _cons_exact(a_fused),
+        "block3_fused_dw_mac_cycles": a_fused.categories["dw_mac"],
+        "winograd_gate_top_pick": a_dw.top,
+        "winograd_gate_conservation_exact": _cons_exact(a_dw),
+        "winograd_gate_dw_mac_cycles": a_dw.categories["dw_mac"],
+        "winograd_gate_whatif_pick": r_dw[0].name,
+        "winograd_gate_whatif_saved_cycles": r_dw[0].cycles_saved,
+        "vww2core_top_pick": a_ms.top,
+        "vww2core_conservation_exact": _cons_exact(a_ms),
+        "vww2core_interval_cycles": a_ms.interval_cycles,
+        "vww2core_handoff_cycles": a_ms.categories["handoff_sync"],
+    }
+
     return {"block3": block3, "vww_fused": vww, "multicore": multicore,
             "serving": serving, "fastpath": fast, "winograd": winograd,
-            "faults": faults_fp}
+            "faults": faults_fp, "doctor": doctor_fp}
 
 
 def _leaves(d: dict, prefix=""):
@@ -274,6 +319,41 @@ def compare(baseline: dict, current: dict, tol: float = CYCLE_TOL):
     return rows
 
 
+def print_history(filt: str = "") -> int:
+    """Fingerprint trends from results/history.jsonl (newest last)."""
+    if not os.path.exists(HISTORY_PATH):
+        print(f"# no history at {HISTORY_PATH} — run "
+              f"'python -m benchmarks.run' first", file=sys.stderr)
+        return 1
+    entries = []
+    with open(HISTORY_PATH) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                try:
+                    entries.append(json.loads(line))
+                except json.JSONDecodeError:
+                    pass
+    print(f"# history: {HISTORY_PATH} ({len(entries)} bench run(s))")
+    print("timestamp_utc,git_sha,bench,status,metric,value")
+    n = 0
+    for e in entries:
+        base = [str(e.get(k, "?")) for k in
+                ("timestamp_utc", "git_sha", "bench", "status")]
+        metrics = e.get("metrics") or {}
+        if metrics:
+            for k, v in sorted(metrics.items()):
+                if filt and filt not in f"{base[2]}.{k}":
+                    continue
+                print(",".join(base + [k, str(v)]))
+                n += 1
+        elif not filt or filt in base[2]:
+            print(",".join(base + ["-", "-"]))
+            n += 1
+    print(f"# {n} row(s)" + (f" matching '{filt}'" if filt else ""))
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         description=__doc__.splitlines()[0],
@@ -287,7 +367,15 @@ def main(argv=None) -> int:
     ap.add_argument("--update-baseline", action="store_true",
                     help="overwrite the committed baseline with the "
                          "current measurements (deliberate re-pin)")
+    ap.add_argument("--history", nargs="?", const="", default=None,
+                    metavar="FILTER",
+                    help="print fingerprint trends from "
+                         "results/history.jsonl (optional substring "
+                         "filter on bench.metric) and exit")
     args = ap.parse_args(argv)
+
+    if args.history is not None:
+        return print_history(args.history)
 
     print("# collecting perf fingerprints (deterministic model runs)")
     current = collect()
@@ -326,6 +414,23 @@ def main(argv=None) -> int:
         bad.append("core-dropout replay is not bit-exact")
     if bad:
         print("# FAULT GATE: " + "; ".join(bad), file=sys.stderr)
+        return 1
+
+    # baseline-independent doctor gate: cycle conservation must be
+    # bit-exact and the winograd reference point must tell the
+    # dw-bound -> fused-winograd story on the freshly collected numbers
+    dg = current["doctor"]
+    bad = [f"{k} != 1" for k in sorted(dg)
+           if k.endswith("_conservation_exact") and dg[k] != 1]
+    if dg["winograd_gate_top_pick"] != "dw_mac":
+        bad.append(f"winograd point bound by "
+                   f"{dg['winograd_gate_top_pick']}, expected dw_mac")
+    if dg["winograd_gate_whatif_pick"] != "schedule=fused-winograd":
+        bad.append(f"winograd point top what-if is "
+                   f"{dg['winograd_gate_whatif_pick']}, expected "
+                   f"schedule=fused-winograd")
+    if bad:
+        print("# DOCTOR GATE: " + "; ".join(bad), file=sys.stderr)
         return 1
 
     if args.update_baseline:

@@ -12,18 +12,26 @@ consolidated ``results/index.json`` manifest — alongside an inventory of
 every artifact currently under ``results/`` — and the process exits
 non-zero if ANY bench failed, so CI reports the full picture instead of
 stopping at the first crash.
+
+Every run also appends one JSON line per bench to
+``results/history.jsonl`` — bench name, status, runtime, git sha, UTC
+timestamp, and the scalar key metrics from the bench's returned payload
+— so fingerprint drift is inspectable across commits
+(``python -m benchmarks.check_regression --history [FILTER]``).
 """
 
 import argparse
 import json
 import os
+import subprocess
 import sys
 import time
 import traceback
 
-from benchmarks import (bench_cfu, bench_energy, bench_fastpath,
-                        bench_faults, bench_ffn_fusion, bench_scaling,
-                        bench_serving, bench_speedup, bench_traffic)
+from benchmarks import (bench_cfu, bench_doctor, bench_energy,
+                        bench_fastpath, bench_faults, bench_ffn_fusion,
+                        bench_scaling, bench_serving, bench_speedup,
+                        bench_traffic)
 
 BENCHES = {
     "speedup": bench_speedup,        # Fig. 14 / Table III(A)
@@ -35,10 +43,59 @@ BENCHES = {
     "serving": bench_serving,        # request-level QPS-under-SLO frontier
     "fastpath": bench_fastpath,      # jitted executor: speedup + diff matrix
     "faults": bench_faults,          # fault campaign + failover p99 delta
+    "doctor": bench_doctor,          # cycle-bound attribution + what-ifs
 }
 
 RESULTS_DIR = "results"
 INDEX_PATH = os.path.join(RESULTS_DIR, "index.json")
+HISTORY_PATH = os.path.join(RESULTS_DIR, "history.jsonl")
+
+#: history.jsonl keeps at most this many flattened metrics per bench —
+#: enough for the headline numbers, not a second copy of the artifact.
+HISTORY_METRICS_CAP = 40
+
+
+def _git_sha() -> str:
+    try:
+        out = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                             capture_output=True, text=True, timeout=10)
+        return out.stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def _flat_metrics(payload, cap: int = HISTORY_METRICS_CAP) -> dict:
+    """Dotted-path scalars from a bench payload (depth-first, capped)."""
+    rows = {}
+
+    def walk(node, prefix):
+        if len(rows) >= cap:
+            return
+        if isinstance(node, dict):
+            for k in node:
+                walk(node[k], f"{prefix}.{k}" if prefix else str(k))
+        elif isinstance(node, bool):
+            rows.setdefault(prefix, int(node))
+        elif isinstance(node, (int, float)):
+            rows.setdefault(prefix, node)
+        elif isinstance(node, str) and len(node) <= 64:
+            rows.setdefault(prefix, node)
+
+    if isinstance(payload, dict):
+        walk(payload, "")
+    return dict(sorted(rows.items())[:cap])
+
+
+def _append_history(name: str, status: dict, payload) -> None:
+    entry = {"timestamp_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ",
+                                            time.gmtime()),
+             "git_sha": _git_sha(),
+             "bench": name,
+             **status,
+             "metrics": _flat_metrics(payload)}
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(HISTORY_PATH, "a") as f:
+        f.write(json.dumps(entry) + "\n")
 
 
 def _artifact_inventory() -> list:
@@ -61,8 +118,9 @@ def main():
     for name in todo:
         print(f"\n===== bench: {name} =====")
         t0 = time.time()
+        payload = None
         try:
-            BENCHES[name].run(print)
+            payload = BENCHES[name].run(print)
             statuses[name] = {"status": "ok",
                               "seconds": round(time.time() - t0, 1)}
             print(f"===== {name} done in {time.time() - t0:.1f}s =====")
@@ -73,6 +131,7 @@ def main():
                               "error": f"{type(e).__name__}: {e}"}
             print(f"===== {name} FAILED after {time.time() - t0:.1f}s "
                   f"=====")
+        _append_history(name, statuses[name], payload)
     os.makedirs(RESULTS_DIR, exist_ok=True)
     manifest = {"benches": statuses,
                 "requested": todo,
@@ -83,6 +142,7 @@ def main():
                     if s["status"] != "ok")
     print(f"\n# manifest -> {INDEX_PATH} "
           f"({len(manifest['artifacts'])} artifacts)")
+    print(f"# history  -> {HISTORY_PATH} (+{len(todo)} line(s))")
     if failed:
         print(f"# FAILED benches: {', '.join(failed)}", file=sys.stderr)
         sys.exit(1)

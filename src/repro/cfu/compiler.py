@@ -160,11 +160,18 @@ def estimate_block_cycles(spec, h: int, w: int, schedule: CFUSchedule,
     return analyze(prog, pipeline, pe=pe).total_cycles
 
 
-def auto_schedule(ir: IRProgram, *, pipeline: str = "v3",
-                  pe: Optional[PEConfig] = None,
-                  tile_rows: int = 4) -> Dict[str, CFUSchedule]:
-    """Cost-model schedule pick, independently per block."""
-    picks: Dict[str, CFUSchedule] = {}
+def auto_schedule_costs(ir: IRProgram, *, pipeline: str = "v3",
+                        pe: Optional[PEConfig] = None,
+                        tile_rows: int = 4
+                        ) -> Dict[str, Dict[CFUSchedule, float]]:
+    """The per-block per-schedule cost table the auto pass optimizes.
+
+    One row per DSC block, one candidate column per feasible schedule
+    (infeasible candidates — e.g. a strip deeper than CFG_STRIP encodes —
+    are simply absent), in ``CFUSchedule`` enum order. ``auto_schedule``
+    takes the row-wise argmin of exactly this table, so surfacing it is
+    the *why* of every auto pick (``doctor.explain_auto`` renders it)."""
+    table: Dict[str, Dict[CFUSchedule, float]] = {}
     for op in ir.dsc_blocks():
         costs: Dict[CFUSchedule, float] = {}
         for s in CFUSchedule:
@@ -174,8 +181,18 @@ def auto_schedule(ir: IRProgram, *, pipeline: str = "v3",
                     tile_rows=tile_rows)
             except ValueError:
                 continue   # infeasible candidate (e.g. strip > 255 rows)
-        picks[op.name] = min(costs, key=costs.get)
-    return picks
+        table[op.name] = costs
+    return table
+
+
+def auto_schedule(ir: IRProgram, *, pipeline: str = "v3",
+                  pe: Optional[PEConfig] = None,
+                  tile_rows: int = 4) -> Dict[str, CFUSchedule]:
+    """Cost-model schedule pick, independently per block (the row-wise
+    argmin of ``auto_schedule_costs``; first minimum in enum order wins)."""
+    table = auto_schedule_costs(ir, pipeline=pipeline, pe=pe,
+                                tile_rows=tile_rows)
+    return {name: min(costs, key=costs.get) for name, costs in table.items()}
 
 
 def assign_schedules(ir: IRProgram, schedule: ScheduleSpec, *,

@@ -41,7 +41,7 @@ from repro.cfu.serve.arrivals import ARRIVALS, make_arrivals
 from repro.cfu.serve.check import DifferentialSpotCheck
 from repro.cfu.serve.dispatcher import ServingSimulator, SimResult
 from repro.cfu.serve.events import Event, EventQueue
-from repro.cfu.serve.metrics import MetricsCollector
+from repro.cfu.serve.metrics import LATENCY_COMPONENTS, MetricsCollector
 from repro.cfu.serve.planner import max_sustainable_qps, plan_capacity
 from repro.cfu.serve.policies import (POLICIES, AdaptivePolicy,
                                       ImmediatePolicy, Policy,
@@ -51,7 +51,8 @@ from repro.cfu.serve.service import ServiceModel
 __all__ = [
     "ARRIVALS", "make_arrivals", "DifferentialSpotCheck",
     "ServingSimulator", "SimResult", "Event", "EventQueue",
-    "MetricsCollector", "max_sustainable_qps", "plan_capacity",
+    "LATENCY_COMPONENTS", "MetricsCollector",
+    "max_sustainable_qps", "plan_capacity",
     "POLICIES", "AdaptivePolicy", "ImmediatePolicy", "Policy",
     "TimeoutPolicy", "make_policy", "ServiceModel",
 ]

@@ -93,6 +93,7 @@ class ServingSimulator:
                  spot_check: Optional[DifferentialSpotCheck] = None,
                  max_events: Optional[int] = None,
                  tracer=None, slo_cycles: Optional[float] = None,
+                 slo_target: float = 0.99,
                  dropout: Optional[DropoutEvent] = None):
         self.service = service
         self.dropout = dropout
@@ -105,6 +106,7 @@ class ServingSimulator:
         self.spot_check = spot_check
         self.tracer = tracer           # observes only; None = no tracing
         self.slo_cycles = slo_cycles   # SLO-violation instants + summary
+        self.slo_target = slo_target   # availability target for burn rates
         # every request needs an arrival, a dispatch consult, a share of
         # one completion, and possibly a poll: 8x + slack is generous,
         # and hitting it means a policy is livelocking — fail loudly.
@@ -117,7 +119,8 @@ class ServingSimulator:
         metrics = MetricsCollector(n_cores=self.service.n_stages,
                                    freq_hz=self.service.freq_hz,
                                    tracer=self.tracer,
-                                   slo_cycles=self.slo_cycles)
+                                   slo_cycles=self.slo_cycles,
+                                   slo_target=self.slo_target)
         log: List[LogEntry] = []
         service = self.service    # swapped for the degraded twin on dropout
         next_entry = 0.0          # earliest cycle the device can accept
@@ -155,6 +158,7 @@ class ServingSimulator:
                 rids = [queue.popleft() for _ in range(n)]
                 bid = next_bid
                 next_bid += 1
+                free_t = next_entry   # when the front door last freed up
                 interval = service.entry_interval_cycles(n)
                 latency = service.group_latency_cycles(n)
                 next_entry = now + interval
@@ -166,7 +170,8 @@ class ServingSimulator:
                     bid=bid, rids=rids, t_entry=now, t_complete=t_done,
                     energy_pj=service.energy_pj(n),
                     busy_cycles=service.core_busy_cycles(n),
-                    depth=len(queue))
+                    depth=len(queue),
+                    free_t=free_t, entry_interval=interval)
                 log.append(("dispatch", now, bid, n, tuple(rids)))
                 if self.spot_check is not None and \
                         self.spot_check.wants(bid):

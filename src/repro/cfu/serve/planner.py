@@ -85,7 +85,7 @@ def simulate(service: ServiceModel, policy_name: str, rate_qps: float,
              timeout_cycles: Optional[float] = None,
              spot_check=None, tracer=None,
              rescale_to_rate: bool = False,
-             dropout=None):
+             dropout=None, slo_target: float = 0.99):
     """One seeded simulation at a fixed rate (the planner's probe).
 
     ``tracer`` (a ``repro.cfu.trace.Tracer``) records the request-level
@@ -106,7 +106,8 @@ def simulate(service: ServiceModel, policy_name: str, rate_qps: float,
                              rescale_to_rate=rescale_to_rate)
     sim = ServingSimulator(service, policy, arrivals,
                            spot_check=spot_check, tracer=tracer,
-                           slo_cycles=slo_cycles, dropout=dropout)
+                           slo_cycles=slo_cycles, slo_target=slo_target,
+                           dropout=dropout)
     res = sim.run()
     res.summary["rate_qps"] = rate_qps
     res.summary["arrival_kind"] = arrival_kind

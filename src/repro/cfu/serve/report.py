@@ -56,6 +56,32 @@ def summary_lines(s: Dict[str, object]) -> List[str]:
     return out
 
 
+def doctor_lines(s: Dict[str, object]) -> List[str]:
+    """Perf-doctor view of one run: where each served request's latency
+    went (``metrics.LATENCY_COMPONENTS``, summed bit-exactly per request)
+    and how fast the SLO error budget is burning."""
+    out: List[str] = []
+    bd = s.get("latency_breakdown_ms")
+    if bd:
+        out.append("# latency decomposition (mean ms per served request; "
+                   "per-request components sum to latency bit-exactly)")
+        out.append("component,mean_ms,share")
+        total = sum(bd.values())
+        for k, v in bd.items():
+            share = v / total if total else 0.0
+            out.append(f"{k},{_fmt(v, '.4g')},{share:.1%}")
+    burn = s.get("slo_burn")
+    if burn:
+        out.append(
+            f"# SLO burn: target {burn['slo_target']:.1%} (budget "
+            f"{1.0 - burn['slo_target']:.1%}), violations "
+            f"{burn['violation_fraction']:.2%} -> burn rate "
+            f"{burn['burn_rate']:.2f}x overall, worst window "
+            f"{burn['burn_rate_max_windowed']:.2f}x "
+            f"(of {burn['n_windows']}); >1x exhausts the budget")
+    return out
+
+
 def frontier_table(plan: Dict[str, object]) -> List[str]:
     """Planner cells -> CSV-ish frontier table (the bench's output)."""
     out = ["device,policy,max_qps,ceiling_qps,p99_ms_at_max,"

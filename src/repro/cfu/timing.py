@@ -170,6 +170,12 @@ HANDOFF_SYNC_CYCLES = 64.0
 PIPELINES = ("v1", "v2", "v3")
 _FILL_ITERS = {"v1": 0, "v2": 2, "v3": 4}
 
+# Canonical substage order — deterministic tie-breaks when the doctor asks
+# which stage BINDS an iteration (first maximum in this order wins).
+STAGE_ORDER = ("ex_mac", "ex_q", "dw_mac", "dw_q", "pr_mac", "gap")
+_STAGE_GROUPS = {"ex_mac": "ex", "ex_q": "ex", "dw_mac": "dw",
+                 "dw_q": "dw", "pr_mac": "pr", "gap": "gap"}
+
 GAP_LANES = 8.0           # vector adder lanes of the pooling accumulator
 
 
@@ -225,6 +231,14 @@ class PhaseStats:
     sram_rd_bytes: int = 0
     sram_wr_bytes: int = 0
     weight_bytes: int = 0               # share of dram_rd that is weights
+    # Per-frame iteration-body cycles attributed to the stage that BINDS
+    # the pipeline each iteration (v1: every stage its own cost, the body
+    # is their sum; v2: the substages of the binding group; v3: the single
+    # binding substage). Sums to compute_cycles minus the per-iteration
+    # C_PX_FIXED overhead (up to float rounding); the bottleneck doctor's
+    # raw material — never feeds back into any report total.
+    bound_stage_cycles: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -285,7 +299,8 @@ class TimingReport:
 
 class _Walker:
     def __init__(self, pipeline: str, pe: Optional[PEConfig] = None,
-                 sram_port_bytes: Optional[int] = None):
+                 sram_port_bytes: Optional[int] = None,
+                 dram_cycles_per_byte: Optional[float] = None):
         if pipeline not in PIPELINES:
             raise ValueError(f"pipeline must be one of {PIPELINES}")
         self.pipeline = pipeline
@@ -295,6 +310,15 @@ class _Walker:
         if w < 1:
             raise ValueError(f"sram_port_bytes must be >= 1, got {w}")
         self.cyc_per_sram_byte = 1.0 / w
+        # off-chip port cost: the paper's measured CPU-mediated constant by
+        # default (byte-identical golden numbers); the doctor's what-if
+        # layer re-prices with a faster port without recompiling
+        d = (CYC_PER_DRAM_BYTE if dram_cycles_per_byte is None
+             else float(dram_cycles_per_byte))
+        if d <= 0:
+            raise ValueError(
+                f"dram_cycles_per_byte must be > 0, got {d}")
+        self.cyc_per_dram_byte = d
         # the stream may override via CFG_PE unless the caller pinned it
         # CFG / base state
         self.cin = self.cmid = self.cout = 0
@@ -354,7 +378,7 @@ class _Walker:
             self.bytes_rd[space] += new
             self.cur.transfer_cycles += new * self._cyc_per_byte(space)
             if space == isa.SPACE_DRAM:
-                self.cur.dram_transfer_cycles += new * CYC_PER_DRAM_BYTE
+                self.cur.dram_transfer_cycles += new * self.cyc_per_dram_byte
                 self.cur.dram_rd_bytes += new
             else:
                 self.cur.sram_rd_bytes += new
@@ -364,7 +388,7 @@ class _Walker:
         self.bytes_wr[space] += n
         self.cur.transfer_cycles += n * self._cyc_per_byte(space)
         if space == isa.SPACE_DRAM:
-            self.cur.dram_transfer_cycles += n * CYC_PER_DRAM_BYTE
+            self.cur.dram_transfer_cycles += n * self.cyc_per_dram_byte
             self.cur.dram_wr_bytes += n
         else:
             self.cur.sram_wr_bytes += n
@@ -374,10 +398,38 @@ class _Walker:
         self.macs_by_engine[engine] = self.macs_by_engine.get(engine, 0) + n
 
     def _cyc_per_byte(self, space: int) -> float:
-        return (CYC_PER_DRAM_BYTE if space == isa.SPACE_DRAM
+        return (self.cyc_per_dram_byte if space == isa.SPACE_DRAM
                 else self.cyc_per_sram_byte)
 
     # --- cycle helpers ------------------------------------------------------
+
+    def _bind_iter(self, st: Dict[str, float], n_groups: int,
+                   body: float) -> None:
+        """Attribute this iteration's body to the stage(s) that bind it.
+
+        v1 / single-group: the body is the sequential sum, every stage owns
+        its own cost. v2: the substages of the binding GROUP (their sum is
+        the body). v3: the single binding substage owns the whole body.
+        Ties break on the canonical ``STAGE_ORDER`` so the attribution is
+        deterministic; accumulates into the phase's ``bound_stage_cycles``.
+        """
+        bound = self.cur.bound_stage_cycles
+        if n_groups < 2 or self.pipeline == "v1":
+            for k, v in st.items():
+                bound[k] = bound.get(k, 0.0) + v
+            return
+        if self.pipeline == "v2":
+            gsum = {"ex": st.get("ex_mac", 0.0) + st.get("ex_q", 0.0),
+                    "dw": st.get("dw_mac", 0.0) + st.get("dw_q", 0.0),
+                    "pr": st.get("pr_mac", 0.0),
+                    "gap": st.get("gap", 0.0)}
+            win = max(("ex", "dw", "pr", "gap"), key=lambda g: gsum[g])
+            for k in STAGE_ORDER:
+                if k in st and _STAGE_GROUPS[k] == win:
+                    bound[k] = bound.get(k, 0.0) + st[k]
+            return
+        win = max((k for k in STAGE_ORDER if k in st), key=lambda k: st[k])
+        bound[win] = bound.get(win, 0.0) + body
 
     def _end_iter(self):
         if not self.iter_stages:
@@ -385,9 +437,7 @@ class _Walker:
         st = self.iter_stages
         for k, v in st.items():
             self.stage_cycles[k] = self.stage_cycles.get(k, 0.0) + v
-        groups = {"ex_mac": "ex", "ex_q": "ex", "dw_mac": "dw",
-                  "dw_q": "dw", "pr_mac": "pr", "gap": "gap"}
-        n_groups = len({groups[k] for k in st})
+        n_groups = len({_STAGE_GROUPS[k] for k in st})
         # Pipelining (v2/v3) is a property of the FUSED pipeline, where one
         # iteration spans all three engines. Layer-by-layer iterations
         # occupy a single engine group, so their cost is the sequential sum
@@ -401,6 +451,7 @@ class _Walker:
                        st.get("gap", 0.0))
         else:
             body = max(st.values())
+        self._bind_iter(st, n_groups, body)
         cyc = body + C_PX_FIXED
         self.cur.compute_cycles += cyc
         self.cur.n_iters += 1
@@ -613,8 +664,10 @@ class BatchCostModel:
     def __init__(self, program: Program, pipeline: str = "v3",
                  pe: Optional[PEConfig] = None,
                  sram_port_bytes: Optional[int] = None,
-                 handoff_sync_cycles: Optional[float] = None):
-        w = _Walker(pipeline, pe=pe, sram_port_bytes=sram_port_bytes)
+                 handoff_sync_cycles: Optional[float] = None,
+                 dram_cycles_per_byte: Optional[float] = None):
+        w = _Walker(pipeline, pe=pe, sram_port_bytes=sram_port_bytes,
+                    dram_cycles_per_byte=dram_cycles_per_byte)
         w.walk(program)
         self._w = w
         self._layout = program.meta["layout"]
@@ -622,6 +675,17 @@ class BatchCostModel:
         self.handoff_sync_cycles = (HANDOFF_SYNC_CYCLES
                                     if handoff_sync_cycles is None
                                     else float(handoff_sync_cycles))
+
+    @property
+    def phases(self) -> List[PhaseStats]:
+        """The walked per-frame phases (read-only view for the doctor)."""
+        return self._w.phases
+
+    @property
+    def pe(self) -> PEConfig:
+        """Engine counts the walk actually priced (stream CFG_PE or the
+        constructor override)."""
+        return self._w.pe
 
     @staticmethod
     def _phase_cycles(p: PhaseStats, b: float) -> float:
@@ -742,13 +806,27 @@ class MultiStreamCostModel:
     to ``analyze_multistream(ms, ..., batch=B)``)."""
 
     def __init__(self, ms, pipeline: str = "v3",
-                 pe: Optional[PEConfig] = None,
+                 pe=None,
                  sram_port_bytes: Optional[int] = None,
-                 handoff_sync_cycles: Optional[float] = None):
-        self.models = [BatchCostModel(p, pipeline, pe=pe,
+                 handoff_sync_cycles: Optional[float] = None,
+                 dram_cycles_per_byte: Optional[float] = None):
+        # ``pe`` overrides every core at once (one PEConfig) or per core
+        # (a sequence of one PEConfig-or-None per stream) — the doctor's
+        # what-if layer perturbs ONE core of a heterogeneous pipeline
+        # without flattening the others.
+        if pe is None or isinstance(pe, PEConfig):
+            pes: List[Optional[PEConfig]] = [pe] * len(ms.streams)
+        else:
+            pes = list(pe)
+            if len(pes) != len(ms.streams):
+                raise ValueError(
+                    f"per-core pe list has {len(pes)} entries for "
+                    f"{len(ms.streams)} streams")
+        self.models = [BatchCostModel(p, pipeline, pe=pe_i,
                                       sram_port_bytes=sram_port_bytes,
-                                      handoff_sync_cycles=handoff_sync_cycles)
-                       for p in ms.streams]
+                                      handoff_sync_cycles=handoff_sync_cycles,
+                                      dram_cycles_per_byte=dram_cycles_per_byte)
+                       for p, pe_i in zip(ms.streams, pes)]
         self.pipeline = pipeline
 
     @property
@@ -861,6 +939,7 @@ def analyze_multistream(ms, pipeline: str = "v3",
                         batch: int = 1,
                         sram_port_bytes: Optional[int] = None,
                         handoff_sync_cycles: Optional[float] = None,
+                        dram_cycles_per_byte: Optional[float] = None,
                         ) -> MultiStreamReport:
     """Walk every stream of a ``compiler.MultiStreamProgram``.
 
@@ -868,7 +947,9 @@ def analyze_multistream(ms, pipeline: str = "v3",
     ride in the streams); ``pe=`` overrides all of them at once. ``batch``
     is the per-round frame-group size of the batched frame pipeline
     (see ``analyze``): totals are per round, i.e. per ``batch`` frames.
-    ``sram_port_bytes`` widens every core's scratch port (see ``analyze``).
+    ``sram_port_bytes`` widens every core's scratch port and
+    ``dram_cycles_per_byte`` re-prices the shared off-chip port (see
+    ``analyze``).
 
     Energy: the dynamic terms (MAC/DRAM/SRAM) sum over the streams, but
     the static term is re-priced for the steady state the report models —
@@ -884,14 +965,16 @@ def analyze_multistream(ms, pipeline: str = "v3",
     """
     return MultiStreamCostModel(ms, pipeline, pe=pe,
                                 sram_port_bytes=sram_port_bytes,
-                                handoff_sync_cycles=handoff_sync_cycles
+                                handoff_sync_cycles=handoff_sync_cycles,
+                                dram_cycles_per_byte=dram_cycles_per_byte
                                 ).report(batch)
 
 
 def analyze(program: Program, pipeline: str = "v3",
             pe: Optional[PEConfig] = None, batch: int = 1,
             sram_port_bytes: Optional[int] = None,
-            handoff_sync_cycles: Optional[float] = None) -> TimingReport:
+            handoff_sync_cycles: Optional[float] = None,
+            dram_cycles_per_byte: Optional[float] = None) -> TimingReport:
     """Walk one compiled program and report cycles/traffic/energy.
 
     ``pe`` overrides the stream's CFG_PE engine counts (what-if analysis
@@ -910,11 +993,17 @@ def analyze(program: Program, pipeline: str = "v3",
     share of each phase's transfer takes, so a wider port only helps
     where a phase is scratch-bound.
 
+    ``dram_cycles_per_byte`` re-prices the off-chip port (default
+    ``CYC_PER_DRAM_BYTE`` = 45.6, the paper's measured CPU-mediated
+    cost — again byte-identical golden numbers). The doctor's what-if
+    layer passes ``CYC_PER_DRAM_BYTE / 2`` to ask what a 2x port buys.
+
     Repeated what-if pricing of the SAME program at many batch sizes
     should build a :class:`BatchCostModel` once instead (one walk, any
     batch) — this function re-walks per call.
     """
     return BatchCostModel(program, pipeline, pe=pe,
                           sram_port_bytes=sram_port_bytes,
-                          handoff_sync_cycles=handoff_sync_cycles
+                          handoff_sync_cycles=handoff_sync_cycles,
+                          dram_cycles_per_byte=dram_cycles_per_byte
                           ).report(batch)

@@ -196,6 +196,30 @@ def _emit_model_trace(tracer, prog, args, batch: int):
                        ).emit_trace(tracer, batch, pid=100)
 
 
+def _doctor_report(prog, args):
+    """``--doctor``: cycle-bound attribution + ranked what-ifs for the
+    compiled stream, priced by the same model as the timing row above
+    (``python -m repro.launch.doctor`` is the standalone, deeper view)."""
+    from repro.cfu import doctor
+    hsc = args.handoff_sync_cycles
+    if isinstance(prog, MultiStreamProgram):
+        attr = doctor.attribute_multistream(
+            prog, args.pipeline, batch=args.batch,
+            handoff_sync_cycles=hsc)
+        rows = doctor.what_if_multistream(
+            prog, args.pipeline, batch=args.batch,
+            handoff_sync_cycles=hsc)
+    else:
+        attr = doctor.attribute(prog, args.pipeline,
+                                handoff_sync_cycles=hsc)
+        rows = doctor.what_if(prog, args.pipeline,
+                              handoff_sync_cycles=hsc)
+    print("\n".join(doctor.attribution_lines(attr)))
+    print("\n".join(doctor.what_if_lines(rows)))
+    return {"attribution": attr.to_json(),
+            "what_ifs": [r.to_json() for r in rows]}
+
+
 def _report_of(prog, args):
     """Timing for either a single stream or a multi-stream compile."""
     if isinstance(prog, MultiStreamProgram):
@@ -319,6 +343,9 @@ def _run_vww(args, key, pe: PEConfig, schedules, tracer=None):
               f"{sw_cycles / cycles:.1f},{dram},{sram},{sbuf},"
               f"{rep.energy_pj['total'] / 1e6:.2f},{v1},{vn},{exec_s:.2f}")
         results["schedules"][label] = _asdict(rep, prog)
+        if args.doctor:
+            results["schedules"][label]["doctor"] = \
+                _doctor_report(prog, args)
     return results
 
 
@@ -388,6 +415,9 @@ def _run_chain(args, key, pe: PEConfig, schedules, tracer=None):
               f"{sw_cycles / cycles:.1f},{dram},{sram},{sbuf},"
               f"{rep.energy_pj['total'] / 1e6:.2f},{verified},{exec_s:.2f}")
         results["schedules"][sched] = _asdict(rep, prog)
+        if args.doctor:
+            results["schedules"][sched]["doctor"] = \
+                _doctor_report(prog, args)
     return results
 
 
@@ -444,6 +474,12 @@ def main(argv=None):
                     help="seeded single-bit fault-injection demo in this "
                          "space (8 flips; prints the outcome taxonomy; "
                          "needs verification on and --streams 1)")
+    ap.add_argument("--doctor", action="store_true",
+                    help="print the perf-doctor view per schedule: cycle-"
+                         "bound attribution (categories sum to the modeled "
+                         "total bit-exactly) and the ranked what-if table; "
+                         "`python -m repro.launch.doctor` is the "
+                         "standalone, deeper version")
     ap.add_argument("--asm", default=None,
                     help="dump the text assembly of the stream to this path")
     ap.add_argument("--json", default=None,

@@ -48,8 +48,8 @@ from repro.cfu.serve.check import DifferentialSpotCheck
 from repro.cfu.serve.planner import (DEFAULT_SLO_MS, build_vww_service,
                                      plan_capacity, simulate)
 from repro.cfu.serve.policies import POLICIES
-from repro.cfu.serve.report import (curve_table, frontier_table,
-                                    summary_lines)
+from repro.cfu.serve.report import (curve_table, doctor_lines,
+                                    frontier_table, summary_lines)
 from repro.configs.vww import VWW
 
 
@@ -119,6 +119,16 @@ def main(argv=None):
                     help="number of requests to simulate")
     ap.add_argument("--slo-ms", type=float, default=DEFAULT_SLO_MS,
                     help="latency SLO (drives adaptive policy + --plan)")
+    ap.add_argument("--slo-target", type=float, default=0.99,
+                    help="availability target behind the SLO: the burn "
+                         "rate divides the violation fraction by the "
+                         "error budget 1-target")
+    ap.add_argument("--doctor", action="store_true",
+                    help="print the serving perf-doctor view: per-request "
+                         "latency decomposition (queue wait / batch "
+                         "formation / dropout replay / service / pipeline "
+                         "fill; bit-exact per request) and SLO burn "
+                         "rates; simulate mode only")
     ap.add_argument("--freq-mhz", type=float, default=300.0,
                     help="CFU clock (the paper's 300 MHz)")
     ap.add_argument("--img-hw", type=int, default=24,
@@ -237,6 +247,7 @@ def main(argv=None):
                        arrival_kind=args.arrivals,
                        trace_path=args.arrival_trace,
                        slo_cycles=slo_cycles,
+                       slo_target=args.slo_target,
                        batch_cap=args.batch_cap,
                        timeout_cycles=args.timeout_ms * 1e-3 * freq_hz,
                        spot_check=spot, tracer=tracer, dropout=dropout)
@@ -245,6 +256,8 @@ def main(argv=None):
             print(f"# trace ({len(tracer.events)} events) -> {args.trace}"
                   f" (open at https://ui.perfetto.dev)")
         print("\n".join(summary_lines(res.summary)))
+        if args.doctor:
+            print("\n".join(doctor_lines(res.summary)))
         if dropout is not None:
             # the failover price: same seed, same arrivals, no dropout
             base = simulate(service, args.policy, args.rate,

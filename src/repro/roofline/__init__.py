@@ -1,3 +1,5 @@
 from repro.roofline.analysis import (  # noqa: F401
     HW_V5E, CollectiveStats, RooflineReport, collective_stats,
     roofline_from_compiled, summarize)
+from repro.roofline.points import (  # noqa: F401
+    RooflinePoint, points_json, points_table)

@@ -1,0 +1,372 @@
+"""Perf doctor: conservation, what-if exactness, serving decomposition.
+
+The doctor's contracts, as tests:
+
+* **conservation** — the attribution categories are exactly
+  ``doctor.CATEGORIES`` (exhaustive, fixed order), every value is
+  non-negative, and their left-to-right float sum equals the cost
+  model's ``total_cycles`` (``interval_cycles`` for multi-stream)
+  BIT-exactly — for random geometries under every schedule x streams
+  {1,2} x batch {1,3} (hypothesis property), and at the paper's block-3
+  reference points;
+* **what-if exactness** — every ``WhatIf`` row carries its complete
+  perturbed config, and re-running the cost model fresh at exactly
+  those params reproduces ``new_cycles`` with ``==`` (no tolerance),
+  schedule swaps included;
+* **the winograd gate story** — at the depthwise-starved split (9,2,56)
+  block 3 under fused-rowtile is ``dw_mac``-bound and the top-ranked
+  what-if is the fused-winograd schedule swap, matching the PR 8 gate;
+* **explain_auto** — the surfaced table argmins to the auto pass's own
+  picks;
+* **roofline** — doctor points render through the shared
+  ``repro.roofline.points`` helper with sane ceilings;
+* **serving decomposition** — every completed request's latency splits
+  into ``LATENCY_COMPONENTS``, each >= 0, summing to the latency
+  bit-exactly, through full simulator runs with and without a core
+  dropout;
+* **dropout utilization** — un-crediting voided in-flight work and
+  retiring the dead core's physical slot match hand-computed values.
+"""
+
+import numpy as np
+import pytest
+
+from repro.cfu import doctor
+from repro.cfu.compiler import compile_block, compile_network
+from repro.cfu.ir import SCHEDULES
+from repro.cfu.report import PAPER_LAYERS
+from repro.cfu.serve.metrics import LATENCY_COMPONENTS, MetricsCollector
+from repro.cfu.serve.planner import build_vww_service, simulate
+from repro.cfu.timing import (BatchCostModel, MultiStreamCostModel,
+                              PEConfig)
+from repro.core.dsc import DSCBlockSpec
+from repro.roofline.points import points_json, points_table
+
+SCHEDULE_NAMES = sorted(SCHEDULES)
+SPEC3, HW3 = {n: (s, hw) for n, s, hw in PAPER_LAYERS}["3rd"]
+WG_PE = PEConfig(9, 2, 56)
+FREQ = 300e6
+
+
+def _chain(cin, t, cout, stride):
+    """Two-block chain so streams=2 always has something to partition."""
+    return [("b0", DSCBlockSpec(cin=cin, cmid=cin * t, cout=cout,
+                                stride=stride)),
+            ("b1", DSCBlockSpec(cin=cout, cmid=cout * t, cout=cout,
+                                stride=1))]
+
+
+def _lr_sum(values):
+    """Left-to-right float accumulation — the conservation contract."""
+    s = 0.0
+    for v in values:
+        s += v
+    return s
+
+
+def _check_attr(attr, total):
+    assert tuple(attr.categories) == doctor.CATEGORIES
+    assert all(v >= 0.0 for v in attr.categories.values())
+    assert _lr_sum(attr.categories.values()) == total
+    assert attr.top in doctor.CATEGORIES
+
+
+# ---------------------------------------------------------------------------
+# conservation at the reference points
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("schedule", SCHEDULE_NAMES)
+def test_conservation_block3(schedule):
+    prog = compile_block(SPEC3, HW3, HW3, schedule, name="3rd")
+    for batch in (1, 3):
+        attr = doctor.attribute(prog, "v3", batch=batch)
+        _check_attr(attr, BatchCostModel(prog, "v3")
+                    .report(batch).total_cycles)
+
+
+def test_conservation_multistream():
+    ms = compile_network(_chain(4, 4, 8, 2), 12, 12, "fused", streams=2)
+    for batch in (1, 3):
+        attr = doctor.attribute_multistream(ms, "v3", batch=batch)
+        _check_attr(attr, MultiStreamCostModel(ms, "v3")
+                    .report(batch).interval_cycles)
+        assert len(attr.per_core) == 2
+
+
+def test_winograd_gate_story():
+    """The acceptance criterion: at (9,2,56) block 3 under fused-rowtile
+    is depthwise-MAC-bound and the fused-winograd swap is the top-ranked
+    what-if — the doctor re-derives the PR 8 gate from the numbers."""
+    prog = compile_block(SPEC3, HW3, HW3, "fused-rowtile", name="3rd",
+                         pe=WG_PE)
+    attr = doctor.attribute(prog, "v3")
+    assert attr.top == "dw_mac"
+    rows = doctor.rank(
+        doctor.what_if(prog, "v3")
+        + doctor.what_if_schedules(SPEC3, HW3, HW3,
+                                   SCHEDULES["fused-rowtile"][0],
+                                   pipeline="v3", pe=WG_PE))
+    assert rows[0].name == "schedule=fused-winograd"
+    assert rows[0].cycles_saved > 0
+
+
+# ---------------------------------------------------------------------------
+# what-if exactness: params reproduce new_cycles with ==
+# ---------------------------------------------------------------------------
+
+
+def _replay_params(row):
+    p = dict(row.params)
+    return p.pop("pipeline"), p.pop("batch"), p
+
+
+def test_what_if_exact_single():
+    prog = compile_block(SPEC3, HW3, HW3, "fused-rowtile", name="3rd",
+                         pe=WG_PE)
+    rows = doctor.what_if(prog, "v3", batch=2)
+    assert rows   # the PE bumps + the three port/handoff knobs
+    for row in rows:
+        pl, b, p = _replay_params(row)
+        assert BatchCostModel(prog, pl, **p).report(b).total_cycles \
+            == row.new_cycles, row.name
+
+
+def test_what_if_exact_multistream():
+    ms = compile_network(_chain(4, 4, 8, 2), 12, 12, "fused", streams=2)
+    rows = doctor.what_if_multistream(ms, "v3", batch=3)
+    assert rows
+    for row in rows:
+        assert row.multistream
+        pl, b, p = _replay_params(row)
+        assert MultiStreamCostModel(ms, pl, **p).report(b).interval_cycles \
+            == row.new_cycles, row.name
+
+
+def test_what_if_exact_schedule_swaps():
+    rows = doctor.what_if_schedules(SPEC3, HW3, HW3, SCHEDULES["fused"][0],
+                                    pipeline="v3", pe=WG_PE, batch=2)
+    assert rows
+    for row in rows:
+        assert row.schedule is not None
+        pl, b, p = _replay_params(row)
+        tile_rows = p.pop("tile_rows")
+        prog = compile_block(SPEC3, HW3, HW3, row.schedule, pe=p["pe"],
+                             tile_rows=tile_rows)
+        assert BatchCostModel(prog, pl, **p).report(b).total_cycles \
+            == row.new_cycles, row.name
+
+
+def test_explain_auto_matches_auto_pass():
+    from repro.cfu.ir import build_chain_ir
+    specs = _chain(4, 4, 8, 2)
+    expl = doctor.explain_auto(build_chain_ir(specs, 12, 12))
+    prog = compile_network(specs, 12, 12, "auto")
+    assert expl.picks == prog.meta["block_schedules"]
+    for block, costs in expl.table.items():
+        assert expl.picks[block] == min(costs, key=costs.get)
+        assert expl.margin(block) >= 1.0
+    assert any("pick" in line for line in expl.lines())
+
+
+def test_roofline_point_shared_renderer():
+    prog = compile_block(SPEC3, HW3, HW3, "fused", name="3rd")
+    rep = BatchCostModel(prog, "v3").report(1)
+    pt = doctor.roofline_point(rep, "block3")
+    assert pt.ops == rep.macs and pt.cycles == rep.total_cycles
+    assert set(pt.ceilings) == {"engine", "dram_port", "sram_port"}
+    assert all(c > 0 for c in pt.ceilings.values())
+    lines = points_table([pt])
+    assert any(line.startswith("block3,") for line in lines)
+    (js,) = points_json([pt])
+    assert js["name"] == "block3" and js["bound"] in pt.ceilings
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property layer (optional dev dependency; CI installs it)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    _SLOW = settings(max_examples=12, deadline=None,
+                     suppress_health_check=[HealthCheck.too_slow,
+                                            HealthCheck.data_too_large])
+
+    @_SLOW
+    @given(cin=st.integers(1, 4), t=st.integers(1, 3),
+           cout=st.integers(1, 6), stride=st.sampled_from([1, 2]),
+           hw=st.integers(4, 8),
+           schedule=st.sampled_from(SCHEDULE_NAMES),
+           streams=st.sampled_from([1, 2]),
+           batch=st.sampled_from([1, 3]))
+    def test_property_conservation(cin, t, cout, stride, hw, schedule,
+                                   streams, batch):
+        """Exhaustive, non-overlapping, bit-exact: for ANY geometry under
+        any schedule, single- or multi-stream, the category sums equal
+        the cost model's total exactly."""
+        specs = _chain(cin, t, cout, stride)
+        if streams == 1:
+            prog = compile_network(specs, hw, hw, schedule)
+            attr = doctor.attribute(prog, "v3", batch=batch)
+            total = BatchCostModel(prog, "v3").report(batch).total_cycles
+        else:
+            ms = compile_network(specs, hw, hw, schedule, streams=2)
+            attr = doctor.attribute_multistream(ms, "v3", batch=batch)
+            total = MultiStreamCostModel(ms, "v3") \
+                .report(batch).interval_cycles
+        _check_attr(attr, total)
+
+    @_SLOW
+    @given(cin=st.integers(1, 4), t=st.integers(1, 3),
+           cout=st.integers(1, 6), stride=st.sampled_from([1, 2]),
+           hw=st.integers(4, 8),
+           schedule=st.sampled_from(SCHEDULE_NAMES),
+           batch=st.sampled_from([1, 3]))
+    def test_property_what_if_exact(cin, t, cout, stride, hw, schedule,
+                                    batch):
+        """Every what-if row's params reproduce its new_cycles with ==
+        when the model is re-run fresh — for any geometry/schedule."""
+        prog = compile_network(_chain(cin, t, cout, stride), hw, hw,
+                               schedule)
+        for row in doctor.what_if(prog, "v3", batch=batch):
+            pl, b, p = _replay_params(row)
+            assert BatchCostModel(prog, pl, **p).report(b).total_cycles \
+                == row.new_cycles, row.name
+
+
+# ---------------------------------------------------------------------------
+# serving: latency decomposition + SLO burn + dropout utilization
+# ---------------------------------------------------------------------------
+
+
+def _decompose_all(res):
+    mc = res.metrics
+    out = []
+    for r in mc.requests:
+        if r.t_complete is None:
+            continue
+        comp = mc.decompose(r.rid)
+        assert comp is not None
+        assert tuple(comp) == LATENCY_COMPONENTS
+        assert all(v >= 0.0 for v in comp.values())
+        assert _lr_sum(comp.values()) == r.latency
+        out.append(comp)
+    return out
+
+
+def test_serving_decomposition_conserves():
+    svc = build_vww_service(16, streams=2, pe=PEConfig(4, 4, 21),
+                            pe_per_core="auto-hetero", freq_hz=FREQ)
+    res = simulate(svc, "timeout", 120.0, n_requests=48, seed=0,
+                   slo_cycles=0.030 * FREQ)
+    comps = _decompose_all(res)
+    assert len(comps) == 48
+    s = res.summary
+    bd = s["latency_breakdown_cycles"]
+    assert tuple(bd) == LATENCY_COMPONENTS
+    for k in LATENCY_COMPONENTS:
+        assert bd[k] == pytest.approx(
+            float(np.mean([c[k] for c in comps])))
+    # a pipelined 2-core device always pays fill beyond one interval
+    assert bd["pipeline_fill"] > 0
+    burn = s["slo_burn"]
+    assert burn["slo_target"] == 0.99
+    assert burn["burn_rate"] == pytest.approx(
+        burn["violation_fraction"] / 0.01)
+    assert burn["burn_rate_max_windowed"] >= burn["burn_rate"]
+
+
+def test_serving_decomposition_conserves_after_dropout():
+    from repro.cfu.serve.dispatcher import DropoutEvent
+    svc = build_vww_service(16, streams=2, pe=PEConfig(4, 4, 21),
+                            pe_per_core="auto-hetero", freq_hz=FREQ)
+    degraded = build_vww_service(16, streams=1, pe=PEConfig(4, 4, 21),
+                                 freq_hz=FREQ)
+    # pick a drop instant strictly inside a mid-run batch's flight so the
+    # replay path provably runs (same trick as the faults suite)
+    r0 = simulate(svc, "timeout", 120.0, n_requests=48, seed=0)
+    disp = [e for e in r0.event_log if e[0] == "dispatch"]
+    comp_t = {e[2]: e[1] for e in r0.event_log if e[0] == "complete"}
+    d = disp[len(disp) // 2]
+    drop = DropoutEvent(at_cycles=(d[1] + comp_t[d[2]]) / 2.0,
+                        degraded=degraded, core=1,
+                        repartition_cycles=1e5)
+    res = simulate(svc, "timeout", 120.0, n_requests=48, seed=0,
+                   slo_cycles=0.030 * FREQ, dropout=drop)
+    comps = _decompose_all(res)
+    assert len(comps) == 48
+    # at least one replayed request pays a nonzero dropout_replay term
+    assert res.summary.get("n_replayed", 0) > 0
+    assert any(c["dropout_replay"] > 0 for c in comps)
+    # and utilization stays physical on every surviving core
+    assert all(0.0 <= u <= 1.0 for u in res.summary["utilization"])
+
+
+def test_dropout_utilization_hand_computed():
+    """The satellite regression: a voided in-flight group's un-executed
+    cycles must not count toward the surviving cores' busy time, and
+    post-dropout dispatches credit PHYSICAL surviving slots."""
+    mc = MetricsCollector(n_cores=2, freq_hz=FREQ)
+    mc.on_arrival(0, 0.0, 1)
+    # group enters at t=100, would exit at 300, busy [80, 60]
+    mc.on_dispatch(0, [0], 100.0, 300.0, 1e6, [80.0, 60.0], 0,
+                   free_t=0.0, entry_interval=200.0)
+    assert mc.core_busy == [80.0, 60.0]
+    # core 0 dies at t=200 — the group is half-flown: exactly half of
+    # each core's credited busy has actually executed
+    mc.on_dropout(200.0, 0, [0], [0], 1)
+    assert mc.core_busy == [40.0, 30.0]
+    assert mc._core_map == [1]
+    # degraded single-core device replays the request: ONE busy entry,
+    # landing on physical core 1 (not shifted down to slot 0)
+    mc.on_dispatch(1, [0], 250.0, 650.0, 1e6, [400.0], 0,
+                   free_t=250.0, entry_interval=400.0)
+    assert mc.core_busy == [40.0, 430.0]
+    mc.on_complete([0], 650.0)
+    s = mc.summary()
+    # horizon is the surviving batch's completion; voided one is ignored
+    assert s["horizon_cycles"] == 650.0
+    assert s["utilization"] == [40.0 / 650.0, 430.0 / 650.0]
+    comp = mc.decompose(0)
+    assert comp == {"queue_wait": 0.0, "batch_formation": 100.0,
+                    "dropout_replay": 150.0, "service_exec": 400.0,
+                    "pipeline_fill": 0.0}
+    assert _lr_sum(comp.values()) == 650.0
+
+
+def test_dispatch_rejects_stale_core_count():
+    mc = MetricsCollector(n_cores=2, freq_hz=FREQ)
+    mc.on_arrival(0, 0.0, 1)
+    mc.on_dispatch(0, [0], 0.0, 10.0, 0.0, [5.0, 5.0], 0)
+    mc.on_dropout(5.0, 0, [0], [0], 1)
+    with pytest.raises(ValueError, match="cores are live"):
+        mc.on_dispatch(1, [0], 6.0, 16.0, 0.0, [5.0, 5.0], 0)
+
+
+def test_burn_rates_hand_computed():
+    mc = MetricsCollector(n_cores=1, freq_hz=FREQ, slo_cycles=100.0,
+                          slo_target=0.9)
+    # 4 requests, latencies 50/50/50/200 -> one violation in the last
+    # completion window
+    for rid in range(4):
+        mc.on_arrival(rid, 0.0, 1)
+    for rid, lat in enumerate([50.0, 50.0, 50.0, 200.0]):
+        mc.on_dispatch(rid, [rid], 0.0, lat, 0.0, [lat], 0)
+        mc.on_complete([rid], lat)
+    burn = mc.burn_rates()
+    assert burn["violation_fraction"] == 0.25
+    assert burn["burn_rate"] == pytest.approx(0.25 / 0.1)
+    assert burn["n_windows"] == 4
+    # the violating request sits alone in its window -> worst = 1/budget
+    assert burn["burn_rate_max_windowed"] == pytest.approx(1.0 / 0.1)
+
+
+def test_slo_target_validated():
+    with pytest.raises(ValueError, match="slo_target"):
+        MetricsCollector(n_cores=1, freq_hz=FREQ, slo_target=1.0)
